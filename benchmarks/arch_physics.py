@@ -1,0 +1,108 @@
+"""Per-architecture provider physics (beyond-paper extension).
+
+Connects the two halves of the framework: the DRY-RUN decode roofline of
+each assigned architecture determines the mock provider's per-token cost
+(the dominant decode term / batch = seconds per generated token per
+request), and the paper's client-side stack is then evaluated against
+each architecture's provider.
+
+This answers a question the paper cannot ask with a single mock: does
+the three-layer decomposition's advantage survive across backends that
+differ by ~50x in per-token cost (mamba2-780m vs nemotron-4-340b)?
+
+Output: paper_results/tables/arch_physics_summary.csv
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core.policy import strategy
+from repro.sim import SimConfig, WorkloadConfig, run_cell, summarize
+from repro.sim.provider import physics_for_arch
+from repro.sim.workload import CONGESTION_MULT, _MEAN_TOKENS
+
+from benchmarks.common import SIM, row_from_summary, write_csv
+
+DRY_DIR = os.path.join(os.path.dirname(__file__), "..",
+                       "paper_results", "dryrun")
+
+HBM_BW = 819e9  # bytes/s per chip (v5e)
+
+
+def ms_per_token_from_dryrun(arch: str) -> float | None:
+    """Decode-step memory term / batch -> ms per generated token/request.
+
+    decode_32k runs global_batch=128, so one step produces 128 tokens;
+    the per-request serial cost is the full step time (all requests share
+    the step), which we charge per token: step_s = bytes/dev / HBM_BW.
+    """
+    fn = os.path.join(DRY_DIR, f"{arch}__decode_32k__pod.json")
+    if not os.path.exists(fn):
+        return None
+    rec = json.load(open(fn))
+    if not rec.get("ok"):
+        return None
+    step_s = rec["hlo_bytes"] / HBM_BW
+    return step_s * 1000.0
+
+
+ARCHS = ["mamba2-780m", "stablelm-1.6b", "phi3.5-moe-42b-a6.6b",
+         "qwen1.5-32b", "nemotron-4-340b"]
+
+
+def run(verbose: bool = True):
+    rows = []
+    for arch in ARCHS:
+        ms_tok = ms_per_token_from_dryrun(arch)
+        if ms_tok is None:
+            if verbose:
+                print(f"  [skip] {arch}: no decode dry-run artifact")
+            continue
+        # clamp into a regime the 350 s sim horizon can express
+        ms_tok_eff = min(max(ms_tok, 0.5), 40.0)
+        phys = physics_for_arch(ms_per_token=ms_tok_eff)
+        # offered load re-normalized to THIS provider's knee: the default
+        # arrival_rate assumes 6.5 ms/token, so scale by the service-time
+        # ratio (arrival_scale is a static WorkloadConfig field — each
+        # value is its own compile, no jit-cache poisoning)
+        default_service = 90.0 + 6.5 * _MEAN_TOKENS["balanced"]
+        arch_service = 90.0 + ms_tok_eff * _MEAN_TOKENS["balanced"]
+        scale = default_service / arch_service
+        rate = CONGESTION_MULT["high"] * 4.0 / (arch_service / 1e3)
+        n_req = max(48, min(200, int(rate * 80)))
+        wl = WorkloadConfig(n_requests=n_req, mix="balanced",
+                            congestion="high", information="coarse",
+                            arrival_scale=round(scale, 4))
+        for name in ("direct_naive", "final_adrr_olc"):
+            s = summarize(run_cell(strategy(name), wl, seeds=3,
+                                   phys=phys, sim_cfg=SIM))
+            rows.append(row_from_summary(
+                {"arch": arch, "ms_per_token": round(ms_tok_eff, 2),
+                 "n_req": n_req, "strategy": name}, s))
+            if verbose and name == "final_adrr_olc":
+                naive = rows[-2]
+                print(f"  {arch:22s} ms/tok={ms_tok_eff:5.1f} "
+                      f"final sP95={s['short_p95_ms'][0]:6.0f} "
+                      f"CR={s['completion_rate'][0]:.2f} "
+                      f"(naive sP95={naive['short_p95_ms_mean']:.0f} "
+                      f"CR={naive['completion_rate_mean']:.2f})")
+    path = write_csv("arch_physics_summary", rows)
+    # headline check: the structured stack protects short tails against
+    # EVERY backend, fast or slow
+    by_arch = {}
+    for r in rows:
+        by_arch.setdefault(r["arch"], {})[r["strategy"]] = r
+    ok = all(
+        v["final_adrr_olc"]["short_p95_ms_mean"]
+        <= v["direct_naive"]["short_p95_ms_mean"] * 1.05
+        and v["final_adrr_olc"]["completion_rate_mean"]
+        >= v["direct_naive"]["completion_rate_mean"] - 0.02
+        for v in by_arch.values() if len(v) == 2)
+    print(f"  [{'PASS' if ok else 'WARN'}] three-layer stack dominates "
+          f"naive on short-tail + completion for every backend arch")
+    return path
+
+
+if __name__ == "__main__":
+    run()

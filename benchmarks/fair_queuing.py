@@ -1,0 +1,70 @@
+"""Paper Table 4 (§4.6): Fair Queuing vs Short-Priority vs FIFO under a
+heavy-dominated (70% long/xlong) workload.
+
+All three variants share the same class caps and no overload control so
+ONLY the allocation layer differs (the paper's point: the allocation
+layer accommodates different fairness objectives without changing the
+rest of the stack).
+"""
+import jax.numpy as jnp
+
+from repro.core.policy import ALLOC_FQ, ALLOC_NAIVE, ALLOC_SP, base_policy
+
+from benchmarks.common import cell, row_from_summary, write_csv
+
+
+def _variant(mode):
+    # Allocation-ONLY contrast: per-class quotas and congestion adaptation
+    # are disabled so the three variants share one global concurrency
+    # bottleneck (max_inflight) and differ purely in which class gets the
+    # next send opportunity — the paper's §4.6 framing. Work is allowed to
+    # wait out the full horizon (large timeout) so long-request P90
+    # measures queueing delay rather than abandonment truncation.
+    return base_policy(
+        alloc_mode=jnp.asarray(mode, jnp.int32),
+        olc_enabled=jnp.float32(0.0),
+        cap_kappa=jnp.float32(0.0),
+        congestion_kappa=jnp.float32(0.0),
+        class_cap=jnp.asarray([1e9, 1e9], jnp.float32),
+        max_inflight=jnp.float32(4.0),
+        timeout_mult=jnp.full((4,), 10.0, jnp.float32),
+    )
+
+
+VARIANTS = [("direct_fifo", ALLOC_NAIVE), ("short_priority", ALLOC_SP),
+            ("fair_queuing", ALLOC_FQ)]
+
+
+def run(verbose=True):
+    rows = []
+    res = {}
+    for name, mode in VARIANTS:
+        s = cell(_variant(mode), "heavy70", "high")
+        res[name] = s
+        rows.append(row_from_summary({"policy": name}, s))
+        if verbose:
+            print(f"  {name:16s} shortP90={s['short_p90_ms'][0]:7.0f} "
+                  f"longP90={s['long_p90_ms'][0]:7.0f} "
+                  f"stdev={s['global_std_ms'][0]:7.0f} CR={s['completion_rate'][0]:.2f}")
+    path = write_csv("fair_queuing_summary", rows)
+
+    fifo, sp, fq = (res[n] for n, _ in VARIANTS)
+    sp_gain = 1 - sp["short_p90_ms"][0] / fifo["short_p90_ms"][0]
+    fq_gain = 1 - fq["short_p90_ms"][0] / fifo["short_p90_ms"][0]
+    sp_tax = sp["long_p90_ms"][0] / fifo["long_p90_ms"][0] - 1
+    fq_tax = fq["long_p90_ms"][0] / fifo["long_p90_ms"][0] - 1
+    print(f"  short P90 gain vs FIFO: SP {sp_gain:+.0%}, FQ {fq_gain:+.0%}")
+    print(f"  long P90 tax vs FIFO:   SP {sp_tax:+.0%}, FQ {fq_tax:+.0%}")
+    # Paper Table 4 ordinal claims that transfer to a work-conserving
+    # client (see EXPERIMENTS.md for the +116%-tax divergence note):
+    print(f"  [{'PASS' if fq_gain > 0 and sp_gain > 0 else 'WARN'}] both "
+          f"allocation policies improve short tails over FIFO")
+    print(f"  [{'PASS' if fq_tax <= sp_tax + 0.05 else 'WARN'}] FQ pays no "
+          f"more fairness tax than Short-Priority (±5%)")
+    print(f"  [{'PASS' if fq['global_std_ms'][0] <= sp['global_std_ms'][0] * 1.02 else 'WARN'}] "
+          f"FQ latency stdev <= Short-Priority (more uniform treatment)")
+    return path
+
+
+if __name__ == "__main__":
+    run()

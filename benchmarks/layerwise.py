@@ -1,0 +1,23 @@
+"""Paper Fig 7: layerwise progression naive -> quota -> adaptive DRR ->
+Final (OLC) on the two high-congestion regimes."""
+from repro.core.policy import strategy
+
+from benchmarks.common import cell, fmt, row_from_summary, write_csv
+
+ORDER = ["direct_naive", "quota_tiered", "adaptive_drr", "final_adrr_olc"]
+
+
+def run(verbose=True):
+    rows = []
+    for mix in ["balanced", "heavy"]:
+        for name in ORDER:
+            s = cell(strategy(name), mix, "high")
+            rows.append(row_from_summary(
+                {"regime": f"{mix}/high", "layer_stage": name}, s))
+            if verbose:
+                print(f"  {mix}/high {name:16s} {fmt(s)}")
+    return write_csv("layerwise_progression", rows)
+
+
+if __name__ == "__main__":
+    run()

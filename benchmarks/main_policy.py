@@ -1,0 +1,44 @@
+"""Paper Table 2 / Figs 3-4: main policy comparison across four regimes.
+
+Validates (qualitatively, constants are ours — DESIGN.md §3):
+  * quota-tiered: best short tails, withheld heavy work (CR < structured)
+  * adaptive DRR / Final (OLC): ~full completion, short P95 within tens
+    of ms of quota
+  * Final (OLC) vs plain aDRR: legible shedding improves global tails /
+    goodput under heavy stress.
+"""
+from repro.core.policy import strategy
+from repro.sim.workload import REGIMES
+
+from benchmarks.common import cell, fmt, row_from_summary, write_csv
+
+STRATS = ["direct_naive", "quota_tiered", "adaptive_drr", "final_adrr_olc"]
+
+
+def run(verbose=True):
+    rows = []
+    for mix, cong in REGIMES:
+        for name in STRATS:
+            s = cell(strategy(name), mix, cong)
+            rows.append(row_from_summary(
+                {"regime": f"{mix}/{cong}", "strategy": name}, s))
+            if verbose:
+                print(f"  {mix}/{cong:6s} {name:16s} {fmt(s)}")
+    path = write_csv("main_policy_summary", rows)
+    # paper-claim checks (soft, printed):
+    by = {(r["regime"], r["strategy"]): r for r in rows}
+    claims = []
+    for reg in ["heavy/medium", "heavy/high"]:
+        claims.append((f"{reg}: quota completes less than Final",
+                       by[(reg, "quota_tiered")]["completion_rate_mean"]
+                       < by[(reg, "final_adrr_olc")]["completion_rate_mean"]))
+    claims.append(("balanced/high: naive short P95 >> structured",
+                   by[("balanced/high", "direct_naive")]["short_p95_ms_mean"]
+                   > 3 * by[("balanced/high", "final_adrr_olc")]["short_p95_ms_mean"]))
+    for c, ok in claims:
+        print(f"  [{'PASS' if ok else 'WARN'}] {c}")
+    return path
+
+
+if __name__ == "__main__":
+    run()

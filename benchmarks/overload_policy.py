@@ -1,0 +1,69 @@
+"""Paper Table 5 / Figs 5-6 (§4.7): overload bucket_policy shapes with
+Final (OLC) otherwise fixed, under the two high-congestion regimes.
+
+Also emits the overload-action histogram by bucket (Fig 5): rejections
+must concentrate on xlong; shorts are never rejected.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import strategy, with_bucket_policy
+from repro.core.types import REJECTED, SHORT
+from repro.sim import SimConfig, default_physics, generate, run_sim
+from repro.sim.workload import WorkloadConfig
+
+from benchmarks.common import SIM, N_REQ, cell, fmt, row_from_summary, write_csv
+
+SHAPES = ["ladder", "uniform_mild", "uniform_harsh", "reverse"]
+
+
+def action_histogram(shape: str, mix: str, cong: str, seeds=5):
+    """Per-bucket reject/defer counts summed over seeds."""
+    pol = with_bucket_policy(strategy("final_adrr_olc"), shape)
+    rej = np.zeros(4)
+    defers = np.zeros(4)
+    for seed in range(seeds):
+        wl = WorkloadConfig(n_requests=N_REQ, mix=mix, congestion=cong)
+        batch, jit = generate(jax.random.PRNGKey(seed), wl)
+        final = run_sim(pol, batch, jit, default_physics(), SIM)
+        bkt = np.asarray(batch.bucket)
+        rej += np.bincount(bkt[np.asarray(final.req.status) == REJECTED],
+                           minlength=4)
+        defers += np.bincount(bkt, weights=np.asarray(final.req.n_defers),
+                              minlength=4)
+    return rej, defers
+
+
+def run(verbose=True):
+    rows = []
+    for mix, cong in [("balanced", "high"), ("heavy", "high")]:
+        for shape in SHAPES:
+            pol = with_bucket_policy(strategy("final_adrr_olc"), shape)
+            s = cell(pol, mix, cong)
+            rows.append(row_from_summary(
+                {"regime": f"{mix}/{cong}", "bucket_policy": shape}, s))
+            if verbose:
+                print(f"  {mix}/{cong} {shape:14s} {fmt(s)} "
+                      f"rej={s['n_rejects'][0]:.1f} def={s['n_defer_events'][0]:.1f}")
+    path = write_csv("overload_policy_comparison_summary", rows)
+
+    # Fig 5: action histogram for the default ladder over both regimes
+    hist_rows = []
+    for mix in ["balanced", "heavy"]:
+        rej, defers = action_histogram("ladder", mix, "high")
+        for b, name in enumerate(["short", "medium", "long", "xlong"]):
+            hist_rows.append({"regime": f"{mix}/high", "bucket": name,
+                              "rejects": int(rej[b]), "defers": int(defers[b])})
+        print(f"  {mix}/high ladder actions: rejects by bucket {rej.astype(int)}, "
+              f"defers {defers.astype(int)}")
+        ok_short = rej[0] == 0 and defers[0] == 0
+        ok_xlong = rej[3] >= rej[2]
+        print(f"  [{'PASS' if ok_short else 'FAIL'}] shorts never rejected/deferred")
+        print(f"  [{'PASS' if ok_xlong else 'WARN'}] rejections concentrate on xlong")
+    write_csv("overload_actions_by_bucket", hist_rows)
+    return path
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Benchmark suite entry point — one module per paper table/figure.
+
+Prints `name,seconds,artifact` CSV lines and writes every table to
+paper_results/tables/.  Roofline/dry-run artifacts are produced by
+`python -m repro.launch.dryrun --all` + `python benchmarks/roofline.py`
+(separate processes because they force 512 host devices).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+
+from benchmarks import (  # noqa: E402
+    arch_physics,
+    fair_queuing,
+    info_ladder,
+    latency_calibration,
+    layerwise,
+    main_policy,
+    overload_policy,
+    predictor_noise,
+    sharegpt_trace,
+    threshold_sensitivity,
+)
+
+SUITES = [
+    ("main_policy[T2]", main_policy.run),
+    ("info_ladder[T1]", info_ladder.run),
+    ("fair_queuing[T4]", fair_queuing.run),
+    ("overload_policy[T5]", overload_policy.run),
+    ("layerwise[F7]", layerwise.run),
+    ("predictor_noise[F8]", predictor_noise.run),
+    ("threshold_sensitivity[4.9]", threshold_sensitivity.run),
+    ("sharegpt_trace[T6]", sharegpt_trace.run),
+    ("latency_calibration[T3]", latency_calibration.run),
+    # beyond-paper: client stack vs per-architecture provider physics
+    ("arch_physics[ext]", arch_physics.run),
+]
+
+
+def main() -> None:
+    rows = []
+    for name, fn in SUITES:
+        print(f"=== {name}", flush=True)
+        t0 = time.time()
+        out = fn()
+        path = out[0] if isinstance(out, tuple) else out
+        rows.append((name, time.time() - t0, path))
+    print("\nname,seconds,artifact")
+    for name, secs, path in rows:
+        print(f"{name},{secs:.1f},{os.path.relpath(path)}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

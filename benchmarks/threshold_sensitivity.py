@@ -1,0 +1,47 @@
+"""Paper §4.9: overload-controller threshold sensitivity — defer/reject
+cutoffs and backoff perturbed +-20% from baseline, coarse priors fixed.
+
+Validates: local stability (no unstable collapse; modest metric drift).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import base_policy
+
+from benchmarks.common import cell, row_from_summary, write_csv
+
+
+def _perturbed(scale: float):
+    base = base_policy()
+    return base._replace(
+        defer_thr=base.defer_thr * scale,
+        reject_thr=base.reject_thr * scale,
+        defer_backoff_ms=base.defer_backoff_ms * scale,
+    )
+
+
+def run(verbose=True):
+    rows = []
+    results = {}
+    for scale in [0.8, 1.0, 1.2]:
+        for mix, cong in [("balanced", "high"), ("heavy", "high")]:
+            s = cell(_perturbed(scale), mix, cong)
+            results[(scale, mix)] = s
+            rows.append(row_from_summary(
+                {"regime": f"{mix}/{cong}", "threshold_scale": scale}, s))
+            if verbose:
+                print(f"  scale={scale:.1f} {mix}/high "
+                      f"sP95={s['short_p95_ms'][0]:5.0f} CR={s['completion_rate'][0]:.3f} "
+                      f"sat={s['satisfaction'][0]:.3f} gp={s['goodput_rps'][0]:.2f}")
+    path = write_csv("threshold_sensitivity", rows)
+    for mix in ["balanced", "heavy"]:
+        cr = [results[(sc, mix)]["completion_rate"][0] for sc in [0.8, 1.0, 1.2]]
+        p = [results[(sc, mix)]["short_p95_ms"][0] for sc in [0.8, 1.0, 1.2]]
+        stable = (max(cr) - min(cr) < 0.08) and (max(p) / min(p) < 1.35)
+        print(f"  [{'PASS' if stable else 'WARN'}] {mix}/high stable under ±20% "
+              f"(dCR={max(cr)-min(cr):.3f}, sP95 ratio={max(p)/min(p):.2f})")
+    return path
+
+
+if __name__ == "__main__":
+    run()

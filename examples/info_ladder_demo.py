@@ -1,0 +1,38 @@
+"""Information-ladder demo (paper §4.4): what does the client's knowledge
+buy, with the SAME Final (OLC) stack held fixed?
+
+Walks the four levels — no-information blind, class-only, coarse
+semi-clairvoyant, oracle — on the balanced / high regime and shows the
+short-tail inflation when magnitude priors are removed.
+
+Usage:  PYTHONPATH=src python examples/info_ladder_demo.py
+"""
+from repro.core.policy import strategy, with_information
+from repro.sim import SimConfig, WorkloadConfig, run_cell, summarize
+
+SIM = SimConfig(n_ticks=14000)
+LEVELS = ["no_info", "class_only", "coarse", "oracle"]
+
+
+def main():
+    base = strategy("final_adrr_olc")
+    rows = {}
+    for level in LEVELS:
+        wl = WorkloadConfig(n_requests=160, mix="balanced",
+                            congestion="high", information=level)
+        s = summarize(run_cell(with_information(base, level), wl,
+                               seeds=5, sim_cfg=SIM))
+        rows[level] = s
+        print(f"{level:12s} shortP95={s['short_p95_ms'][0]:7.0f}"
+              f"±{s['short_p95_ms'][1]:<6.0f} CR={s['completion_rate'][0]:.2f} "
+              f"sat={s['satisfaction'][0]:.2f} "
+              f"goodput={s['goodput_rps'][0]:.2f}/s")
+
+    infl = rows["no_info"]["short_p95_ms"][0] / rows["coarse"]["short_p95_ms"][0]
+    print(f"\nremoving magnitude priors inflates short P95 by {infl:.1f}x "
+          f"(paper: up to 5.8x); oracle ≈ coarse — the practical bar is "
+          f"coarse magnitude, not exact tokens.")
+
+
+if __name__ == "__main__":
+    main()

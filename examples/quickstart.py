@@ -1,0 +1,35 @@
+"""Quickstart: the paper's three-layer client scheduler in ~40 lines.
+
+Runs the congestion-aware mock provider under the balanced / high regime
+and compares uncontrolled naive dispatch against the full stack
+(adaptive DRR allocation + feasible-set ordering + cost-ladder overload
+control), printing the paper's joint metrics.
+
+Usage:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.policy import strategy
+from repro.sim import SimConfig, WorkloadConfig, run_cell, summarize
+
+REGIME = WorkloadConfig(n_requests=160, mix="balanced", congestion="high",
+                        information="coarse")
+SIM = SimConfig(n_ticks=14000)
+
+KEYS = ["short_p95_ms", "global_p95_ms", "completion_rate",
+        "satisfaction", "goodput_rps", "n_rejects", "n_defer_events"]
+
+
+def main():
+    print(f"regime: {REGIME.mix}/{REGIME.congestion}, "
+          f"{REGIME.n_requests} requests, 5 seeds\n")
+    print(f"{'policy':16s} " + " ".join(f"{k:>15s}" for k in KEYS))
+    for name in ["direct_naive", "quota_tiered", "adaptive_drr",
+                 "final_adrr_olc"]:
+        s = summarize(run_cell(strategy(name), REGIME, seeds=5, sim_cfg=SIM))
+        row = " ".join(f"{s[k][0]:>9.1f}±{s[k][1]:<5.1f}" for k in KEYS)
+        print(f"{name:16s} {row}")
+    print("\nRead jointly (paper §4.3): low tails with low completion = "
+          "withheld work, not a better system.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""End-to-end driver (the paper's deployment shape): a REAL JAX model
+served behind an opaque submit() API, with the three-layer client
+scheduler deciding order and admission.
+
+This is the same `schedule_slot` the simulator exercises, driven by wall
+clock — proving the policy stack is not simulator-bound. The model is a
+reduced same-family variant of an assigned architecture (CPU-friendly);
+on TPU hardware the provider would wrap the pjit-sharded engine from
+repro/launch/serve.py instead.
+
+Usage:  PYTHONPATH=src python examples/serve_blackbox.py \
+            [--arch stablelm-1.6b] [--requests 16] [--policy final_adrr_olc]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.config import ServeConfig
+from repro.configs import ARCHS, get_smoke
+from repro.core.policy import STRATEGIES, strategy
+from repro.launch.serve import make_requests
+from repro.models import init_model
+from repro.serving import BlackBoxProvider, ScheduledClient
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="stablelm-1.6b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--policy", choices=list(STRATEGIES),
+                    default="final_adrr_olc")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch)
+    print(f"init reduced {cfg.name} (d_model={cfg.d_model}, "
+          f"layers={cfg.n_layers}) ...")
+    model = init_model(jax.random.PRNGKey(0), cfg)
+    provider = BlackBoxProvider(model.params, cfg,
+                                ServeConfig(max_seq=128, temperature=0.0))
+    client = ScheduledClient(provider, strategy(args.policy))
+
+    reqs = make_requests(args.requests, seed=0)
+    t0 = time.time()
+    out = client.run(reqs, time_scale=50.0)
+    wall = time.time() - t0
+
+    done = [r for r in out if r.status == "completed"]
+    rej = [r for r in out if r.status == "rejected"]
+    lat = np.asarray([r.finish_s - r.arrival_s for r in done])
+    print(f"\n{len(done)}/{len(out)} completed, {len(rej)} rejected, "
+          f"{wall:.1f}s wall")
+    if len(lat):
+        print(f"latency mean {lat.mean():.2f}s  p95 "
+              f"{np.percentile(lat, 95):.2f}s")
+    for r in out[:8]:
+        otxt = "" if r.output is None else f" out[:6]={r.output[:6].tolist()}"
+        print(f"  req {r.rid}: bucket={r.bucket} tokens={r.max_new} "
+              f"status={r.status}{otxt}")
+
+
+if __name__ == "__main__":
+    main()

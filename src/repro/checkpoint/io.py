@@ -1,0 +1,75 @@
+"""npz-based pytree checkpointing with metadata + atomic rename.
+
+Flattening uses jax.tree_util key-paths, so any nested dict/NamedTuple
+state (params, AdamWState, caches) round-trips without a schema file.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+
+# dtypes np.load can round-trip natively; anything else (bfloat16, fp8 ...)
+# is stored viewed as a same-width unsigned int and viewed back on restore.
+_NATIVE_KINDS = frozenset("fiub")
+
+
+def _is_native(dtype: np.dtype) -> bool:
+    return dtype.kind in _NATIVE_KINDS and dtype.type is not np.void
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path)
+        arr = np.asarray(leaf)
+        if not _is_native(arr.dtype):
+            arr = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, meta: dict | None = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump({"step": step, "n_arrays": len(flat), **(meta or {})}, f)
+    return path
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(f[5:13]) for f in os.listdir(directory)
+             if f.startswith("ckpt_") and f.endswith(".npz")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, like: Any) -> Any:
+    """Restore into the structure (and dtypes) of `like`."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    flat = _flatten(like)
+    missing = set(flat) - set(data.files)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for path_k, leaf in leaves_with_path[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path_k)
+        arr = np.asarray(data[key])
+        target = np.dtype(leaf.dtype)
+        if not _is_native(target) and arr.dtype.itemsize == target.itemsize:
+            arr = arr.view(target)  # stored as raw uint bits (bf16 / fp8 ...)
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(leaves_with_path[1], new_leaves)

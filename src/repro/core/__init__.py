@@ -1,0 +1,11 @@
+"""Core client-side scheduling stack (the paper's contribution).
+
+Layers:
+  * repro.core.drr       — allocation (adaptive DRR + alternatives)
+  * repro.core.ordering  — intra-class feasible-set scoring
+  * repro.core.overload  — severity + cost-ladder admission
+  * repro.core.scheduler — fused per-slot decision
+  * repro.core.policy    — PolicyConfig + named paper strategies
+"""
+from repro.core.policy import PolicyConfig, strategy, STRATEGIES  # noqa: F401
+from repro.core.scheduler import SlotDecision, schedule_slot  # noqa: F401

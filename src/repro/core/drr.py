@@ -1,0 +1,164 @@
+"""Layer 1 — allocation (paper §3.1.1).
+
+Adaptive Deficit Round Robin over the two service classes plus the
+alternative allocation policies evaluated in the paper (§4.5/§4.6):
+naive FIFO, quota-tiered isolation, fair queuing, short-priority.
+
+Semantics implemented (one *dispatch slot* at a time):
+  * each backlogged class accrues `quantum * w_eff` deficit per slot;
+  * a class may send iff its deficit covers the estimated cost (p50
+    tokens) of the request its ordering layer would release;
+  * work-conserving borrowing: when exactly one class is backlogged it
+    additionally consumes the idle peer's quantum;
+  * congestion adaptation: the interactive weight scales by
+    (1 + kappa * severity) so protected share grows under stress.
+
+Returns a `ClassChoice` — which class (if any) may release one request
+this slot — plus updated deficits.  Branchless across allocation modes:
+`lax.switch` on `alloc_mode` with every branch computing from the same
+inputs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import (
+    ALLOC_ADRR,
+    ALLOC_FQ,
+    ALLOC_NAIVE,
+    ALLOC_QUOTA,
+    ALLOC_SP,
+    PolicyConfig,
+)
+from repro.core.types import N_CLASSES
+
+
+class ClassChoice(NamedTuple):
+    cls_id: jnp.ndarray        # () int32 selected class (valid iff send_ok)
+    send_ok: jnp.ndarray       # () bool a release is allowed this slot
+    ignore_class: jnp.ndarray  # () bool pick request globally (naive lane)
+    deficit: jnp.ndarray       # (2,) f32 updated deficit counters
+    rr_turn: jnp.ndarray       # () int32 updated round-robin pointer
+
+
+def effective_weights(cfg: PolicyConfig, severity) -> jnp.ndarray:
+    """Congestion-aware weights: interactive share grows with severity."""
+    w = cfg.drr_weights
+    scale = jnp.asarray([1.0 + cfg.congestion_kappa * severity, 1.0])
+    return w * scale
+
+
+def allocate(
+    cfg: PolicyConfig,
+    *,
+    backlog: jnp.ndarray,        # (2,) int32 eligible count per class
+    head_cost: jnp.ndarray,      # (2,) f32 p50 of each class's would-be pick
+    inflight_cls: jnp.ndarray,   # (2,) int32 in-flight count per class
+    inflight_total: jnp.ndarray, # () int32
+    severity: jnp.ndarray,       # () f32 overload severity in [0, ~1.5]
+    deficit: jnp.ndarray,        # (2,) f32
+    rr_turn: jnp.ndarray,        # () int32
+) -> ClassChoice:
+    under_cap = inflight_total < cfg.max_inflight
+    # per-class inflight caps; the heavy cap shrinks with severity so
+    # interactive traffic keeps protected share under stress without
+    # leaving capacity idle when the heavy class is empty.
+    cap_eff = cfg.class_cap * jnp.asarray(
+        [1.0, jnp.maximum(1.0 - cfg.cap_kappa * jnp.minimum(severity, 1.2), 0.3)]
+    )
+    cap_eff = jnp.maximum(cap_eff, 1.0)
+    open_cls = inflight_cls < cap_eff
+    has_work = (backlog > 0) & open_cls
+    any_work = has_work.any()
+    i32 = lambda x: jnp.asarray(x, jnp.int32)
+
+    def _naive(_):
+        # single lane, admit-all order-of-arrival; no deficit bookkeeping
+        return ClassChoice(
+            cls_id=i32(0),
+            send_ok=(backlog > 0).any() & under_cap,
+            ignore_class=jnp.asarray(True),
+            deficit=deficit,
+            rr_turn=rr_turn,
+        )
+
+    def _quota(_):
+        # tiered isolation: a class may send iff its own inflight < quota.
+        # No borrowing — strict silos (this is what strands heavy work).
+        can = has_work
+        # prefer interactive when both allowed (tiering)
+        cls_id = jnp.where(can[0], 0, 1)
+        return ClassChoice(
+            cls_id=i32(cls_id),
+            send_ok=can.any() & under_cap,
+            ignore_class=jnp.asarray(False),
+            deficit=deficit,
+            rr_turn=rr_turn,
+        )
+
+    def _adrr(_):
+        w_eff = effective_weights(cfg, severity)
+        # classic DRR: backlogged classes accrue quantum*w; borrowing gives
+        # an idle peer's quantum to the (single) backlogged class.
+        accrue = cfg.drr_quantum * w_eff * has_work
+        lone = has_work & (~has_work[::-1])          # backlogged while peer idle
+        borrow = cfg.drr_quantum * w_eff[::-1] * lone
+        d = jnp.minimum(deficit + accrue + borrow, cfg.deficit_cap)
+        # affordability is clamped by the cap so a single oversized request
+        # can never starve behind an unreachable deficit target
+        affordable = has_work & (d >= jnp.minimum(head_cost, cfg.deficit_cap))
+        # among affordable classes pick the largest normalized deficit
+        pref = jnp.where(affordable, d * cfg.drr_weights / cfg.drr_weights.sum(), -jnp.inf)
+        cls_id = jnp.argmax(pref)
+        ok = affordable.any() & under_cap
+        d = jnp.where(
+            ok,
+            d - jax.nn.one_hot(cls_id, N_CLASSES) * head_cost[cls_id],
+            d,
+        )
+        # deficits of idle classes reset (classic DRR drops state when empty)
+        d = jnp.where(has_work, d, 0.0)
+        return ClassChoice(
+            cls_id=i32(cls_id),
+            send_ok=ok,
+            ignore_class=jnp.asarray(False),
+            deficit=d,
+            rr_turn=rr_turn,
+        )
+
+    def _fq(_):
+        # strict round robin across classes; skip an empty class
+        first = rr_turn % N_CLASSES
+        second = (rr_turn + 1) % N_CLASSES
+        cls_id = jnp.where(has_work[first], first, second)
+        ok = any_work & under_cap
+        turn = jnp.where(ok, cls_id + 1, rr_turn)
+        return ClassChoice(
+            cls_id=i32(cls_id),
+            send_ok=ok,
+            ignore_class=jnp.asarray(False),
+            deficit=deficit,
+            rr_turn=i32(turn),
+        )
+
+    def _sp(_):
+        cls_id = jnp.where(has_work[0], 0, 1)
+        return ClassChoice(
+            cls_id=i32(cls_id),
+            send_ok=any_work & under_cap,
+            ignore_class=jnp.asarray(False),
+            deficit=deficit,
+            rr_turn=rr_turn,
+        )
+
+    return jax.lax.switch(
+        jnp.clip(cfg.alloc_mode, 0, 4),
+        [_naive, _quota, _adrr, _fq, _sp],
+        operand=None,
+    )
+
+
+_ = (ALLOC_NAIVE, ALLOC_QUOTA, ALLOC_ADRR, ALLOC_FQ, ALLOC_SP)  # branch order doc

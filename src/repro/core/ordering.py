@@ -1,0 +1,73 @@
+"""Layer 2 — intra-class ordering (paper §3.1.2).
+
+Among requests eligible under the fairness constraints, score each
+candidate with the paper's slowdown-aware feasible-set rule
+
+    score = w1 * (wait / cost) - w2 * (size / ref) + w3 * urgency
+
+and release the argmax.  The interactive class is FIFO (the paper applies
+the scoring rule to the heavy class; shorts have near-uniform cost).
+
+All functions are pure and operate on the full struct-of-arrays with a
+feasibility mask, so they jit/vmap cleanly and can be swapped for the
+Pallas `sched_score` kernel at large queue depths.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.policy import PolicyConfig
+from repro.core.types import RequestBatch
+
+_NEG = -1e30
+
+
+def eligibility(batch: RequestBatch, status, defer_until, now_ms):
+    """Feasible set: arrived, pending, not under defer backoff."""
+    return (
+        batch.valid
+        & (status == 0)
+        & (batch.arrival_ms <= now_ms)
+        & (defer_until <= now_ms)
+    )
+
+
+def order_scores(batch: RequestBatch, now_ms, cfg: PolicyConfig):
+    """Paper scoring rule over every request (mask applied by caller)."""
+    wait = jnp.maximum(now_ms - batch.arrival_ms, 0.0)
+    cost = jnp.maximum(batch.p50, 1.0)
+    deadline_abs = batch.arrival_ms + batch.deadline_budget_ms
+    time_left = deadline_abs - now_ms
+    urgency = jnp.clip(1.0 - time_left / jnp.maximum(batch.deadline_budget_ms, 1.0), 0.0, 2.0)
+    return (
+        cfg.ord_w_wait * (wait / cost)
+        - cfg.ord_w_size * (cost / cfg.ord_ref_tokens)
+        + cfg.ord_w_urg * urgency
+    )
+
+
+def select_fifo(batch: RequestBatch, mask):
+    """FIFO pick: earliest arrival among mask. Returns (idx, any)."""
+    key = jnp.where(mask, batch.arrival_ms, jnp.inf)
+    idx = jnp.argmin(key)
+    return idx, mask.any()
+
+
+def select_scored(batch: RequestBatch, mask, now_ms, cfg: PolicyConfig):
+    """Score-based pick among mask. Returns (idx, any)."""
+    scores = jnp.where(mask, order_scores(batch, now_ms, cfg), _NEG)
+    idx = jnp.argmax(scores)
+    return idx, mask.any()
+
+
+def select_for_class(batch: RequestBatch, mask, cls_id, now_ms, cfg: PolicyConfig):
+    """Class 0 (interactive) is FIFO; class 1 (heavy) uses the scored rule.
+
+    `cls_id` is a traced scalar, so blend the two selections branchlessly.
+    """
+    fifo_idx, fifo_any = select_fifo(batch, mask)
+    sc_idx, sc_any = select_scored(batch, mask, now_ms, cfg)
+    use_score = cls_id == 1
+    idx = jnp.where(use_score, sc_idx, fifo_idx)
+    ok = jnp.where(use_score, sc_any, fifo_any)
+    return idx, ok

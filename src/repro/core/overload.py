@@ -1,0 +1,71 @@
+"""Layer 3 — overload control (paper §3.1.3).
+
+Severity integrates only client-observable signals:
+
+    severity = w_load * provider_load + w_queue * queue_pressure
+             + w_tail * tail_latency_ratio
+
+and the admission decision for the candidate request maps severity
+through per-bucket threshold tables (the "cost ladder" and its §4.7
+alternatives are all expressible as defer_thr/reject_thr vectors; inf
+means never).  Short requests are never rejected under the ladder
+because reject_thr[SHORT] = inf.
+
+Actions:  0 = admit,  1 = defer,  2 = reject.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.policy import PolicyConfig
+
+ADMIT, DEFER, REJECT = 0, 1, 2
+
+
+def severity_score(
+    cfg: PolicyConfig,
+    *,
+    inflight_total,     # () int32/float
+    n_pending,          # () int32/float
+    ema_latency_ratio,  # () f32 observed/expected completion latency EMA
+) -> jnp.ndarray:
+    provider_load = jnp.asarray(inflight_total, jnp.float32) / jnp.maximum(cfg.load_ref, 1.0)
+    queue_pressure = jnp.asarray(n_pending, jnp.float32) / jnp.maximum(cfg.queue_ref, 1.0)
+    tail_ratio = (jnp.maximum(ema_latency_ratio, 1.0) - 1.0) / jnp.maximum(cfg.tail_ref - 1.0, 1e-3)
+    s = (
+        cfg.olc_w_load * jnp.minimum(provider_load, 2.0)
+        + cfg.olc_w_queue * jnp.minimum(queue_pressure, 2.0)
+        + cfg.olc_w_tail * jnp.minimum(tail_ratio, 2.0)
+    )
+    return jnp.maximum(s, 0.0)
+
+
+def admission_action(
+    cfg: PolicyConfig,
+    *,
+    severity,     # () f32
+    bucket,       # () int32 candidate request's bucket
+    n_defers,     # () int32 times this candidate was already deferred
+) -> jnp.ndarray:
+    """Cost-ladder decision for one candidate. Returns ADMIT/DEFER/REJECT.
+
+    Reject dominates defer when both thresholds are crossed (the ladder's
+    progressive tiers).  After `max_defers` deferrals a request is either
+    admitted (if only defer fires) — deferral cannot stall work forever —
+    matching the paper's "explicit, objective-aligned shedding" intent.
+    """
+    over_defer = severity > cfg.defer_thr[bucket]
+    over_reject = severity > cfg.reject_thr[bucket]
+    defer_exhausted = jnp.asarray(n_defers, jnp.float32) >= cfg.max_defers
+    action = jnp.where(
+        over_reject,
+        REJECT,
+        jnp.where(over_defer & ~defer_exhausted, DEFER, ADMIT),
+    )
+    return jnp.where(cfg.olc_enabled > 0, action, ADMIT).astype(jnp.int32)
+
+
+def defer_backoff(cfg: PolicyConfig, severity, n_defers) -> jnp.ndarray:
+    """Backoff grows with severity and with repeat deferrals (mild exp)."""
+    growth = 1.0 + 0.5 * jnp.asarray(n_defers, jnp.float32)
+    return cfg.defer_backoff_ms * (0.5 + severity) * growth

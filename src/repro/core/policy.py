@@ -1,0 +1,223 @@
+"""PolicyConfig: one scalar/array-valued struct that covers every named
+strategy in the paper branchlessly.
+
+The paper's named strategies map onto this struct as follows (see
+`strategy()` at the bottom):
+
+  direct_naive    alloc_mode=NAIVE, overload off, FIFO ordering
+  quota_tiered    alloc_mode=QUOTA, per-class inflight quotas, no borrowing
+  adaptive_drr    alloc_mode=ADRR, ordering on, overload off
+  final_adrr_olc  alloc_mode=ADRR, ordering on, overload cost ladder
+  fair_queuing    alloc_mode=FQ (strict round-robin between classes)
+  short_priority  alloc_mode=SP (interactive class strictly first)
+
+Overload `bucket_policy` shapes (paper §4.7) are expressed purely as the
+per-bucket threshold tables `defer_thr` / `reject_thr` (inf = never):
+
+  ladder         defer [-,-,.45,.45], reject [-,-,.80,.65]
+  uniform_mild   defer [-,.45,.45,.45], reject [-,-,-,-]
+  uniform_harsh  defer [-,.45,.45,.45], reject [-,.65,.65,.65]
+  reverse        defer [-,-,.45,.45], reject [-,-,.65,.80]
+
+Short requests are never rejected under every shape except the
+`no_information` ladder condition, where the client cannot distinguish
+buckets at all (paper §4.4 level 1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.types import NEVER
+
+# Allocation modes ----------------------------------------------------------
+ALLOC_NAIVE = 0     # single FIFO lane, admit-all
+ALLOC_QUOTA = 1     # tiered isolation: per-class inflight quotas, no borrow
+ALLOC_ADRR = 2      # adaptive deficit round robin (the paper's allocation)
+ALLOC_FQ = 3        # fair queuing: strict round-robin across classes
+ALLOC_SP = 4        # short-priority: interactive strictly first
+
+
+class PolicyConfig(NamedTuple):
+    """All fields are jnp scalars/arrays => one XLA program serves every
+    strategy; sweeps vmap over stacked PolicyConfigs."""
+
+    # --- allocation (layer 1) ---
+    alloc_mode: jnp.ndarray          # () int32, one of ALLOC_*
+    drr_quantum: jnp.ndarray         # () f32 tokens added per backlogged turn
+    drr_weights: jnp.ndarray         # (2,) f32 base class weights
+    congestion_kappa: jnp.ndarray    # () f32 short-weight scaling vs severity
+    deficit_cap: jnp.ndarray         # () f32 max deficit (anti-burst)
+    class_cap: jnp.ndarray           # (2,) f32 per-class inflight caps
+    cap_kappa: jnp.ndarray           # () f32 severity shrink of the heavy cap
+    max_inflight: jnp.ndarray        # () f32 client-wide concurrency cap
+    load_ref: jnp.ndarray            # () f32 severity normalizer for
+                                     #        provider load (decoupled from the
+                                     #        concurrency cap so the severity
+                                     #        signal saturates near the mock's
+                                     #        comfortable operating point)
+
+    # --- ordering (layer 2) ---
+    ord_w_wait: jnp.ndarray          # () f32 weight on wait/cost
+    ord_w_size: jnp.ndarray          # () f32 weight on size/ref (penalty)
+    ord_w_urg: jnp.ndarray           # () f32 weight on deadline urgency
+    ord_ref_tokens: jnp.ndarray      # () f32 size normalizer
+
+    # --- overload control (layer 3) ---
+    olc_enabled: jnp.ndarray         # () f32 0/1
+    olc_w_load: jnp.ndarray          # () f32
+    olc_w_queue: jnp.ndarray         # () f32
+    olc_w_tail: jnp.ndarray          # () f32
+    defer_thr: jnp.ndarray           # (4,) f32 per-bucket severity cutoffs
+    reject_thr: jnp.ndarray          # (4,) f32 per-bucket severity cutoffs
+    defer_backoff_ms: jnp.ndarray    # () f32 base re-eligibility delay
+    max_defers: jnp.ndarray          # () f32 defers before forced decision
+    queue_ref: jnp.ndarray           # () f32 queue-pressure normalizer
+    tail_ref: jnp.ndarray            # () f32 tail-ratio normalizer
+
+    # --- misc ---
+    route_by_class: jnp.ndarray      # () f32 0/1 — info-ladder class routing
+    timeout_mult: jnp.ndarray        # (4,) f32 per-bucket patience: abandon
+                                     #        after timeout_mult[bucket] *
+                                     #        deadline_budget (inf-like = wait)
+
+
+def _f(x) -> jnp.ndarray:
+    return jnp.asarray(x, jnp.float32)
+
+
+def base_policy(**overrides) -> PolicyConfig:
+    """The Final (OLC) configuration — paper defaults."""
+    cfg = dict(
+        alloc_mode=jnp.asarray(ALLOC_ADRR, jnp.int32),
+        drr_quantum=_f(220.0),
+        drr_weights=_f([2.0, 1.0]),
+        congestion_kappa=_f(1.5),
+        deficit_cap=_f(8000.0),
+        # shorts are cheap: effectively uncapped; heavy work holds at most 4
+        # provider slots, shrinking toward 2 as severity rises — this is how
+        # interactive traffic keeps protected share without idling capacity.
+        class_cap=_f([16.0, 4.0]),
+        cap_kappa=_f(0.5),
+        max_inflight=_f(20.0),
+        load_ref=_f(6.0),
+        ord_w_wait=_f(1.0),
+        ord_w_size=_f(0.6),
+        ord_w_urg=_f(0.8),
+        ord_ref_tokens=_f(512.0),
+        olc_enabled=_f(1.0),
+        olc_w_load=_f(0.40),
+        olc_w_queue=_f(0.30),
+        olc_w_tail=_f(0.30),
+        defer_thr=_f([NEVER, NEVER, 0.45, 0.45]),
+        reject_thr=_f([NEVER, NEVER, 0.80, 0.65]),
+        defer_backoff_ms=_f(1000.0),
+        max_defers=_f(2.0),
+        queue_ref=_f(40.0),
+        tail_ref=_f(4.0),
+        route_by_class=_f(1.0),
+        timeout_mult=_f([3.0, 3.0, 3.0, 3.0]),
+    )
+    cfg.update(overrides)
+    return PolicyConfig(**cfg)
+
+
+# ---------------------------------------------------------------------------
+# Named strategies (paper §4.5/§4.6)
+# ---------------------------------------------------------------------------
+
+def direct_naive() -> PolicyConfig:
+    return base_policy(
+        alloc_mode=jnp.asarray(ALLOC_NAIVE, jnp.int32),
+        olc_enabled=_f(0.0),
+        ord_w_size=_f(0.0),
+        ord_w_urg=_f(0.0),
+        route_by_class=_f(0.0),
+        class_cap=_f([1e9, 1e9]),
+        max_inflight=_f(1e9),  # admit-all: no client-side shaping at all
+    )
+
+
+def quota_tiered() -> PolicyConfig:
+    return base_policy(
+        alloc_mode=jnp.asarray(ALLOC_QUOTA, jnp.int32),
+        olc_enabled=_f(0.0),
+        # strict isolation: small heavy quota protects tails but strands work
+        class_cap=_f([8.0, 3.0]),
+        cap_kappa=_f(0.0),
+        # tiered SLAs: interactive/medium lanes wait; stranded longs are
+        # tolerated (they drag the completed tail), stranded xlongs expire
+        # fast (the quota's "withheld work" shows up in completion rate)
+        timeout_mult=_f([3.0, 3.0, 2.0, 0.45]),
+    )
+
+
+def adaptive_drr() -> PolicyConfig:
+    return base_policy(olc_enabled=_f(0.0))
+
+
+def final_adrr_olc() -> PolicyConfig:
+    return base_policy()
+
+
+def fair_queuing() -> PolicyConfig:
+    return base_policy(
+        alloc_mode=jnp.asarray(ALLOC_FQ, jnp.int32), olc_enabled=_f(0.0))
+
+
+def short_priority() -> PolicyConfig:
+    return base_policy(
+        alloc_mode=jnp.asarray(ALLOC_SP, jnp.int32), olc_enabled=_f(0.0))
+
+
+# ---------------------------------------------------------------------------
+# Overload bucket_policy shapes (paper §4.7) applied on top of Final (OLC)
+# ---------------------------------------------------------------------------
+
+def with_bucket_policy(cfg: PolicyConfig, shape: str) -> PolicyConfig:
+    tables = {
+        "ladder": ([NEVER, NEVER, 0.45, 0.45], [NEVER, NEVER, 0.80, 0.65]),
+        "uniform_mild": ([NEVER, 0.45, 0.45, 0.45], [NEVER] * 4),
+        "uniform_harsh": ([NEVER, 0.45, 0.45, 0.45], [NEVER, 0.65, 0.65, 0.65]),
+        "reverse": ([NEVER, NEVER, 0.45, 0.45], [NEVER, NEVER, 0.65, 0.80]),
+    }
+    d, r = tables[shape]
+    return cfg._replace(defer_thr=_f(d), reject_thr=_f(r))
+
+
+# ---------------------------------------------------------------------------
+# Information-ladder conditions (paper §4.4) — policy-side part.
+# (The workload generator owns the prior-side part: neutral vs coarse vs
+# oracle p50/p90.)
+# ---------------------------------------------------------------------------
+
+def with_information(cfg: PolicyConfig, level: str) -> PolicyConfig:
+    if level == "no_info":
+        # single neutral lane; uniform admission severity (client cannot
+        # infer cost from labels)
+        return cfg._replace(
+            route_by_class=_f(0.0),
+            defer_thr=_f([0.60] * 4),
+            reject_thr=_f([0.92] * 4),
+        )
+    if level == "class_only":
+        # labels drive routing + tiered overload; priors stay neutral
+        return cfg
+    if level in ("coarse", "oracle"):
+        return cfg
+    raise ValueError(f"unknown information level: {level}")
+
+
+STRATEGIES = {
+    "direct_naive": direct_naive,
+    "quota_tiered": quota_tiered,
+    "adaptive_drr": adaptive_drr,
+    "final_adrr_olc": final_adrr_olc,
+    "fair_queuing": fair_queuing,
+    "short_priority": short_priority,
+}
+
+
+def strategy(name: str) -> PolicyConfig:
+    return STRATEGIES[name]()

@@ -1,0 +1,129 @@
+"""The fused three-layer client scheduler (paper §3).
+
+`schedule_slot` composes the layers exactly as the paper describes:
+the allocation layer selects a class; the ordering layer names a concrete
+request in that class; the overload layer may block or delay that release.
+It is a pure function of (PolicyConfig, RequestBatch, SimState) and
+returns a `SlotDecision`; the simulation engine (repro.sim.engine) and
+the live serving adapter (repro.serving.blackbox) both consume it, so
+the policy logic is written once.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import drr, ordering, overload
+from repro.core.policy import PolicyConfig
+from repro.core.types import INFLIGHT, N_CLASSES, RequestBatch, SimState
+
+
+class SlotDecision(NamedTuple):
+    action: jnp.ndarray       # () int32: -1 idle, 0 admit, 1 defer, 2 reject
+    req_idx: jnp.ndarray      # () int32 target request (valid iff action>=0)
+    severity: jnp.ndarray     # () f32 overload severity used
+    deficit: jnp.ndarray      # (2,) f32 updated allocation deficits
+    rr_turn: jnp.ndarray      # () int32 updated FQ pointer
+
+
+IDLE = -1
+
+
+def effective_class(cfg: PolicyConfig, batch: RequestBatch) -> jnp.ndarray:
+    """Info-ladder: without class routing every request shares one lane."""
+    return jnp.where(cfg.route_by_class > 0, batch.cls, 0).astype(jnp.int32)
+
+
+def schedule_slot(
+    cfg: PolicyConfig, batch: RequestBatch, state: SimState
+) -> SlotDecision:
+    now = state.now_ms
+    elig = ordering.eligibility(
+        batch, state.req.status, state.req.defer_until, now
+    )
+    eff_cls = effective_class(cfg, batch)
+
+    # --- layer 2 first per class: the allocation layer needs each class's
+    # would-be head cost to test deficit affordability (classic DRR).
+    cand_idx = []
+    cand_ok = []
+    head_cost = []
+    for c in range(N_CLASSES):
+        mask = elig & (eff_cls == c)
+        idx, ok = ordering.select_for_class(
+            batch, mask, jnp.asarray(c, jnp.int32), now, cfg
+        )
+        cand_idx.append(idx)
+        cand_ok.append(ok)
+        head_cost.append(jnp.where(ok, batch.p50[idx], jnp.inf))
+    cand_idx = jnp.stack(cand_idx)
+    cand_ok = jnp.stack(cand_ok)
+    head_cost = jnp.stack(head_cost)
+
+    backlog = jnp.stack(
+        [(elig & (eff_cls == c)).sum() for c in range(N_CLASSES)]
+    ).astype(jnp.int32)
+
+    inflight_mask = state.req.status == INFLIGHT
+    inflight_cls = jnp.stack(
+        [(inflight_mask & (eff_cls == c)).sum() for c in range(N_CLASSES)]
+    ).astype(jnp.int32)
+    inflight_total = state.provider.inflight
+
+    # --- layer 3 signals (client-observable only)
+    sev = overload.severity_score(
+        cfg,
+        inflight_total=inflight_total,
+        n_pending=elig.sum(),
+        ema_latency_ratio=state.sched.ema_latency_ratio,
+    )
+
+    # --- layer 1: which class gets this send opportunity?
+    choice = drr.allocate(
+        cfg,
+        backlog=backlog,
+        head_cost=head_cost,
+        inflight_cls=inflight_cls,
+        inflight_total=inflight_total,
+        severity=sev,
+        deficit=state.sched.deficit,
+        rr_turn=state.sched.rr_turn,
+    )
+
+    # naive mode ignores lanes entirely: global FIFO
+    fifo_idx, fifo_ok = ordering.select_fifo(batch, elig)
+    idx = jnp.where(choice.ignore_class, fifo_idx, cand_idx[choice.cls_id])
+    ok = jnp.where(choice.ignore_class, fifo_ok, cand_ok[choice.cls_id])
+    ok = ok & choice.send_ok
+
+    # --- layer 3 decision on the concrete candidate
+    act = overload.admission_action(
+        cfg,
+        severity=sev,
+        bucket=batch.bucket[idx],
+        n_defers=state.req.n_defers[idx],
+    )
+    action = jnp.where(ok, act, IDLE).astype(jnp.int32)
+
+    # DRR charged the head cost assuming a release; refund it when the
+    # overload layer blocked the release (defer/reject consumed no share).
+    import jax
+
+    refund = (
+        jax.nn.one_hot(choice.cls_id, N_CLASSES)
+        * head_cost[choice.cls_id]
+        * ((action == overload.DEFER) | (action == overload.REJECT))
+        * (~choice.ignore_class)
+    )
+    deficit = jnp.where(
+        jnp.isfinite(choice.deficit + refund), choice.deficit + refund, choice.deficit
+    )
+
+    return SlotDecision(
+        action=action,
+        req_idx=idx.astype(jnp.int32),
+        severity=sev,
+        deficit=deficit,
+        rr_turn=choice.rr_turn,
+    )

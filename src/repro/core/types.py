@@ -1,0 +1,128 @@
+"""Shared struct-of-array types for the client-side scheduling stack.
+
+Everything here is a pytree of jnp arrays so the whole scheduler is
+jit/vmap-able.  Request state follows the paper's lifecycle:
+
+    PENDING --admit--> INFLIGHT --complete--> COMPLETED
+            --defer--> (PENDING with defer_until in the future)
+            --reject--> REJECTED
+            --timeout--> ABANDONED  (implicit failure the paper's overload
+                                     layer exists to replace)
+
+Buckets follow the paper's token classes (short / medium / long / xlong)
+and service classes are interactive (short) vs heavy (everything else).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Request status codes
+# ---------------------------------------------------------------------------
+PENDING = 0
+INFLIGHT = 1
+COMPLETED = 2
+REJECTED = 3
+ABANDONED = 4
+
+# Bucket ids (paper: short <=64, medium 65-256, long 257-1024, xlong >1024)
+SHORT, MEDIUM, LONG, XLONG = 0, 1, 2, 3
+N_BUCKETS = 4
+
+# Service classes (paper: interactive "short" lane vs "heavy" lane)
+CLS_INTERACTIVE = 0
+CLS_HEAVY = 1
+N_CLASSES = 2
+
+NEVER = jnp.inf  # threshold value meaning "this action never fires"
+
+
+class RequestBatch(NamedTuple):
+    """Struct-of-arrays for one workload instance (fixed capacity N).
+
+    Static per-request fields produced by the workload generator; the
+    simulator never mutates these.
+    """
+
+    arrival_ms: jnp.ndarray      # (N,) float32 absolute arrival time
+    bucket: jnp.ndarray          # (N,) int32 in [0, 4)
+    cls: jnp.ndarray             # (N,) int32 service class (0/1)
+    true_tokens: jnp.ndarray     # (N,) float32 realized output tokens
+    p50: jnp.ndarray             # (N,) float32 policy-facing coarse prior
+    p90: jnp.ndarray             # (N,) float32 policy-facing tail prior
+    deadline_budget_ms: jnp.ndarray  # (N,) float32 relative SLO budget
+    valid: jnp.ndarray           # (N,) bool — padding mask (N may exceed count)
+
+    @property
+    def n(self) -> int:
+        return self.arrival_ms.shape[0]
+
+
+class RequestState(NamedTuple):
+    """Mutable per-request lifecycle state (simulator-owned)."""
+
+    status: jnp.ndarray       # (N,) int32 status code
+    submit_ms: jnp.ndarray    # (N,) float32 time handed to the provider
+    finish_ms: jnp.ndarray    # (N,) float32 provider completion time
+    defer_until: jnp.ndarray  # (N,) float32 earliest re-eligibility
+    n_defers: jnp.ndarray     # (N,) int32 times this request was deferred
+
+
+class SchedState(NamedTuple):
+    """Scheduler-internal state (allocation layer + overload signals)."""
+
+    deficit: jnp.ndarray       # (N_CLASSES,) float32 DRR deficit counters
+    rr_turn: jnp.ndarray       # () int32 round-robin pointer (fair queuing)
+    ema_latency_ratio: jnp.ndarray  # () float32 observed/expected latency EMA
+    n_completed_obs: jnp.ndarray    # () int32 completions observed so far
+
+
+class ProviderState(NamedTuple):
+    """Client-visible view of the black box: only aggregate signals."""
+
+    inflight: jnp.ndarray       # () int32 outstanding requests
+    inflight_tokens: jnp.ndarray  # () float32 outstanding predicted work
+
+
+class SimState(NamedTuple):
+    now_ms: jnp.ndarray  # () float32
+    req: RequestState
+    sched: SchedState
+    provider: ProviderState
+
+
+def init_request_state(n: int) -> RequestState:
+    return RequestState(
+        status=jnp.zeros((n,), jnp.int32),
+        submit_ms=jnp.full((n,), jnp.inf, jnp.float32),
+        finish_ms=jnp.full((n,), jnp.inf, jnp.float32),
+        defer_until=jnp.zeros((n,), jnp.float32),
+        n_defers=jnp.zeros((n,), jnp.int32),
+    )
+
+
+def init_sched_state() -> SchedState:
+    return SchedState(
+        deficit=jnp.zeros((N_CLASSES,), jnp.float32),
+        rr_turn=jnp.zeros((), jnp.int32),
+        ema_latency_ratio=jnp.ones((), jnp.float32),
+        n_completed_obs=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_provider_state() -> ProviderState:
+    return ProviderState(
+        inflight=jnp.zeros((), jnp.int32),
+        inflight_tokens=jnp.zeros((), jnp.float32),
+    )
+
+
+def init_sim_state(n: int) -> SimState:
+    return SimState(
+        now_ms=jnp.zeros((), jnp.float32),
+        req=init_request_state(n),
+        sched=init_sched_state(),
+        provider=init_provider_state(),
+    )

@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, synthetic_stream, make_batches  # noqa: F401

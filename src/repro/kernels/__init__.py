@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the serving engine's compute hot-spots.
+
+Each kernel directory contains:
+  <name>.py  pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py     jit'd public wrapper (interpret=True on CPU for validation)
+  ref.py     pure-jnp oracle used by the allclose test sweeps
+
+TPU adaptation notes (DESIGN.md §3): block shapes are MXU-aligned
+(multiples of 128 on matmul dims where dtypes allow), online-softmax
+carries live in VMEM scratch across the sequential grid dimension, and
+GQA head-mapping happens in the index_map (no gather).
+"""
+import jax
+
+
+def interpret_mode() -> bool:
+    """Pallas interpret=True on CPU (this container); False on real TPU."""
+    return jax.default_backend() != "tpu"

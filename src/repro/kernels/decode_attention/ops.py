@@ -1,0 +1,12 @@
+"""Public jit'd wrapper: interpret=True on CPU, compiled on TPU."""
+import functools
+
+from repro.kernels import interpret_mode
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention as _kernel_call,
+)
+
+
+@functools.wraps(_kernel_call)
+def decode_attention(q, k, v, valid, *, bk: int = 1024):
+    return _kernel_call(q, k, v, valid, bk=bk, interpret=interpret_mode())

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the decode attention kernel."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, valid):
+    """q: (B,H,hd); k/v: (B,S,KV,hd); valid: (S,) -> (B,H,hd)."""
+    B, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,btkh->bkgt", qg, k).astype(jnp.float32)
+    s = s / jnp.sqrt(hd)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgt,btkh->bkgh", w, v)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,14 @@
+"""Public jit'd wrapper: interpret=True on CPU, compiled on TPU."""
+import functools
+
+from repro.kernels import interpret_mode
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention as _kernel_call,
+)
+
+
+@functools.wraps(_kernel_call)
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 512, bk: int = 512):
+    return _kernel_call(q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+                        interpret=interpret_mode())

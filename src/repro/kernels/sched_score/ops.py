@@ -1,0 +1,13 @@
+"""Public jit'd wrapper: interpret=True on CPU, compiled on TPU."""
+import functools
+
+from repro.kernels import interpret_mode
+from repro.kernels.sched_score.sched_score import (
+    sched_score_argmax as _kernel_call,
+)
+
+
+@functools.wraps(_kernel_call)
+def sched_score_argmax(wait, cost, urgency, mask, weights, *, blk: int = 2048):
+    return _kernel_call(wait, cost, urgency, mask, weights, blk=blk,
+                        interpret=interpret_mode())

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused scheduler scoring kernel."""
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def sched_score_argmax_ref(wait, cost, urgency, mask, weights):
+    w1, w2, w3, ref_tok = weights
+    c = jnp.maximum(cost, 1.0)
+    score = w1 * (wait / c) - w2 * (c / ref_tok) + w3 * urgency
+    score = jnp.where(mask, score, NEG)
+    i = jnp.argmax(score)
+    return i.astype(jnp.int32), score[i]

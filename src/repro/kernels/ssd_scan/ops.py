@@ -1,0 +1,10 @@
+"""Public jit'd wrapper: interpret=True on CPU, compiled on TPU."""
+import functools
+
+from repro.kernels import interpret_mode
+from repro.kernels.ssd_scan.ssd_scan import ssd_intra as _kernel_call
+
+
+@functools.wraps(_kernel_call)
+def ssd_intra(xc, Bc, Cc, dtc, cum):
+    return tuple(_kernel_call(xc, Bc, Cc, dtc, cum, interpret=interpret_mode()))

@@ -1,0 +1,3 @@
+"""Pure-jnp oracle: re-export of the model-layer reference implementation
+(the model's ssd_intra_ref IS the oracle; kernels must match it)."""
+from repro.models.ssm import ssd_intra_ref  # noqa: F401

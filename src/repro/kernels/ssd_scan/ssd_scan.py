@@ -1,0 +1,78 @@
+"""Mamba2 SSD intra-chunk Pallas TPU kernel.
+
+Computes, per (batch, chunk, head) grid cell with chunk length Q, head
+dim P, state dim N (all VMEM-resident; Q=128, P=64, N=128 => ~0.5 MB):
+
+  decay[t,s] = exp(cum[t] - cum[s]) masked to s <= t
+  W[t,s]     = (C_t . B_s) * decay[t,s] * dt[s]
+  y_intra    = W @ x                       (Q,Q)@(Q,P) MXU matmul
+  state      = (exp(cum[Q-1] - cum) * dt * x)^T @ B   (P,Q)@(Q,N)
+
+The inter-chunk recurrence stays a lax.scan in repro.models.ssm (it is
+O(nc) tiny matvecs — not kernel-worthy); this kernel replaces the
+quadratic intra-chunk part, which dominates SSD FLOPs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, b_ref, c_ref, dt_ref, cum_ref, y_ref, st_ref, *, Q: int):
+    x = x_ref[0, 0, :, 0, :]          # (Q, P) f32
+    Bm = b_ref[0, 0, :, :]            # (Q, N)
+    Cm = c_ref[0, 0, :, :]            # (Q, N)
+    dt = dt_ref[0, 0, :, 0]           # (Q,)
+    cum = cum_ref[0, 0, :, 0]         # (Q,)
+
+    seg = cum[:, None] - cum[None, :]                       # (Qt, Qs)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    # mask inside the exponent (avoids inf*0 in the backward pass)
+    decay = jnp.exp(jnp.where(si <= ti, seg, -1e9))
+
+    kernel = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (Qt, Qs)
+    W = kernel * decay * dt[None, :]
+    y_ref[0, 0, :, 0, :] = jax.lax.dot_general(
+        W, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    tail = jnp.exp(cum[-1] - cum) * dt                      # (Q,)
+    xw = x * tail[:, None]                                  # (Q, P)
+    st_ref[0, 0, 0, :, :] = jax.lax.dot_general(
+        xw, Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (P, N)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra(xc, Bc, Cc, dtc, cum, *, interpret: bool = False):
+    """xc: (B,nc,Q,H,P) f32; Bc/Cc: (B,nc,Q,N); dtc/cum: (B,nc,Q,H).
+    Returns (y_intra: (B,nc,Q,H,P), chunk_state: (B,nc,H,P,N)), both f32."""
+    B, nc, Q, H, P = xc.shape
+    N = Bc.shape[-1]
+    kernel = functools.partial(_kernel, Q=Q)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nc, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, c, h: (b, c, 0, h)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, P, N), lambda b, c, h: (b, c, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xc, Bc, Cc, dtc, cum)

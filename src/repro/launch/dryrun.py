@@ -1,0 +1,149 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every (architecture x input shape) and both production meshes
+(16x16 single pod, 2x16x16 multi-pod), lower + compile the appropriate
+step function with ShapeDtypeStruct inputs, record memory_analysis(),
+cost_analysis(), and collective bytes parsed from the HLO, and cache the
+artifact as JSON under paper_results/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch starcoder2-3b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh pod|multipod|both]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.config import SHAPES
+from repro.configs import ARCHS
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_spec
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "paper_results", "dryrun")
+
+# HLO collective ops and the per-device traffic multiplier we assign
+# (all-reduce is modeled ring-style as reduce-scatter + all-gather => 2x)
+COLLECTIVE_RE = re.compile(
+    r"^\s*(?:[%\w.\-]+)\s*=\s*(\((?:[^)]*)\)|\S+)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)",
+    re.M)
+SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|f64|s64)\[([\d,]*)\]")
+DTYPE_BYTES = {"f64": 8, "s64": 8, "f32": 4, "s32": 4, "u32": 4,
+               "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1}
+MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+        "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(shape_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    out = {k: 0.0 for k in MULT}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        out[op] += _shape_bytes(shape_str) * MULT[op]
+    out["total"] = sum(out.values())
+    return out
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str,
+            microbatches: int = 1, save: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    n_dev = mesh.devices.size
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "n_devices": int(n_dev), "microbatches": microbatches,
+           "ok": False}
+    try:
+        spec = build_spec(arch, shape_name, mesh, microbatches)
+        rec["variant"] = spec.note
+        with mesh:
+            t0 = time.time()
+            lowered = jax.jit(
+                spec.fn, in_shardings=spec.in_shardings,
+                donate_argnums=spec.donate).lower(*spec.args)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t0 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t0, 2)
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes"):
+                rec[k] = int(getattr(mem, k, 0) or 0)
+            rec["bytes_per_device"] = (
+                rec.get("argument_size_in_bytes", 0)
+                + rec.get("temp_size_in_bytes", 0))
+        cost = compiled.cost_analysis() or {}
+        rec["hlo_flops"] = float(cost.get("flops", 0.0))
+        rec["hlo_bytes"] = float(cost.get("bytes accessed", 0.0))
+        txt = compiled.as_text()
+        rec["collectives"] = collective_bytes(txt)
+        rec["n_hlo_lines"] = txt.count("\n")
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — a failed combo is a data point
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        fn = os.path.join(OUT_DIR, f"{arch}__{shape_name}__{mesh_kind}.json")
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    archs = ARCHS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+
+    for mk in meshes:
+        for a in archs:
+            for s in shapes:
+                fn = os.path.join(OUT_DIR, f"{a}__{s}__{mk}.json")
+                if args.skip_existing and os.path.exists(fn):
+                    with open(fn) as f:
+                        if json.load(f).get("ok"):
+                            print(f"[skip] {a} {s} {mk}")
+                            continue
+                t0 = time.time()
+                rec = run_one(a, s, mk, args.microbatches)
+                status = "OK " if rec["ok"] else "FAIL"
+                print(f"[{status}] {a:24s} {s:12s} {mk:8s} "
+                      f"{time.time()-t0:6.1f}s "
+                      f"flops={rec.get('hlo_flops', 0):.3g} "
+                      f"coll={rec.get('collectives', {}).get('total', 0):.3g} "
+                      f"{rec.get('error', '')}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

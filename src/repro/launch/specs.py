@@ -1,0 +1,188 @@
+"""Input specs + sharding construction for the multi-pod dry-run.
+
+For each (arch, shape) this builds:
+  * the step function to lower (train_step / prefill_step / serve_step),
+  * ShapeDtypeStruct stand-ins for every argument (weak-type-correct, no
+    device allocation),
+  * in_shardings derived from the logical-axis rules.
+
+long_500k policy (DESIGN.md §4): native for ssm/hybrid; every pure
+full-attention arch is lowered as its sliding-window(8192) VARIANT —
+recorded via cfg.variant_note.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig, SHAPES, TrainConfig
+from repro.configs import get
+from repro.models import cache_axes, init_caches, init_model
+from repro.models.common import dtype_of
+from repro.models.model import lm_loss
+from repro.sharding.rules import DEFAULT_ACT_RULES, logical_to_sharding
+from repro.training import adamw
+from repro.training.train_step import TrainState, train_step
+
+LONG_WINDOW = 8192
+
+
+class LoweringSpec(NamedTuple):
+    fn: Any               # function to jit
+    args: tuple           # ShapeDtypeStructs
+    in_shardings: tuple
+    cfg: ModelConfig
+    note: str
+    donate: tuple = ()    # argnums to donate. NOTE (§Perf/qwen-decode
+                          # iteration 4, refuted): donating decode caches is
+                          # what a real TPU serving engine does (in-place
+                          # aliased update), but the CPU stand-in backend
+                          # double-buffers donated while-carries instead —
+                          # bytes/dev grew 146->189 GB — so the dry-run
+                          # keeps donation OFF and we document the TPU-side
+                          # expectation instead.
+
+
+def config_for(arch: str, shape_name: str) -> ModelConfig:
+    cfg = get(arch)
+    if shape_name == "long_500k" and cfg.arch_type not in ("ssm", "hybrid"):
+        cfg = cfg.with_sliding_window(LONG_WINDOW)
+    return cfg
+
+
+def _abstract_model(cfg: ModelConfig):
+    """(params ShapeDtypeStruct tree, axes tree) without allocation."""
+    captured = {}
+
+    def f(key):
+        m = init_model(key, cfg)
+        captured["axes"] = m.axes
+        return m.params
+
+    sds = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return sds, captured["axes"]
+
+
+def _abstract_caches(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.eval_shape(
+        functools.partial(init_caches, cfg, batch, max_seq))
+
+
+def _params_shardings(axes, sds, mesh: Mesh):
+    return logical_to_sharding(axes, sds, mesh)
+
+
+def _act(mesh: Mesh, *logical):
+    from repro.sharding.rules import spec_for
+    # spec_for needs a shape; activations here only need axis mapping, so
+    # use a dummy shape consistent with divisibility by construction
+    spec = []
+    for name in logical:
+        rule = DEFAULT_ACT_RULES.get(name or "none")
+        if rule is None:
+            spec.append(None)
+            continue
+        if isinstance(rule, str):
+            spec.append(rule if rule in mesh.axis_names else None)
+        else:
+            present = tuple(a for a in rule if a in mesh.axis_names)
+            spec.append(present if present else None)
+    return NamedSharding(mesh, P(*spec))
+
+
+def _batch_sharding(mesh: Mesh, batch: int):
+    """Shard batch over (pod, data) when divisible, else replicate."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if batch % size != 0:
+        return NamedSharding(mesh, P(None))
+    return NamedSharding(mesh, P(axes))
+
+
+def _cache_shardings(cfg: ModelConfig, cache_sds, mesh: Mesh):
+    # ACT rules, not param rules: cache_batch/cache_seq only exist there.
+    # (Perf iteration 1, EXPERIMENTS.md §Perf/qwen-decode: with param rules
+    # the KV cache silently replicated — 5.5 TB/device for qwen1.5-32b.)
+    axes = cache_axes(cfg)
+    return logical_to_sharding(axes, cache_sds, mesh, DEFAULT_ACT_RULES)
+
+
+def build_spec(arch: str, shape_name: str, mesh: Mesh,
+               microbatches: int = 1,
+               cfg_override: ModelConfig | None = None) -> LoweringSpec:
+    shape = SHAPES[shape_name]
+    cfg = cfg_override if cfg_override is not None else config_for(arch, shape_name)
+    dtype = dtype_of(cfg.dtype)
+    params_sds, axes = _abstract_model(cfg)
+    params_sh = _params_shardings(axes, params_sds, mesh)
+    B, S = shape.global_batch, shape.seq_len
+    tok_sh = _batch_sharding(mesh, B)
+    repl = NamedSharding(mesh, P())
+
+    # VLM/audio: the assigned seq_len covers prefix embeddings + text, so
+    # the text stream is S - prefix_len tokens (total context = S exactly)
+    prefix_sds = None
+    S_txt = S
+    if cfg.prefix_len:
+        S_txt = S - cfg.prefix_len
+        prefix_sds = jax.ShapeDtypeStruct((B, cfg.prefix_len, cfg.d_model), dtype)
+
+    if shape.kind == "train":
+        tc = TrainConfig(microbatches=microbatches)
+        opt_sds = jax.eval_shape(adamw.init, params_sds)
+        opt_sh = adamw.AdamWState(
+            step=repl,
+            master=params_sh, m=params_sh, v=params_sh)
+        state_sds = TrainState(params=params_sds, opt=opt_sds)
+        state_sh = TrainState(params=params_sh, opt=opt_sh)
+        batch_sds = {
+            "tokens": jax.ShapeDtypeStruct((B, S_txt), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S_txt), jnp.int32),
+        }
+        batch_sh = {"tokens": tok_sh, "labels": tok_sh}
+        if prefix_sds is not None:
+            batch_sds["prefix_embeds"] = prefix_sds
+            batch_sh["prefix_embeds"] = tok_sh
+
+        def fn(state, batch):
+            return train_step(state, batch, cfg, tc)
+
+        return LoweringSpec(fn, (state_sds, batch_sds), (state_sh, batch_sh),
+                            cfg, cfg.variant_note)
+
+    if shape.kind == "prefill":
+        from repro.serving.engine import prefill_step
+
+        tok_sds = jax.ShapeDtypeStruct((B, S_txt), jnp.int32)
+
+        def fn(params, tokens, prefix_embeds=None):
+            return prefill_step(params, cfg, tokens, max_seq=S,
+                                prefix_embeds=prefix_embeds)
+
+        args = (params_sds, tok_sds) + ((prefix_sds,) if prefix_sds is not None else ())
+        shs = (params_sh, tok_sh) + ((tok_sh,) if prefix_sds is not None else ())
+        return LoweringSpec(fn, args, shs, cfg, cfg.variant_note)
+
+    # decode: ONE new token with a KV cache of seq_len
+    from repro.serving.engine import serve_step
+
+    cache_sds = _abstract_caches(cfg, B, S)
+    cache_sh = _cache_shardings(cfg, cache_sds, mesh)
+    tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(params, token, pos, caches):
+        return serve_step(params, cfg, token, pos, caches)
+
+    return LoweringSpec(
+        fn,
+        (params_sds, tok_sds, pos_sds, cache_sds),
+        (params_sh, tok_sh, repl, cache_sh),
+        cfg, cfg.variant_note)

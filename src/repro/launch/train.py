@@ -1,0 +1,77 @@
+"""Training launcher.
+
+Single-host real training (examples/train_100m.py drives this) and the
+mesh-distributed configuration used by the dry-run. On real hardware this
+would be invoked per host under the same mesh config.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+      --smoke --steps 50 --batch 8 --seq 256
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import TrainConfig
+from repro.configs import ARCHS, get, get_smoke
+from repro.data import DataConfig, make_batches
+from repro.models import init_model
+from repro.training.train_step import init_train_state, train_step
+from repro.checkpoint import save_checkpoint
+
+
+def run(arch: str, smoke: bool, steps: int, batch: int, seq: int,
+        lr: float, microbatches: int, ckpt_dir: str | None,
+        log_every: int = 10):
+    cfg = get_smoke(arch) if smoke else get(arch)
+    tc = TrainConfig(lr=lr, warmup_steps=max(steps // 10, 1),
+                     total_steps=steps, microbatches=microbatches)
+    model = init_model(jax.random.PRNGKey(tc.seed), cfg)
+    state = init_train_state(model, tc)
+    data = make_batches(DataConfig(vocab=cfg.vocab, seq_len=seq, batch=batch))
+
+    step_fn = jax.jit(lambda s, b: train_step(s, b, cfg, tc))
+    losses = []
+    t0 = time.time()
+    for i, batch_np in zip(range(steps), data):
+        b = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        if cfg.prefix_len:
+            b["prefix_embeds"] = jnp.zeros(
+                (batch, cfg.prefix_len, cfg.d_model), jnp.bfloat16)
+        state, metrics = step_fn(state, b)
+        losses.append(float(metrics["loss"]))
+        if i % log_every == 0 or i == steps - 1:
+            print(f"step {i:5d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, steps, state.params,
+                        {"arch": cfg.name, "loss": losses[-1]})
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family variant (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    losses = run(args.arch, args.smoke, args.steps, args.batch, args.seq,
+                 args.lr, args.microbatches, args.ckpt_dir)
+    print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

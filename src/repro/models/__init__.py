@@ -1,0 +1,11 @@
+"""Functional model zoo (dense / MoE / SSM / hybrid / VLM / audio)."""
+from repro.models.model import (  # noqa: F401
+    Model,
+    cache_axes,
+    decode_step,
+    forward_train,
+    init_caches,
+    init_model,
+    lm_loss,
+    prefill,
+)

@@ -1,0 +1,218 @@
+"""Grouped-query attention with RoPE, optional QKV bias, sliding windows,
+and a KV-cache decode path.
+
+The jnp implementation here is the XLA reference (and the oracle for the
+Pallas kernels in repro.kernels); `impl="pallas"` routes prefill through
+`kernels.flash_attention` and single-token decode through
+`kernels.decode_attention`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.common import dense_apply, dense_init
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray    # (B, S_cache, KV, hd)
+    v: jnp.ndarray    # (B, S_cache, KV, hd)
+    # ring buffer when window > 0 (S_cache == window), else linear buffer
+
+
+def attn_init(key, cfg: ModelConfig, dtype):
+    hd = cfg.head_dim
+    ks = jax.random.split(key, 4)
+    q, q_ax = dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, "embed", "heads",
+                         dtype, bias=cfg.qkv_bias)
+    k, k_ax = dense_init(ks[1], cfg.d_model, cfg.n_kv * hd, "embed", "kv_heads",
+                         dtype, bias=cfg.qkv_bias)
+    v, v_ax = dense_init(ks[2], cfg.d_model, cfg.n_kv * hd, "embed", "kv_heads",
+                         dtype, bias=cfg.qkv_bias)
+    o, o_ax = dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, "heads", "embed",
+                         dtype, bias=cfg.out_bias,
+                         scale=1.0 / jnp.sqrt(cfg.n_heads * hd) / jnp.sqrt(2 * cfg.n_layers))
+    return (
+        {"q": q, "k": k, "v": v, "o": o},
+        {"q": q_ax, "k": k_ax, "v": v_ax, "o": o_ax},
+    )
+
+
+def _qkv(p, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = dense_apply(p["q"], x).reshape(B, S, cfg.n_heads, hd)
+    k = dense_apply(p["k"], x).reshape(B, S, cfg.n_kv, hd)
+    v = dense_apply(p["v"], x).reshape(B, S, cfg.n_kv, hd)
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,Sq,H,hd) k/v: (B,Skv,KV,hd) mask: (B,1,1,Sq,Skv) or None.
+    GQA via grouped einsum; softmax in f32."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    # cast q down to the K/V dtype (converting the tiny q beats letting the
+    # einsum promote the HUGE cache to f32 — XLA would otherwise carry a
+    # second f32 copy of the whole cache; EXPERIMENTS.md §Perf/qwen-decode)
+    qg = q.reshape(B, Sq, KV, G, hd).astype(k.dtype)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(B, Sq, H * hd)
+
+
+def causal_mask(Sq: int, Skv: int, window=0, offset: int = 0):
+    """(Sq, Skv) boolean mask; `window` may be a traced scalar (0 = full).
+    offset = absolute position of query 0 minus position of key 0."""
+    qi = jnp.arange(Sq)[:, None] + offset
+    kj = jnp.arange(Skv)[None, :]
+    m = kj <= qi
+    w = jnp.asarray(window)
+    return m & ((w <= 0) | (kj > qi - w))
+
+
+# sequences longer than this use the blocked online-softmax path so the
+# (Sq, Skv) score tensor is never materialized (the XLA analogue of flash
+# attention; the Pallas kernel is the TPU-native version of the same tiling)
+_FLASH_THRESHOLD = 2048
+_QBLK = 1024
+_KBLK = 1024
+
+
+def flash_xla(q, k, v, window=0):
+    """Blocked causal attention with online softmax, nested lax.scan.
+
+    q: (B,Sq,H,hd) k/v: (B,Skv,KV,hd). Sq/Skv must be block-aligned
+    (callers pad).  Returns (B,Sq,H*hd)."""
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    nq, nk = Sq // _QBLK, Skv // _KBLK
+    scale = 1.0 / jnp.sqrt(hd)
+    qb = jnp.moveaxis(q.reshape(B, nq, _QBLK, KV, G, hd), 1, 0)
+
+    def q_step(_, qblk_i):
+        qblk, qi = qblk_i            # (B,QB,KV,G,hd), () block index
+        q_off = qi * _QBLK
+
+        def kv_step(carry, kj):
+            m_prev, l_prev, acc = carry
+            kblk = jax.lax.dynamic_slice_in_dim(k, kj * _KBLK, _KBLK, 1)
+            vblk = jax.lax.dynamic_slice_in_dim(v, kj * _KBLK, _KBLK, 1)
+            s = jnp.einsum("bqkgh,btkh->bkgqt", qblk.astype(kblk.dtype), kblk,
+                           preferred_element_type=jnp.float32)
+            s = s * scale
+            mask = causal_mask(_QBLK, _KBLK, window, q_off - kj * _KBLK)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_prev, s.max(-1))
+            p_ = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + p_.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkh->bkgqh", p_.astype(vblk.dtype), vblk).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KV, G, _QBLK), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, _QBLK), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, _QBLK, hd), jnp.float32)
+        # only blocks at or before the query block contribute under causality
+        n_used = nk  # static bound; masked blocks contribute zeros
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), jnp.arange(n_used))
+        out = acc / jnp.maximum(l_f[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qb, jnp.arange(nq)))
+    # outs: (nq, B, KV, G, QB, hd) -> (B, Sq, H*hd)
+    outs = jnp.moveaxis(outs, 0, 3)              # (B,KV,G,nq,QB,hd)
+    outs = outs.reshape(B, KV, G, Sq, hd)
+    outs = jnp.moveaxis(outs.reshape(B, H, Sq, hd), 1, 2)
+    return outs.reshape(B, Sq, H * hd)
+
+
+def attn_prefill(p, cfg: ModelConfig, x, positions, window: int,
+                 impl: str = "xla"):
+    """Full-sequence causal attention. Returns (out, (k, v)) so serving can
+    seed a cache."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    S = q.shape[1]
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, causal=True, window=window)
+        out = out.reshape(*out.shape[:2], -1)
+    elif S > _FLASH_THRESHOLD and S % _QBLK == 0:
+        out = flash_xla(q, k, v, window)
+    else:
+        m = causal_mask(q.shape[1], k.shape[1], window)[None, None, None]
+        out = _sdpa(q, k, v, m)
+    return dense_apply(p["o"], out), (k, v)
+
+
+def attn_decode(p, cfg: ModelConfig, x, pos, cache: KVCache, window: int,
+                impl: str = "xla"):
+    """Single-token decode against a cache.
+
+    x: (B, 1, D); pos: () int32 — current absolute position (0-based).
+    Linear cache when window == 0 (S_cache >= pos+1); ring buffer when
+    window > 0 (S_cache == window; slot = pos % window).
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(p, cfg, x, positions)
+
+    S_cache = cache.k.shape[1]
+    slot = pos % S_cache  # == pos for a linear cache (S_cache > pos)
+    # store in the cache dtype: updating with an f32 token would promote
+    # the ENTIRE cache to f32 round-trip in HLO (2x decode memory traffic —
+    # EXPERIMENTS.md §Perf/qwen-decode iteration 2)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+
+    # Unified ring/linear validity: slot s holds absolute position
+    # p(s) = pos - ((pos - s) mod S_cache)  (the latest p <= pos congruent
+    # to s).  Valid iff written (p >= 0) and within the window when one is
+    # set.  Works for ring (S_cache == window), linear (S_cache >= seq),
+    # and linear-buffer-with-window (hybrid layers sharing one buffer).
+    idx = jnp.arange(S_cache)
+    p_abs = pos - jnp.mod(pos - idx, S_cache)
+    w = jnp.asarray(window)
+    valid = (p_abs >= 0) & ((w <= 0) | (p_abs > pos - w))
+    if impl == "pallas":
+        from repro.kernels.decode_attention import ops as da_ops
+        out = da_ops.decode_attention(q[:, 0], k, v, valid)
+        out = out.reshape(B, 1, -1)
+    else:
+        mask = valid[None, None, None, None, :]
+        out = _sdpa(q, k, v, mask)
+    return dense_apply(p["o"], out), KVCache(k, v)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, window: int,
+               dtype) -> KVCache:
+    S = min(window, max_seq) if window > 0 else max_seq
+    shape = (batch, S, cfg.n_kv, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+# logical axes for a cache (consumed by the serving layer's shardings)
+CACHE_AXES = KVCache(
+    k=("cache_batch", "cache_seq", "kv_heads", None),
+    v=("cache_batch", "cache_seq", "kv_heads", None),
+)

@@ -1,0 +1,134 @@
+"""Per-architecture transformer blocks, written scan-over-layers style:
+`*_init` builds one layer's params; `stack_inits` in model.py vmaps them
+into stacked (L, ...) leaves; the `*_apply` functions take ONE layer's
+slice plus the running hidden state and optional per-layer cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (
+    KVCache,
+    attn_decode,
+    attn_init,
+    attn_prefill,
+)
+from repro.models.common import dense_apply, dense_init
+from repro.models.mlp import mlp_apply, mlp_init
+from repro.models.moe import moe_apply, moe_init
+from repro.models.norms import norm_apply, norm_init
+
+
+def block_init(key, cfg: ModelConfig, dtype):
+    """One layer. Returns (params, axes)."""
+    ks = jax.random.split(key, 8)
+    params, axes = {}, {}
+    params["norm1"], axes["norm1"] = norm_init(cfg.d_model, cfg.norm, dtype)
+
+    if cfg.arch_type == "ssm":
+        params["ssm"], axes["ssm"] = ssm_mod.ssm_init(ks[0], cfg, dtype)
+        return params, axes
+
+    if cfg.arch_type == "hybrid":
+        params["attn"], axes["attn"] = attn_init(ks[0], cfg, dtype)
+        params["ssm"], axes["ssm"] = ssm_mod.ssm_init(ks[1], cfg, dtype)
+        params["branch_norm_attn"], axes["branch_norm_attn"] = norm_init(
+            cfg.d_model, "rmsnorm", dtype)
+        params["branch_norm_ssm"], axes["branch_norm_ssm"] = norm_init(
+            cfg.d_model, "rmsnorm", dtype)
+    else:
+        params["attn"], axes["attn"] = attn_init(ks[0], cfg, dtype)
+
+    params["norm2"], axes["norm2"] = norm_init(cfg.d_model, cfg.norm, dtype)
+    if cfg.moe is not None:
+        params["moe"], axes["moe"] = moe_init(ks[2], cfg, dtype)
+    else:
+        params["mlp"], axes["mlp"] = mlp_init(
+            ks[2], cfg.d_model, cfg.d_ff, cfg.activation, dtype, cfg.mlp_bias)
+    return params, axes
+
+
+def _layer_window(cfg: ModelConfig, is_global):
+    """Per-layer effective window: hybrid global layers use full attention;
+    `is_global` is a traced 0/1 scalar from the scanned layer metadata."""
+    w = jnp.asarray(cfg.sliding_window, jnp.int32)
+    return jnp.where(is_global > 0, 0, w)
+
+
+def _mixer_prefill(p, cfg: ModelConfig, h, positions, is_global, cache, impl):
+    """Token mixer (attention / ssm / hybrid) over a full sequence.
+    cache: per-layer dict or None. Returns (out, new_cache)."""
+    new_cache = {}
+    if cfg.arch_type == "ssm":
+        out, st = ssm_mod.ssm_prefill(p["ssm"], cfg, h, cache and cache.get("ssm"), impl)
+        new_cache["ssm"] = st
+        return out, new_cache
+
+    window = _layer_window(cfg, is_global)
+    if cfg.arch_type == "hybrid":
+        a_out, kv = attn_prefill(p["attn"], cfg, h, positions, window, impl)
+        s_out, st = ssm_mod.ssm_prefill(p["ssm"], cfg, h, cache and cache.get("ssm"), impl)
+        out = 0.5 * (
+            norm_apply(p["branch_norm_attn"], a_out, "rmsnorm")
+            + norm_apply(p["branch_norm_ssm"], s_out, "rmsnorm"))
+        new_cache["ssm"] = st
+        new_cache["kv_raw"] = kv
+        return out, new_cache
+
+    out, kv = attn_prefill(p["attn"], cfg, h, positions, window, impl)
+    new_cache["kv_raw"] = kv
+    return out, new_cache
+
+
+def _mixer_decode(p, cfg: ModelConfig, h, pos, is_global, cache, impl):
+    new_cache = {}
+    if cfg.arch_type == "ssm":
+        out, st = ssm_mod.ssm_decode(p["ssm"], cfg, h, cache["ssm"], impl)
+        new_cache["ssm"] = st
+        return out, new_cache
+
+    window = _layer_window(cfg, is_global)
+    if cfg.arch_type == "hybrid":
+        a_out, kv = attn_decode(p["attn"], cfg, h, pos, cache["kv"], window, impl)
+        s_out, st = ssm_mod.ssm_decode(p["ssm"], cfg, h, cache["ssm"], impl)
+        out = 0.5 * (
+            norm_apply(p["branch_norm_attn"], a_out, "rmsnorm")
+            + norm_apply(p["branch_norm_ssm"], s_out, "rmsnorm"))
+        new_cache["ssm"] = st
+        new_cache["kv"] = kv
+        return out, new_cache
+
+    out, kv = attn_decode(p["attn"], cfg, h, pos, cache["kv"], window, impl)
+    new_cache["kv"] = kv
+    return out, new_cache
+
+
+def _channel_mix(p, cfg: ModelConfig, h):
+    """MLP / MoE half of the block. Returns (out, aux_loss)."""
+    if cfg.arch_type == "ssm":
+        return jnp.zeros_like(h), jnp.float32(0.0)
+    hn = norm_apply(p["norm2"], h, cfg.norm)
+    if cfg.moe is not None:
+        out, aux = moe_apply(p["moe"], cfg, hn)
+        return out, aux
+    return mlp_apply(p["mlp"], hn, cfg.activation), jnp.float32(0.0)
+
+
+def block_prefill(p, cfg: ModelConfig, x, positions, is_global, cache, impl):
+    """Full block over a sequence. Returns (x, new_cache, aux)."""
+    h = norm_apply(p["norm1"], x, cfg.norm)
+    mix, new_cache = _mixer_prefill(p, cfg, h, positions, is_global, cache, impl)
+    x = x + mix
+    ch, aux = _channel_mix(p, cfg, x)
+    return x + ch, new_cache, aux
+
+
+def block_decode(p, cfg: ModelConfig, x, pos, is_global, cache, impl):
+    h = norm_apply(p["norm1"], x, cfg.norm)
+    mix, new_cache = _mixer_decode(p, cfg, h, pos, is_global, cache, impl)
+    x = x + mix
+    ch, _ = _channel_mix(p, cfg, x)
+    return x + ch, new_cache

@@ -1,0 +1,62 @@
+"""Functional parameter utilities (flax-free).
+
+Every module exposes `init(key, cfg, ...) -> (params, axes)` where
+`params` is a nested dict of jnp arrays and `axes` is a structurally
+identical dict whose leaves are tuples of logical axis names consumed by
+repro.sharding.rules.  Layer stacks are built with `jax.vmap` over init
+keys, giving scan-compatible stacked leaves with a leading 'layers' axis.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def dense_init(key, in_dim: int, out_dim: int, in_ax: str, out_ax: str,
+               dtype, bias: bool = False, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(in_dim))
+    w = jax.random.normal(key, (in_dim, out_dim), dtype) * jnp.asarray(scale, dtype)
+    params = {"w": w}
+    axes = {"w": (in_ax, out_ax)}
+    if bias:
+        params["b"] = jnp.zeros((out_dim,), dtype)
+        axes["b"] = (out_ax,)
+    return params, axes
+
+
+def dense_apply(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def stack_inits(init_fn, key, n: int):
+    """vmap a per-layer init over n keys; prepend 'layers' to every axes
+    tuple. init_fn must be key -> (params, axes)."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, axes = init_fn(key)
+    axes = jax.tree.map(
+        lambda a: ("layers",) + a,
+        axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+    return params, axes
+
+
+def is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def count_params(params: Tree) -> int:
+    return sum(p.size for p in jax.tree.leaves(params))

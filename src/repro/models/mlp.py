@@ -1,0 +1,34 @@
+"""Feed-forward blocks: SiLU-gated (llama-style), squared-ReLU
+(Nemotron-4), and plain GELU (StarCoder2 / MusicGen)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_apply, dense_init
+
+
+def mlp_init(key, d_model: int, d_ff: int, activation: str, dtype,
+             bias: bool = False):
+    ks = jax.random.split(key, 3)
+    params, axes = {}, {}
+    if activation == "silu_gated":
+        params["wi"], axes["wi"] = dense_init(ks[0], d_model, d_ff, "embed", "mlp", dtype, bias)
+        params["wg"], axes["wg"] = dense_init(ks[1], d_model, d_ff, "embed", "mlp", dtype, bias)
+    else:
+        params["wi"], axes["wi"] = dense_init(ks[0], d_model, d_ff, "embed", "mlp", dtype, bias)
+    params["wo"], axes["wo"] = dense_init(ks[2], d_ff, d_model, "mlp", "embed", dtype, bias)
+    return params, axes
+
+
+def mlp_apply(p, x, activation: str):
+    h = dense_apply(p["wi"], x)
+    if activation == "silu_gated":
+        h = jax.nn.silu(h) * dense_apply(p["wg"], x)
+    elif activation == "sq_relu":
+        h = jnp.square(jax.nn.relu(h))
+    elif activation == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(activation)
+    return dense_apply(p["wo"], h)

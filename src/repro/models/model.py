@@ -1,0 +1,233 @@
+"""Full decoder LM: embeddings -> lax.scan over stacked blocks -> head.
+
+Three entry points (all pure functions of (params, cfg, inputs)):
+  * forward_train : logits + aux losses (no caches)
+  * prefill       : logits for the prompt + decode-ready caches
+  * decode_step   : one token against caches (the serve_step the
+                    assigned decode shapes lower)
+
+VLM/audio frontends are stubs per the assignment carve-out: callers pass
+`prefix_embeds` (B, prefix_len, d_model) — the patch/frame embeddings a
+real ViT/EnCodec encoder would produce — and the decoder consumes them as
+a prefix; the loss masks prefix positions.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.attention import CACHE_AXES, KVCache
+from repro.models.blocks import block_decode, block_init, block_prefill
+from repro.models.common import dtype_of, is_axes_leaf, stack_inits
+from repro.models.norms import norm_apply, norm_init
+from repro.sharding.rules import constrain
+from repro.models.rope import sinusoidal_embed
+
+
+class Model(NamedTuple):
+    params: Any
+    axes: Any
+    cfg: ModelConfig
+
+
+def layer_globals(cfg: ModelConfig) -> jnp.ndarray:
+    """(L,) 0/1: layers using full (global) attention in hybrid archs."""
+    g = jnp.zeros((cfg.n_layers,), jnp.int32)
+    for i in cfg.global_layers:
+        g = g.at[i].set(1)
+    return g
+
+
+def init_model(key, cfg: ModelConfig) -> Model:
+    dtype = dtype_of(cfg.dtype)
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    params: dict = {}
+    axes: dict = {}
+
+    scale = 1.0 / jnp.sqrt(cfg.d_model)
+    params["embed"] = (
+        jax.random.normal(k_emb, (cfg.padded_vocab, cfg.d_model), dtype) * scale)
+    axes["embed"] = ("vocab", "embed")
+
+    params["blocks"], axes["blocks"] = stack_inits(
+        lambda k: block_init(k, cfg, dtype), k_blocks, cfg.n_layers)
+
+    params["final_norm"], axes["final_norm"] = norm_init(
+        cfg.d_model, cfg.norm, dtype)
+    if not cfg.tie_embeddings:
+        params["head"] = (
+            jax.random.normal(k_head, (cfg.d_model, cfg.padded_vocab), dtype)
+            * scale)
+        axes["head"] = ("embed", "vocab")
+    return Model(params, axes, cfg)
+
+
+def _embed(params, cfg: ModelConfig, tokens, prefix_embeds, pos0: int = 0):
+    """tokens: (B, S_txt) int32; prefix_embeds: (B, P, D) or None."""
+    h = params["embed"][tokens]
+    h = constrain(h, "batch", None, None)  # re-pin batch after the gather
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    B, S, _ = h.shape
+    positions = pos0 + jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    if not cfg.rope:  # MusicGen-style absolute sinusoidal positions
+        h = h + sinusoidal_embed(positions, cfg.d_model, h.dtype)
+    return h, positions
+
+
+def _head(params, cfg: ModelConfig, h):
+    h = norm_apply(params["final_norm"], h, cfg.norm)
+    h = constrain(h, "batch", None, None)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (h @ w).astype(jnp.float32)
+    logits = constrain(logits, "batch", None, "vocab")
+    if cfg.padded_vocab != cfg.vocab:  # mask alignment-padding columns
+        valid = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(valid, logits, -jnp.inf)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Train / no-cache forward
+# ---------------------------------------------------------------------------
+
+def forward_train(params, cfg: ModelConfig, tokens, prefix_embeds=None,
+                  impl: str = "xla", remat: bool = True):
+    h, positions = _embed(params, cfg, tokens, prefix_embeds)
+    is_global = layer_globals(cfg)
+
+    def body(carry, xs):
+        layer_params, g = xs
+        x, aux = carry
+        x, _, a = block_prefill(layer_params, cfg, x, positions, g, None, impl)
+        return (x, aux + a), None
+
+    block_fn = jax.checkpoint(body) if remat else body
+    (h, aux), _ = jax.lax.scan(block_fn, (h, jnp.float32(0.0)),
+                               (params["blocks"], is_global),
+                               unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    return _head(params, cfg, h), aux
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, labels, prefix_embeds=None,
+            impl: str = "xla", remat: bool = True):
+    """Next-token cross entropy; prefix positions (VLM/audio stub) excluded
+    automatically because labels only cover text tokens."""
+    logits, aux = forward_train(params, cfg, tokens, prefix_embeds, impl, remat)
+    P = logits.shape[1] - labels.shape[1]
+    logits = logits[:, P:]  # drop prefix positions
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean() + aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _ring_from_linear(k, S: int, window: int):
+    """Convert the last `window` positions of a linear (B,S,KV,hd) K/V into
+    ring layout (slot = pos % window)."""
+    if S <= window:
+        pad = jnp.zeros((k.shape[0], window - S, *k.shape[2:]), k.dtype)
+        return jnp.concatenate([k, pad], axis=1)  # slots 0..S-1 valid
+    last = k[:, S - window:]
+    return jnp.roll(last, S % window, axis=1)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int):
+    """Decode caches for every layer (stacked on a leading L axis)."""
+    dtype = dtype_of(cfg.dtype)
+    L = cfg.n_layers
+    cache = {}
+    if cfg.arch_type != "ssm":
+        # Hybrid archs with global layers share one scan-stacked linear
+        # buffer sized max_seq (windowed layers mask down to their window
+        # via the unified validity rule in attn_decode); pure windowed
+        # archs get a compact ring of size `window`.
+        if cfg.arch_type == "hybrid" and cfg.global_layers:
+            S_buf = max_seq
+        elif cfg.sliding_window > 0:
+            S_buf = min(cfg.sliding_window, max_seq)
+        else:
+            S_buf = max_seq
+        kv_shape = (batch, S_buf, cfg.n_kv, cfg.head_dim)
+        cache["kv"] = KVCache(
+            jnp.zeros((L, *kv_shape), dtype), jnp.zeros((L, *kv_shape), dtype))
+    if cfg.arch_type in ("ssm", "hybrid"):
+        one = ssm_mod.init_ssm_state(cfg, batch, dtype)
+        cache["ssm"] = jax.tree.map(
+            lambda x: jnp.zeros((L, *x.shape), x.dtype), one)
+    return cache
+
+
+def cache_axes(cfg: ModelConfig):
+    axes = {}
+    if cfg.arch_type != "ssm":
+        axes["kv"] = KVCache(
+            ("layers",) + tuple(CACHE_AXES.k), ("layers",) + tuple(CACHE_AXES.v))
+    if cfg.arch_type in ("ssm", "hybrid"):
+        axes["ssm"] = jax.tree.map(
+            lambda a: ("layers",) + tuple(a), ssm_mod.SSM_STATE_AXES,
+            is_leaf=is_axes_leaf)
+    return axes
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_seq: int,
+            prefix_embeds=None, impl: str = "xla"):
+    """Run the prompt, returning (last-position logits, decode caches)."""
+    h, positions = _embed(params, cfg, tokens, prefix_embeds)
+    B, S, _ = h.shape
+    is_global = layer_globals(cfg)
+    dtype = dtype_of(cfg.dtype)
+
+    def body(x, xs):
+        layer_params, g = xs
+        x, new_cache, _ = block_prefill(layer_params, cfg, x, positions, g, None, impl)
+        ys = {}
+        if "kv_raw" in new_cache:
+            k, v = new_cache["kv_raw"]
+            # layout for decode: compact ring for pure windowed archs;
+            # linear buffer padded to max_seq otherwise (incl. hybrid)
+            if cfg.sliding_window > 0 and cfg.arch_type != "hybrid":
+                k_c = _ring_from_linear(k, S, min(cfg.sliding_window, max_seq))
+                v_c = _ring_from_linear(v, S, min(cfg.sliding_window, max_seq))
+            else:
+                pad = max_seq - S
+                k_c = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v_c = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            ys["kv"] = KVCache(k_c.astype(dtype), v_c.astype(dtype))
+        if "ssm" in new_cache:
+            ys["ssm"] = new_cache["ssm"]
+        return x, ys
+
+    h, caches = jax.lax.scan(body, h, (params["blocks"], is_global),
+                             unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    logits = _head(params, cfg, h[:, -1:])
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, caches,
+                impl: str = "xla"):
+    """One decode step. token: (B, 1) int32; pos: () int32 current absolute
+    position; caches: stacked per-layer caches. Returns (logits, caches)."""
+    h, _ = _embed(params, cfg, token, None, pos0=0)
+    if not cfg.rope:
+        # _embed added position-0 sinusoid; replace with the true position
+        h = params["embed"][token]
+        positions = jnp.full((token.shape[0], 1), pos, jnp.int32)
+        h = h + sinusoidal_embed(positions, cfg.d_model, h.dtype)
+    is_global = layer_globals(cfg)
+
+    def body(x, xs):
+        layer_params, g, cache = xs
+        x, new_cache = block_decode(layer_params, cfg, x, pos, g, cache, impl)
+        return x, new_cache
+
+    h, new_caches = jax.lax.scan(body, h, (params["blocks"], is_global, caches),
+                                 unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    return _head(params, cfg, h), new_caches

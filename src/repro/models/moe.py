@@ -1,0 +1,125 @@
+"""Mixture-of-experts layer (Arctic 128e/top-2 + dense residual,
+Phi-3.5-MoE 16e/top-2).
+
+Sort-based token permutation (MaxText-style "dropping" implementation):
+
+  1. router top-k per token,
+  2. flatten (token, k) slots, stable-sort by expert id,
+  3. rank-within-expert via cumulative offsets; slots whose rank exceeds
+     the expert capacity are dropped (contribute zero),
+  4. gather tokens into an (E, C, d) buffer, batched expert matmuls
+     ('ecd,edf->ecf' — experts shardable over the tensor axis; the
+     token->expert regroup is where GSPMD inserts the all-to-all),
+  5. scatter-combine weighted by router gates.
+
+Load-balance auxiliary loss follows Switch/Mixtral:
+  aux = E * sum_e(frac_tokens_e * mean_router_prob_e).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.common import dense_apply, dense_init
+from repro.models.mlp import mlp_apply
+
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 6)
+    gate_mult = cfg.activation == "silu_gated"
+    s_in = 1.0 / jnp.sqrt(d)
+    s_out = 1.0 / jnp.sqrt(ff)
+
+    def expert_w(k, shape, scale):
+        return jax.random.normal(k, shape, dtype) * jnp.asarray(scale, dtype)
+
+    params = {
+        "router": dense_init(ks[0], d, m.n_experts, "embed", "experts", dtype)[0],
+        "wi": expert_w(ks[1], (m.n_experts, d, ff), s_in),
+        "wo": expert_w(ks[3], (m.n_experts, ff, d), s_out),
+    }
+    axes = {
+        "router": {"w": ("embed", "experts")},
+        "wi": ("experts", "embed", "mlp"),
+        "wo": ("experts", "mlp", "embed"),
+    }
+    if gate_mult:
+        params["wg"] = expert_w(ks[2], (m.n_experts, d, ff), s_in)
+        axes["wg"] = ("experts", "embed", "mlp")
+    if m.dense_residual:
+        from repro.models.mlp import mlp_init
+        params["residual"], axes["residual"] = mlp_init(
+            ks[4], d, ff, cfg.activation, dtype, cfg.mlp_bias)
+    return params, axes
+
+
+def _expert_ffn(p, x, activation: str):
+    """x: (E, C, d) -> (E, C, d) with per-expert weights."""
+    h = jnp.einsum("ecd,edf->ecf", x, p["wi"])
+    if activation == "silu_gated":
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", x, p["wg"])
+    elif activation == "sq_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"])
+
+
+def moe_apply(p, cfg: ModelConfig, x):
+    """x: (B, S, d). Returns (y, aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    k = m.top_k
+    E = m.n_experts
+    xt = x.reshape(T, d)
+
+    logits = dense_apply(p["router"], xt).astype(jnp.float32)   # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)              # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                  # renormalize
+
+    # --- aux load-balance loss (Switch-style)
+    onehot = jax.nn.one_hot(expert_idx[:, 0], E)                 # top-1 usage
+    frac_tokens = onehot.mean(0)
+    frac_probs = probs.mean(0)
+    aux = E * jnp.sum(frac_tokens * frac_probs) * m.router_aux_weight
+
+    # --- capacity & permutation
+    # capacity_factor <= 0 or tiny token counts (decode steps) => dropless:
+    # serving must never silently drop routed tokens.
+    if m.capacity_factor <= 0 or T * k <= 4 * E:
+        cap = T * k
+    else:
+        cap = int(max(1, round(m.capacity_factor * T * k / E)))
+    flat_expert = expert_idx.reshape(-1)                         # (T*k,)
+    order = jnp.argsort(flat_expert, stable=True)                # slots by expert
+    sorted_expert = flat_expert[order]
+    # rank within expert for each sorted slot
+    counts = jnp.bincount(flat_expert, length=E)                 # (E,)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(T * k) - starts[sorted_expert]
+    keep = rank < cap
+
+    tok_of_slot = order // k                                     # source token
+    # dispatch: (E, C, d)
+    buf = jnp.zeros((E, cap, d), x.dtype)
+    buf = buf.at[sorted_expert, jnp.where(keep, rank, 0)].add(
+        jnp.where(keep[:, None], xt[tok_of_slot], 0.0).astype(x.dtype))
+
+    out_buf = _expert_ffn(p, buf, cfg.activation)                # (E, C, d)
+
+    # combine: gather each kept slot's output back to its token
+    slot_out = out_buf[sorted_expert, jnp.where(keep, rank, 0)]
+    slot_out = jnp.where(keep[:, None], slot_out, 0.0)
+    slot_gate = gate_vals.reshape(-1)[order]
+    y = jnp.zeros((T, d), x.dtype).at[tok_of_slot].add(
+        (slot_out * slot_gate[:, None]).astype(x.dtype))
+
+    if m.dense_residual:
+        y = y + mlp_apply(p["residual"], xt, cfg.activation)
+    return y.reshape(B, S, d), aux

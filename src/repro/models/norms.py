@@ -1,0 +1,30 @@
+"""RMSNorm / LayerNorm, computed in float32 regardless of param dtype."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def norm_init(d: int, kind: str, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}, {"scale": ("embed",)}
+    if kind == "layernorm":
+        return (
+            {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+            {"scale": ("embed",), "bias": ("embed",)},
+        )
+    raise ValueError(kind)
+
+
+def norm_apply(p, x, kind: str, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf / jnp.sqrt(ms + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) / jnp.sqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+        return y.astype(x.dtype)
+    raise ValueError(kind)

@@ -1,0 +1,37 @@
+"""Rotary position embeddings with partial-rotary support (StableLM uses
+rotary on 25% of head dim) and sinusoidal absolute embeddings (MusicGen)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, fraction: float, theta: float):
+    rot_dim = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return inv, rot_dim
+
+
+def apply_rope(x, positions, fraction: float = 1.0, theta: float = 10000.0):
+    """x: (..., S, H, hd); positions: (..., S) int32 absolute positions."""
+    hd = x.shape[-1]
+    inv, rot_dim = rope_freqs(hd, fraction, theta)
+    if rot_dim == 0:
+        return x
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]                      # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    xr = x[..., :rot_dim].astype(jnp.float32)
+    xp = x[..., rot_dim:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1)
+
+
+def sinusoidal_embed(positions, d_model: int, dtype=jnp.float32):
+    """Absolute sinusoidal position embeddings (MusicGen-style)."""
+    half = d_model // 2
+    inv = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)

@@ -1,0 +1,239 @@
+"""Mamba2 (state-space duality / SSD) mixer [arXiv:2405.21060].
+
+Chunked SSD computation (the quadratic-intra + linear-inter decomposition
+that the paper's Algorithm 1 establishes):
+
+  per head h (head_dim P, state N), with per-step log-decay
+  la_t = -exp(A_log_h) * dt_t and input scale dt_t:
+
+    state_t = exp(la_t) * state_{t-1} + dt_t * (x_t outer B_t)
+    y_t     = C_t . state_t + D_h * x_t
+
+  split the sequence into chunks of length Q:
+    * intra-chunk: masked (C_t.B_s) kernel weighted by the decay segment
+      exp(cum_t - cum_s) — a Q x Q matmul per (batch, chunk, head);
+    * inter-chunk: carry chunk-final states with a lax.scan (nc steps).
+
+The O(1)-state `ssd_step` is the decode path (this is what makes
+long_500k native for SSM archs).  `repro.kernels.ssd_scan` provides the
+Pallas TPU kernel for the intra-chunk part; `ssd_chunked` here is its
+pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.common import dense_apply, dense_init
+from repro.models.norms import norm_apply, norm_init
+
+
+def ssm_init(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    d, di, N = cfg.d_model, cfg.d_inner, s.d_state
+    H = cfg.n_ssm_heads
+    ks = jax.random.split(key, 3)
+    conv_ch = di + 2 * N
+    params = {
+        # fused input projection -> [z, x, B, C, dt]
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * N + H, "embed", "ssm_inner", dtype)[0],
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_ch), dtype)
+                   * jnp.asarray(1.0 / jnp.sqrt(s.conv_width), dtype)),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)).astype(dtype),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "norm": norm_init(di, "rmsnorm", dtype)[0],
+        "out_proj": dense_init(ks[2], di, d, "ssm_inner", "embed", dtype)[0],
+    }
+    axes = {
+        "in_proj": {"w": ("embed", "ssm_inner")},
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm": {"scale": ("ssm_inner",)},
+        "out_proj": {"w": ("ssm_inner", "embed")},
+    }
+    return params, axes
+
+
+def _split_proj(cfg: ModelConfig, h):
+    di, N = cfg.d_inner, cfg.ssm.d_state
+    z, x, B, C, dt = jnp.split(
+        h, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(w, b, u, state=None):
+    """Depthwise causal conv, width W.  u: (B, S, C).  state: (B, W-1, C)
+    carries the last W-1 inputs for streaming decode. Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([state, u], axis=1)                # (B, S+W-1, C)
+    y = sum(ext[:, i:i + u.shape[1]] * w[i] for i in range(W)) + b
+    new_state = ext[:, -(W - 1):]
+    return jax.nn.silu(y), new_state
+
+
+def ssd_chunked(x, Bm, Cm, dt, A, chunk: int, state0=None, impl: str = "xla"):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P); Bm/Cm: (B,S,N); dt: (B,S,H) (softplus'd, f32);
+    A: (H,) positive decay rates (la = -A*dt); state0: (B,H,P,N) or None.
+    Returns (y: (B,S,H,P) in x.dtype, final_state: (B,H,P,N) f32).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    S_pad = -S % Q
+    if S_pad:
+        # zero-pad to a chunk boundary: dt = 0 means decay exp(0) = 1 and
+        # zero input contribution, so padded steps are exact no-ops for the
+        # state; padded y rows are sliced off below.
+        pad = lambda a: jnp.pad(a, ((0, 0), (0, S_pad)) + ((0, 0),) * (a.ndim - 2))
+        x, Bm, Cm, dt = pad(x), pad(Bm), pad(Cm), pad(dt)
+    S_full = S + S_pad
+    nc = S_full // Q
+
+    xc = x.reshape(Bsz, nc, Q, H, P).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+
+    la = -A[None, None, None, :] * dtc                       # (B,nc,Q,H) log-decay
+    cum = jnp.cumsum(la, axis=2)                             # inclusive cumsum
+
+    if impl == "pallas":
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y_intra, chunk_state = ssd_ops.ssd_intra(xc, Bc, Cc, dtc, cum)
+    else:
+        y_intra, chunk_state = ssd_intra_ref(xc, Bc, Cc, dtc, cum)
+
+    # ---- inter-chunk recurrence over chunk-final states
+    total = cum[:, :, -1]                                    # (B,nc,H)
+    if state0 is None:
+        state0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def step(carry, inp):
+        st_in, tot, = inp
+        out_prev = carry                                     # state before chunk
+        new = st_in + jnp.exp(tot)[:, :, None, None] * out_prev
+        return new, out_prev
+
+    # scan over chunks: carry (B,H,P,N)
+    final_state, prev_states = jax.lax.scan(
+        step,
+        state0,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # (B,nc,H,P,N)
+
+    # inter-chunk contribution: y_t += C_t . (exp(cum_t) * prev_state)
+    y_inter = jnp.einsum(
+        "bcqn,bcqh,bchpn->bcqhp", Cc, jnp.exp(cum), prev_states)
+    y = (y_intra + y_inter).reshape(Bsz, S_full, H, P)[:, :S].astype(x.dtype)
+    return y, final_state
+
+
+def ssd_intra_ref(xc, Bc, Cc, dtc, cum):
+    """Pure-jnp oracle for the intra-chunk SSD kernel.
+
+    xc: (B,nc,Q,H,P) f32; Bc/Cc: (B,nc,Q,N); dtc/cum: (B,nc,Q,H).
+    Returns (y_intra: (B,nc,Q,H,P), chunk_state: (B,nc,H,P,N))."""
+    Q = xc.shape[2]
+    # decay segment exp(cum_t - cum_s) masked to s <= t  -> (B,nc,H,Q,Q)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,nc,Qt,Qs,H)
+    seg = jnp.moveaxis(seg, -1, 2)                           # (B,nc,H,Qt,Qs)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask INSIDE the exponent: exp(seg) for s > t can overflow to inf in
+    # the forward pass, and the cotangent of where() would then be inf*0=NaN
+    decay = jnp.exp(jnp.where(mask, seg, -1e9))
+    kernel = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)           # (B,nc,Qt,Qs)
+    W = kernel[:, :, None] * decay                           # (B,nc,H,Qt,Qs)
+    W = W * jnp.moveaxis(dtc, -1, 2)[:, :, :, None, :]       # weight by dt_s
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", W, xc)
+    # chunk-final state: sum_s exp(cum_Q - cum_s) dt_s (x_s outer B_s)
+    tail = jnp.exp(cum[:, :, -1:, :] - cum) * dtc            # (B,nc,Q,H)
+    chunk_state = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", tail, xc, Bc)
+    return y_intra, chunk_state
+
+
+def ssd_step(x, Bm, Cm, dt, A, D, state):
+    """O(1) decode step.
+
+    x: (B,H,P); Bm/Cm: (B,N); dt: (B,H); state: (B,H,P,N) f32.
+    Returns (y: (B,H,P), new_state)."""
+    xf = x.astype(jnp.float32)
+    a = jnp.exp(-A[None, :] * dt)                            # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xf, Bm.astype(jnp.float32))
+    new_state = a[:, :, None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(jnp.float32))
+    y = y + D[None, :, None] * xf
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full mixer (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+def ssm_prefill(p, cfg: ModelConfig, x, state=None, impl: str = "xla"):
+    """x: (B,S,d_model). Returns (out, cache={'ssd','conv'})."""
+    s = cfg.ssm
+    H, P, N, di = cfg.n_ssm_heads, s.head_dim, s.d_state, cfg.d_inner
+    h = dense_apply(p["in_proj"], x)
+    z, u, Bm, Cm, dt = _split_proj(cfg, h)
+    conv_in = jnp.concatenate([u, Bm, Cm], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        p["conv_w"], p["conv_b"], conv_in,
+        state["conv"] if state else None)
+    u, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = jnp.exp(p["A_log"].astype(jnp.float32))
+    y, ssd_state = ssd_chunked(
+        u.reshape(*u.shape[:2], H, P), Bm, Cm, dt, A, s.chunk,
+        state0=state["ssd"] if state else None, impl=impl)
+    y = y + p["D"].astype(x.dtype)[None, None, :, None] * u.reshape(*u.shape[:2], H, P)
+    y = y.reshape(*x.shape[:2], di)
+    y = norm_apply(p["norm"], y * jax.nn.silu(z), "rmsnorm")
+    out = dense_apply(p["out_proj"], y)
+    return out, {"ssd": ssd_state, "conv": conv_state}
+
+
+def ssm_decode(p, cfg: ModelConfig, x, state, impl: str = "xla"):
+    """x: (B,1,d_model); state from prefill/init. O(1) per token."""
+    s = cfg.ssm
+    H, P, N, di = cfg.n_ssm_heads, s.head_dim, s.d_state, cfg.d_inner
+    h = dense_apply(p["in_proj"], x)
+    z, u, Bm, Cm, dt = _split_proj(cfg, h)
+    conv_in = jnp.concatenate([u, Bm, Cm], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        p["conv_w"], p["conv_b"], conv_in, state["conv"])
+    u, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = jnp.exp(p["A_log"].astype(jnp.float32))
+    y, ssd_state = ssd_step(
+        u[:, 0].reshape(-1, H, P), Bm[:, 0], Cm[:, 0], dt[:, 0], A,
+        p["D"].astype(jnp.float32), state["ssd"])
+    y = y.reshape(x.shape[0], 1, di)
+    y = norm_apply(p["norm"], y * jax.nn.silu(z), "rmsnorm")
+    out = dense_apply(p["out_proj"], y)
+    return out, {"ssd": ssd_state, "conv": conv_state}
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    return {
+        "ssd": jnp.zeros((batch, cfg.n_ssm_heads, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros(
+            (batch, s.conv_width - 1, cfg.d_inner + 2 * s.d_state), dtype),
+    }
+
+
+SSM_STATE_AXES = {
+    "ssd": ("cache_batch", None, "ssm_inner", None),
+    "conv": ("cache_batch", None, "ssm_inner"),
+}

@@ -1,0 +1,2 @@
+from repro.serving.engine import generate, prefill_step, serve_step  # noqa: F401
+from repro.serving.blackbox import BlackBoxProvider, Request, ScheduledClient  # noqa: F401

@@ -1,0 +1,142 @@
+"""The black-box boundary, made concrete.
+
+`BlackBoxProvider` wraps the real JAX serving engine behind exactly the
+API surface the paper assumes the client sees: submit(request) ->
+completion with latency; no internals exposed.  `ScheduledClient` runs
+the paper's three-layer stack (repro.core) in front of it — the same
+`schedule_slot` decision function the simulator uses, driven by wall
+clock instead of ticks.  This is the end-to-end deployment path
+(examples/serve_blackbox.py) proving the scheduler is not simulator-bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ServeConfig
+from repro.core import overload as olc
+from repro.core.policy import PolicyConfig
+from repro.core.scheduler import IDLE, schedule_slot
+from repro.core.types import (
+    ABANDONED,
+    COMPLETED,
+    INFLIGHT,
+    PENDING,
+    REJECTED,
+    RequestBatch,
+    init_sim_state,
+)
+from repro.serving.engine import generate
+from repro.sim.workload import DEADLINE_BUDGET_MS, bucket_to_class
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (S_p,) int32
+    max_new: int                # realized output tokens (the "true" cost)
+    p50: float                  # coarse prior available at submission
+    bucket: int
+    arrival_s: float = 0.0
+    submit_s: float = 0.0
+    finish_s: float = 0.0
+    status: str = "pending"
+    output: Optional[np.ndarray] = None
+
+
+class BlackBoxProvider:
+    """A real JAX model behind an opaque submit() API."""
+
+    def __init__(self, params, cfg: ModelConfig, sc: ServeConfig):
+        self.params, self.cfg, self.sc = params, cfg, sc
+
+    def submit(self, prompt: np.ndarray, max_new: int) -> np.ndarray:
+        out = generate(self.params, self.cfg, self.sc,
+                       jnp.asarray(prompt)[None], max_new)
+        return np.asarray(out[0])
+
+
+class ScheduledClient:
+    """Three-layer client (allocation/ordering/overload) in front of a
+    BlackBoxProvider, reusing the exact same `schedule_slot` the simulator
+    exercises — the policy logic is written once (DESIGN.md §2)."""
+
+    def __init__(self, provider: BlackBoxProvider, policy: PolicyConfig,
+                 capacity: int = 64):
+        self.provider = provider
+        self.policy = policy
+        self.requests: list[Request] = []
+        self._slot = jax.jit(schedule_slot)
+
+    def run(self, requests: list[Request], time_scale: float = 1.0) -> list[Request]:
+        """Executes the full request list; arrival times honored in scaled
+        wall clock. Synchronous single-threaded submission (the engine is
+        compute-bound on CPU); the scheduler still controls ORDER and
+        admit/defer/reject, which is what the paper's layers own."""
+        n = len(requests)
+        batch = RequestBatch(
+            arrival_ms=jnp.asarray([r.arrival_s * 1e3 for r in requests], jnp.float32),
+            bucket=jnp.asarray([r.bucket for r in requests], jnp.int32),
+            cls=bucket_to_class(jnp.asarray([r.bucket for r in requests], jnp.int32)),
+            true_tokens=jnp.asarray([r.max_new for r in requests], jnp.float32),
+            p50=jnp.asarray([r.p50 for r in requests], jnp.float32),
+            p90=jnp.asarray([r.p50 * 1.8 for r in requests], jnp.float32),
+            deadline_budget_ms=DEADLINE_BUDGET_MS[
+                jnp.asarray([r.bucket for r in requests], jnp.int32)],
+            valid=jnp.ones((n,), bool),
+        )
+        state = init_sim_state(n)
+        t0 = time.monotonic()
+
+        done = 0
+        while done < n:
+            now_ms = (time.monotonic() - t0) * 1e3 * time_scale
+            state = state._replace(now_ms=jnp.float32(now_ms))
+            d = self._slot(self.policy, batch, state)
+            a = int(d.action)
+            state = state._replace(sched=state.sched._replace(
+                deficit=d.deficit, rr_turn=d.rr_turn))
+            if a == IDLE:
+                # nothing eligible yet: advance to next arrival
+                pend = [r for r in requests if r.status == "pending"]
+                if not pend:
+                    break
+                time.sleep(0.005)
+                continue
+            i = int(d.req_idx)
+            req = requests[i]
+            if a == olc.REJECT:
+                req.status = "rejected"
+                state = _set_status(state, i, REJECTED)
+                done += 1
+            elif a == olc.DEFER:
+                back = olc.defer_backoff(
+                    self.policy, d.severity, state.req.n_defers[i])
+                state = state._replace(req=state.req._replace(
+                    defer_until=state.req.defer_until.at[i].set(
+                        now_ms + float(back)),
+                    n_defers=state.req.n_defers.at[i].add(1)))
+            else:  # admit -> call the black box (synchronous)
+                req.submit_s = time.monotonic() - t0
+                state = _set_status(state, i, INFLIGHT)
+                state = state._replace(provider=state.provider._replace(
+                    inflight=state.provider.inflight + 1))
+                req.output = self.provider.submit(req.prompt, req.max_new)
+                req.finish_s = time.monotonic() - t0
+                req.status = "completed"
+                state = _set_status(state, i, COMPLETED)
+                state = state._replace(provider=state.provider._replace(
+                    inflight=state.provider.inflight - 1))
+                done += 1
+        return requests
+
+
+def _set_status(state, i, code):
+    return state._replace(req=state.req._replace(
+        status=state.req.status.at[i].set(code)))

@@ -1,0 +1,89 @@
+"""Serving engine: batched prefill + jit'd decode loop over the model zoo.
+
+`generate` is the reference generation loop (greedy / temperature) used by
+the examples and the latency-calibration benchmark; `serve_step` /
+`prefill_step` are the AOT-loweable entry points the multi-pod dry-run
+compiles (decode shapes lower serve_step per the assignment).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ServeConfig
+from repro.models import decode_step, init_caches, prefill
+
+
+class GenState(NamedTuple):
+    tokens: jnp.ndarray      # (B, S_max) generated ids
+    pos: jnp.ndarray         # () int32 absolute position
+    caches: Any
+    done: jnp.ndarray        # (B,) bool
+    key: jax.Array
+
+
+def prefill_step(params, cfg: ModelConfig, tokens, max_seq: int,
+                 prefix_embeds=None, impl: str = "xla"):
+    """AOT entry point for prefill shapes: logits + caches."""
+    return prefill(params, cfg, tokens, max_seq, prefix_embeds, impl)
+
+
+def serve_step(params, cfg: ModelConfig, token, pos, caches,
+               impl: str = "xla"):
+    """AOT entry point for decode shapes: ONE new token against a cache."""
+    return decode_step(params, cfg, token, pos, caches, impl)
+
+
+def _sample(key, logits, temperature: float):
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "sc", "n_new", "impl"))
+def _generate_jit(params, cfg: ModelConfig, sc: ServeConfig, prompt,
+                  prompt_len, key, n_new: int, impl: str = "xla",
+                  prefix_embeds=None):
+    B, S_p = prompt.shape
+    logits, caches = prefill(params, cfg, prompt, sc.max_seq, prefix_embeds,
+                             impl)
+    pos0 = S_p + (cfg.prefix_len if prefix_embeds is not None else 0)
+    k0, key = jax.random.split(key)
+    first = _sample(k0, logits[:, -1], sc.temperature).astype(jnp.int32)
+
+    tokens0 = jnp.zeros((B, n_new), jnp.int32).at[:, 0].set(first)
+    state = GenState(
+        tokens=tokens0,
+        pos=jnp.asarray(pos0, jnp.int32),
+        caches=caches,
+        done=first == sc.eos_id,
+        key=key,
+    )
+
+    def step(state: GenState, i):
+        tok = jax.lax.dynamic_slice_in_dim(state.tokens, i, 1, axis=1)
+        logits, caches = decode_step(params, cfg, tok, state.pos, state.caches, impl)
+        k, key = jax.random.split(state.key)
+        nxt = _sample(k, logits[:, -1], sc.temperature).astype(jnp.int32)
+        nxt = jnp.where(state.done, sc.eos_id, nxt)
+        tokens = jax.lax.dynamic_update_slice_in_dim(
+            state.tokens, nxt[:, None], i + 1, axis=1)
+        done = state.done | (nxt == sc.eos_id)
+        return GenState(tokens, state.pos + 1, caches, done, key), None
+
+    state, _ = jax.lax.scan(step, state, jnp.arange(n_new - 1))
+    return state.tokens, state.done
+
+
+def generate(params, cfg: ModelConfig, sc: ServeConfig, prompt,
+             n_new: int, seed: int = 0, impl: str = "xla",
+             prefix_embeds=None):
+    """prompt: (B, S_p) int32 -> (B, n_new) generated ids."""
+    key = jax.random.PRNGKey(seed)
+    toks, done = _generate_jit(
+        params, cfg, sc, prompt, prompt.shape[1], key, n_new, impl,
+        prefix_embeds)
+    return toks

@@ -1,0 +1,6 @@
+from repro.sharding.rules import (  # noqa: F401
+    DEFAULT_ACT_RULES,
+    DEFAULT_PARAM_RULES,
+    logical_to_sharding,
+    spec_for,
+)

@@ -1,0 +1,137 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Every parameter leaf carries a tuple of *logical* axis names (built by the
+model init functions alongside the arrays).  `logical_to_sharding` maps
+those to `NamedSharding`s for a concrete mesh, automatically dropping any
+rule whose dimension does not divide the mesh axis size (e.g. InternVL2's
+14 heads on a 16-way tensor axis) — the hardware-adaptation behavior
+documented in DESIGN.md §4.
+
+Param logical axes:
+  layers                  scan-stacked layer axis, never sharded
+  embed                   d_model on params      -> FSDP axes (pod, data)
+  vocab / heads / kv_heads / q_heads / mlp / experts / ssm_inner
+                          parallel dims          -> tensor axis (model)
+  none                    replicated small dims
+
+Activation logical axes:
+  batch -> (pod, data)    seq -> None (train/prefill)
+  cache_batch -> data     cache_seq -> model (decode; see serving/cache.py)
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axes (tuple = joint sharding over several mesh axes)
+DEFAULT_PARAM_RULES: dict[str, Any] = {
+    "layers": None,
+    "embed": ("pod", "data"),       # FSDP / ZeRO-3 over the data axes
+    "vocab": "model",
+    "heads": "model",
+    "q_heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "ssm_inner": "model",
+    "none": None,
+}
+
+DEFAULT_ACT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "cache_batch": "data",
+    "cache_seq": "model",
+    "none": None,
+}
+
+
+def _mesh_axes_present(mesh: Mesh, axes) -> Optional[Any]:
+    """Restrict a rule to axes that exist in this mesh."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in mesh.axis_names else None
+    present = tuple(a for a in axes if a in mesh.axis_names)
+    return present if present else None
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def spec_for(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Mapping[str, Any] | None = None,
+) -> P:
+    """PartitionSpec for one array, dropping non-divisible rules."""
+    rules = rules or DEFAULT_PARAM_RULES
+    spec = []
+    used: set[str] = set()
+    for dim, name in zip(shape, logical_axes):
+        axes = _mesh_axes_present(mesh, rules.get(name or "none"))
+        if axes is not None:
+            flat = (axes,) if isinstance(axes, str) else tuple(axes)
+            if any(a in used for a in flat):
+                axes = None  # a mesh axis may appear once per spec
+        if axes is not None and dim % _axis_size(mesh, axes) != 0:
+            axes = None  # non-divisible: replicate instead (adaptation)
+        if axes is not None:
+            flat = (axes,) if isinstance(axes, str) else tuple(axes)
+            used.update(flat)
+        spec.append(axes)
+    return P(*spec)
+
+
+def constrain(x, *logical):
+    """`with_sharding_constraint` by logical activation-axis names.
+
+    No-op outside a mesh context, so model code can call it
+    unconditionally (CPU tests / single-device runs are unaffected).
+    Used at GSPMD propagation weak points — after the embedding gather
+    (a gather from a vocab-sharded table loses the batch sharding) and
+    before the LM head (§Perf/internvl2-train iteration 2)."""
+    try:
+        from jax._src.mesh import thread_resources
+        mesh = thread_resources.env.physical_mesh
+    except Exception:  # pragma: no cover - private API moved
+        return x
+    if mesh.empty:
+        return x
+    spec = spec_for(logical, x.shape, mesh, DEFAULT_ACT_RULES)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def logical_to_sharding(
+    axes_tree: Any,
+    params_or_shapes: Any,
+    mesh: Mesh,
+    rules: Mapping[str, Any] | None = None,
+) -> Any:
+    """Map a tree of logical-axes tuples + arrays/ShapeDtypeStructs to a
+    matching tree of NamedShardings."""
+
+    def one(axes, arr):
+        return NamedSharding(mesh, spec_for(axes, arr.shape, mesh, rules))
+
+    return jax.tree.map(
+        one, axes_tree, params_or_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )

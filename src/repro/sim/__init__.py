@@ -1,0 +1,6 @@
+"""JAX discrete-event simulation of the black-box provider boundary."""
+from repro.sim.engine import SimConfig, run_sim  # noqa: F401
+from repro.sim.metrics import SimMetrics, compute_metrics  # noqa: F401
+from repro.sim.provider import ProviderPhysics, default_physics  # noqa: F401
+from repro.sim.runner import run_cell, summarize  # noqa: F401
+from repro.sim.workload import REGIMES, WorkloadConfig, generate  # noqa: F401

@@ -1,0 +1,69 @@
+"""Congestion-aware mock provider (paper §4.1).
+
+The mock preserves the causal chain the paper cares about:
+
+    arrival shaping -> offered load -> load-dependent slowdown -> completions
+
+Service time is linear in output tokens (the paper calibrates
+latency_ms = 3294 + 18.7 * tokens against a production API, R^2 = 0.97 —
+our constants differ but linearity is the property that matters; the
+`benchmarks/latency_calibration.py` harness re-fits the line against our
+real JAX serving engine) and is multiplied by a convex load factor when
+the provider is driven past its comfortable concurrency.
+
+The provider is intentionally *not* observable beyond completions: the
+client sees latencies and its own outstanding count, matching the
+black-box boundary.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class ProviderPhysics(NamedTuple):
+    base_ms: jnp.ndarray          # () f32 fixed per-request overhead
+    ms_per_token: jnp.ndarray     # () f32 linear generation cost
+    comfort_concurrency: jnp.ndarray  # () f32 knee of the slowdown curve
+    slowdown_slope: jnp.ndarray   # () f32 linear excess-load penalty
+    slowdown_quad: jnp.ndarray    # () f32 quadratic excess-load penalty
+
+
+def default_physics(
+    base_ms: float = 90.0,
+    ms_per_token: float = 6.5,
+    comfort_concurrency: float = 4.0,
+    slowdown_slope: float = 0.8,
+    slowdown_quad: float = 0.5,
+) -> ProviderPhysics:
+    f = lambda x: jnp.asarray(x, jnp.float32)
+    return ProviderPhysics(
+        f(base_ms), f(ms_per_token), f(comfort_concurrency),
+        f(slowdown_slope), f(slowdown_quad),
+    )
+
+
+def physics_for_arch(ms_per_token: float, base_ms: float = 90.0) -> ProviderPhysics:
+    """Per-architecture provider: ms/token derived from the arch's
+    roofline decode cost (see launch/dryrun.py artifacts)."""
+    return default_physics(base_ms=base_ms, ms_per_token=ms_per_token)
+
+
+def load_multiplier(phys: ProviderPhysics, inflight) -> jnp.ndarray:
+    """Convex slowdown once offered load passes the comfort knee."""
+    excess = jnp.maximum(
+        jnp.asarray(inflight, jnp.float32) - phys.comfort_concurrency, 0.0
+    ) / jnp.maximum(phys.comfort_concurrency, 1.0)
+    return 1.0 + phys.slowdown_slope * excess + phys.slowdown_quad * excess**2
+
+
+def unloaded_latency_ms(phys: ProviderPhysics, tokens) -> jnp.ndarray:
+    return phys.base_ms + phys.ms_per_token * jnp.asarray(tokens, jnp.float32)
+
+
+def service_time_ms(phys: ProviderPhysics, tokens, inflight, jitter) -> jnp.ndarray:
+    """Realized service time for a request admitted with `inflight`
+    concurrent jobs already outstanding; `jitter` is a per-request
+    multiplicative noise term (~U[0.95, 1.05]) from the workload PRNG."""
+    return unloaded_latency_ms(phys, tokens) * load_multiplier(phys, inflight) * jitter

@@ -1,0 +1,67 @@
+"""Experiment runner: vmap over seeds, strategy registry, result frames.
+
+`run_cell` executes one (policy, workload-config) cell over S seeds in a
+single jit'd vmap — the unit every benchmark is built from.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import PolicyConfig
+from repro.sim.engine import SimConfig, run_sim
+from repro.sim.metrics import SimMetrics, compute_metrics
+from repro.sim.provider import ProviderPhysics, default_physics
+from repro.sim.workload import WorkloadConfig, generate
+
+
+@functools.partial(
+    jax.jit, static_argnames=("wl_cfg", "sim_cfg")
+)
+def _run_seeds(
+    policy: PolicyConfig,
+    phys: ProviderPhysics,
+    keys: jax.Array,
+    wl_cfg: WorkloadConfig,
+    sim_cfg: SimConfig,
+) -> SimMetrics:
+    def one(key):
+        batch, jitter = generate(key, wl_cfg)
+        final = run_sim(policy, batch, jitter, phys, sim_cfg)
+        return compute_metrics(batch, final)
+
+    return jax.vmap(one)(keys)
+
+
+def run_cell(
+    policy: PolicyConfig,
+    wl_cfg: WorkloadConfig,
+    *,
+    seeds: int = 5,
+    seed0: int = 0,
+    phys: ProviderPhysics | None = None,
+    sim_cfg: SimConfig = SimConfig(),
+) -> SimMetrics:
+    """Metrics stacked over `seeds` runs (leading axis = seed)."""
+    phys = phys if phys is not None else default_physics()
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(seed0, seed0 + seeds))
+    return _run_seeds(policy, phys, keys, wl_cfg, sim_cfg)
+
+
+def summarize(m: SimMetrics) -> Mapping[str, tuple[float, float]]:
+    """mean ± std over the seed axis, NaN-safe."""
+    out = {}
+    for name, v in m._asdict().items():
+        arr = np.asarray(v, np.float64)
+        out[name] = (float(np.nanmean(arr)), float(np.nanstd(arr)))
+    return out
+
+
+def fmt_cell(summary: Mapping[str, tuple[float, float]], keys=None) -> str:
+    keys = keys or list(summary)
+    parts = [f"{k}={summary[k][0]:.1f}±{summary[k][1]:.1f}" for k in keys]
+    return " ".join(parts)

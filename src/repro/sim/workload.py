@@ -1,0 +1,164 @@
+"""Workload generation (paper §4.2, §4.4, §4.10, §4.1 ShareGPT mix).
+
+Produces a `RequestBatch` (struct-of-arrays) for one seed:
+  * Poisson arrivals whose rate encodes the congestion level,
+  * bucket mix per regime (balanced 50/25/15/10, heavy 20/20/30/30,
+    sharegpt 12/42/46/1 — the paper's published ShareGPT-English split),
+  * realized output tokens per bucket,
+  * policy-facing p50/p90 priors at one of the four information-ladder
+    levels (no_info / class_only / coarse / oracle),
+  * optional multiplicative predictor noise L (paper §4.10): priors are
+    multiplied by U[1-L, 1+L] *after* the coarse prior is formed, leaving
+    mock physics untouched.
+
+All randomness is materialized here; the simulator itself is
+deterministic given a RequestBatch, which keeps the lax.scan engine
+replayable and the experiments seed-exact.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import (
+    CLS_HEAVY,
+    CLS_INTERACTIVE,
+    LONG,
+    MEDIUM,
+    RequestBatch,
+    SHORT,
+    XLONG,
+)
+
+# bucket -> (token_low, token_high): paper's short<=64, medium 65-256,
+# long 257-1024, xlong 1025-4096
+BUCKET_TOKENS = jnp.asarray(
+    [[16.0, 64.0], [65.0, 256.0], [257.0, 1024.0], [1025.0, 4096.0]],
+    jnp.float32,
+)
+
+# per-bucket deadline budgets (ms): roughly SLO_mult x unloaded latency of
+# the bucket's p90 token count under the default provider physics
+# (90ms + 6.5ms/token; multiples shrink with bucket size like real SLOs)
+DEADLINE_BUDGET_MS = jnp.asarray([3600.0, 11000.0, 35000.0, 100000.0], jnp.float32)
+
+MIXES = {
+    "balanced": jnp.asarray([0.50, 0.25, 0.15, 0.10], jnp.float32),
+    "heavy": jnp.asarray([0.20, 0.20, 0.30, 0.30], jnp.float32),
+    # fair-queuing experiment (paper §4.6): 70% long/xlong
+    "heavy70": jnp.asarray([0.20, 0.10, 0.40, 0.30], jnp.float32),
+    # ShareGPT-English published split (paper §4.1): 12/42/46/<1
+    "sharegpt": jnp.asarray([0.12, 0.42, 0.455, 0.005], jnp.float32),
+}
+
+# Congestion level = offered load as a multiple of the provider's
+# comfortable capacity on the given mix (erlang-normalized, so
+# "high" stresses the balanced and heavy mixes *equally* relative to the
+# knee — the paper's regimes cross mix and congestion independently).
+# capacity_mix = comfort_concurrency / mean_service_s(mix) under the
+# default physics (90ms + 6.5ms/token, comfort 4).
+CONGESTION_MULT = {"medium": 0.85, "high": 1.2}
+
+# mean tokens per mix (log-uniform within buckets; see BUCKET_TOKENS)
+_MEAN_TOKENS = {
+    "balanced": 357.0,
+    "heavy": 866.0,    # 20/20/30/30
+    "heavy70": 908.0,  # 20/10/40/30 (fair-queuing experiment)
+    "sharegpt": 326.0,
+}
+
+
+def arrival_rate(mix: str, congestion: str,
+                 base_ms: float = 90.0, ms_per_token: float = 6.5,
+                 comfort: float = 4.0) -> float:
+    mean_service_s = (base_ms + ms_per_token * _MEAN_TOKENS[mix]) / 1000.0
+    capacity = comfort / mean_service_s
+    return CONGESTION_MULT[congestion] * capacity
+
+REGIMES = [
+    ("balanced", "medium"),
+    ("balanced", "high"),
+    ("heavy", "medium"),
+    ("heavy", "high"),
+]
+
+NEUTRAL_P50 = 300.0  # neutral prior for no_info / class_only conditions
+NEUTRAL_P90 = 700.0
+
+
+class WorkloadConfig(NamedTuple):
+    n_requests: int = 192
+    mix: str = "balanced"
+    congestion: str = "medium"
+    information: str = "coarse"   # no_info | class_only | coarse | oracle
+    predictor_noise: float = 0.0  # L in paper §4.10
+    coarse_rel_err: float = 0.25  # intrinsic coarseness of the predictor
+    arrival_scale: float = 1.0    # multiplies the arrival rate; used by
+                                  # per-arch physics sweeps to renormalize
+                                  # offered load to a slower/faster provider
+
+
+def bucket_to_class(bucket: jnp.ndarray) -> jnp.ndarray:
+    """Interactive lane = short bucket; heavy lane = everything else."""
+    return jnp.where(bucket == SHORT, CLS_INTERACTIVE, CLS_HEAVY).astype(jnp.int32)
+
+
+def generate(key: jax.Array, cfg: WorkloadConfig) -> tuple[RequestBatch, jnp.ndarray]:
+    """Returns (batch, jitter) — jitter is the provider-side noise vector."""
+    n = cfg.n_requests
+    k_arr, k_bkt, k_tok, k_prior, k_noise, k_jit = jax.random.split(key, 6)
+
+    rate = arrival_rate(cfg.mix, cfg.congestion) * cfg.arrival_scale
+    gaps_ms = jax.random.exponential(k_arr, (n,)) * (1000.0 / rate)
+    arrival = jnp.cumsum(gaps_ms)
+
+    mix = MIXES[cfg.mix]
+    bucket = jax.random.choice(k_bkt, 4, (n,), p=mix).astype(jnp.int32)
+
+    lo = BUCKET_TOKENS[bucket, 0]
+    hi = BUCKET_TOKENS[bucket, 1]
+    # log-uniform within the bucket: long buckets are right-skewed like
+    # real generation lengths
+    u = jax.random.uniform(k_tok, (n,))
+    true_tokens = jnp.exp(jnp.log(lo) + u * (jnp.log(hi) - jnp.log(lo)))
+
+    # --- information ladder -------------------------------------------------
+    if cfg.information == "oracle":
+        p50 = true_tokens
+        p90 = true_tokens
+    elif cfg.information == "coarse":
+        # coarse predictor: unbiased in log-space with relative error
+        rel = cfg.coarse_rel_err
+        eps = jax.random.uniform(k_prior, (n,), minval=1.0 - rel, maxval=1.0 + rel)
+        p50 = true_tokens * eps
+        p90 = p50 * 1.8
+    elif cfg.information in ("class_only", "no_info"):
+        p50 = jnp.full((n,), NEUTRAL_P50, jnp.float32)
+        p90 = jnp.full((n,), NEUTRAL_P90, jnp.float32)
+    else:
+        raise ValueError(f"unknown information level {cfg.information}")
+
+    # --- predictor-noise sweep (paper §4.10): applied AFTER the coarse
+    # prior is formed; physics untouched
+    if cfg.predictor_noise > 0:
+        L = cfg.predictor_noise
+        f = jax.random.uniform(k_noise, (n,), minval=1.0 - L, maxval=1.0 + L)
+        p50 = p50 * f
+        p90 = p90 * f
+
+    cls = bucket_to_class(bucket)
+    jitter = jax.random.uniform(k_jit, (n,), minval=0.95, maxval=1.05)
+
+    batch = RequestBatch(
+        arrival_ms=arrival.astype(jnp.float32),
+        bucket=bucket,
+        cls=cls,
+        true_tokens=true_tokens.astype(jnp.float32),
+        p50=p50.astype(jnp.float32),
+        p90=p90.astype(jnp.float32),
+        deadline_budget_ms=DEADLINE_BUDGET_MS[bucket],
+        valid=jnp.ones((n,), bool),
+    )
+    return batch, jitter

@@ -1,0 +1,2 @@
+from repro.training import adamw, train_step  # noqa: F401
+from repro.training.train_step import TrainState, init_train_state  # noqa: F401

@@ -1,0 +1,76 @@
+"""Hand-rolled AdamW with fp32 master weights + moments (optax is not
+available offline). Optimizer state is a pytree mirroring the params so
+the sharding rules shard it identically (ZeRO-style when params are
+FSDP-sharded)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray     # () int32
+    master: Any           # fp32 master copy of params
+    m: Any                # fp32 first moment
+    v: Any                # fp32 second moment
+
+
+def init(params) -> AdamWState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(f32, params),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def lr_schedule(tc: TrainConfig, step) -> jnp.ndarray:
+    """Linear warmup then cosine decay to 10%."""
+    s = jnp.asarray(step, jnp.float32)
+    warm = s / jnp.maximum(tc.warmup_steps, 1)
+    frac = jnp.clip(
+        (s - tc.warmup_steps) / jnp.maximum(tc.total_steps - tc.warmup_steps, 1),
+        0.0, 1.0)
+    cos = 0.1 + 0.9 * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return tc.lr * jnp.where(s < tc.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def apply(state: AdamWState, grads, tc: TrainConfig, param_dtype):
+    """One AdamW update. grads may be bf16; math is fp32.
+    Returns (new_params_in_model_dtype, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_schedule(tc, step)
+    b1, b2, eps, wd = tc.b1, tc.b2, tc.eps, tc.weight_decay
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, master, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        new_master = master - lr * (mh / (jnp.sqrt(vh) + eps) + wd * master)
+        return new_master, m, v
+
+    out = jax.tree.map(upd, grads, state.master, state.m, state.v)
+    new_master = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda p: p.astype(param_dtype), new_master)
+    new_state = AdamWState(step=step, master=new_master, m=new_m, v=new_v)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,58 @@
+"""Train step: value_and_grad over lm_loss with remat-inside-scan, AdamW,
+optional gradient-accumulation microbatching (the memory/perf knob the
+roofline hillclimb sweeps)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.models import Model
+from repro.models.common import dtype_of
+from repro.models.model import lm_loss
+from repro.training import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+
+
+def init_train_state(model: Model, tc: TrainConfig) -> TrainState:
+    return TrainState(params=model.params, opt=adamw.init(model.params))
+
+
+def _loss_fn(params, cfg: ModelConfig, batch, tc: TrainConfig):
+    return lm_loss(
+        params, cfg, batch["tokens"], batch["labels"],
+        batch.get("prefix_embeds"), impl="xla", remat=tc.remat)
+
+
+def _grads(params, cfg, batch, tc):
+    """Whole-batch or microbatched (scan) gradients."""
+    if tc.microbatches <= 1:
+        return jax.value_and_grad(_loss_fn)(params, cfg, batch, tc)
+
+    n = tc.microbatches
+    split = lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:])
+    mb = jax.tree.map(split, batch)
+
+    def step(carry, micro):
+        loss_acc, grad_acc = carry
+        loss, g = jax.value_and_grad(_loss_fn)(params, cfg, micro, tc)
+        return (loss_acc + loss / n,
+                jax.tree.map(lambda a, b: a + b / n, grad_acc, g)), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss, grads), _ = jax.lax.scan(step, (jnp.float32(0.0), zeros), mb)
+    return loss, grads
+
+
+def train_step(state: TrainState, batch, cfg: ModelConfig, tc: TrainConfig):
+    loss, grads = _grads(state.params, cfg, batch, tc)
+    new_params, new_opt, om = adamw.apply(
+        state.opt, grads, tc, dtype_of(cfg.dtype))
+    metrics = {"loss": loss, **om}
+    return TrainState(params=new_params, opt=new_opt), metrics

@@ -1,0 +1,173 @@
+"""Model-zoo correctness: SSD math, flash-XLA attention oracle checks,
+prefill/decode vs full-forward consistency, sliding-window ring caches."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import MoEConfig
+from repro.configs import ARCHS, get_smoke
+from repro.models import decode_step, forward_train, init_model, prefill
+from repro.models.attention import _sdpa, causal_mask, flash_xla
+from repro.models.ssm import ssd_chunked, ssd_step
+
+
+def f32(cfg):
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    if cfg.moe:  # dropless for exact path comparison
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=-1.0))
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# SSD (Mamba2) math
+# ---------------------------------------------------------------------------
+
+class TestSSD:
+    @pytest.mark.parametrize("chunk", [8, 16, 64])
+    def test_chunked_matches_sequential(self, chunk):
+        key = jax.random.PRNGKey(1)
+        B, S, H, P, N = 2, 64, 3, 8, 16
+        ks = jax.random.split(key, 5)
+        x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+        Bm = jax.random.normal(ks[1], (B, S, N)) * 0.5
+        Cm = jax.random.normal(ks[2], (B, S, N)) * 0.5
+        dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+        A = jnp.exp(jax.random.normal(ks[4], (H,)) * 0.3)
+
+        y_c, st_c = ssd_chunked(x, Bm, Cm, dt, A, chunk=chunk)
+
+        st = jnp.zeros((B, H, P, N))
+        ys = []
+        for t in range(S):
+            a = jnp.exp(-A[None, :] * dt[:, t])
+            st = a[:, :, None, None] * st + jnp.einsum(
+                "bh,bhp,bn->bhpn", dt[:, t], x[:, t], Bm[:, t])
+            ys.append(jnp.einsum("bhpn,bn->bhp", st, Cm[:, t]))
+        y_seq = jnp.stack(ys, 1)
+        np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_seq),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(st_c), np.asarray(st),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_unaligned_length_padding(self):
+        key = jax.random.PRNGKey(2)
+        B, S, H, P, N = 1, 37, 2, 4, 8
+        ks = jax.random.split(key, 5)
+        x = jax.random.normal(ks[0], (B, S, H, P))
+        Bm = jax.random.normal(ks[1], (B, S, N)) * 0.5
+        Cm = jax.random.normal(ks[2], (B, S, N)) * 0.5
+        dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+        A = jnp.ones((H,))
+        y16, st16 = ssd_chunked(x, Bm, Cm, dt, A, chunk=16)
+        y37, st37 = ssd_chunked(x, Bm, Cm, dt, A, chunk=64)
+        np.testing.assert_allclose(np.asarray(y16), np.asarray(y37), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(st16), np.asarray(st37), atol=1e-4)
+
+    def test_step_matches_chunked_with_state_carry(self):
+        """prefill(0:t) + step(t) == chunked(0:t+1)."""
+        key = jax.random.PRNGKey(3)
+        B, S, H, P, N = 2, 33, 2, 4, 8
+        ks = jax.random.split(key, 5)
+        x = jax.random.normal(ks[0], (B, S, H, P))
+        Bm = jax.random.normal(ks[1], (B, S, N)) * 0.5
+        Cm = jax.random.normal(ks[2], (B, S, N)) * 0.5
+        dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+        A = jnp.ones((H,))
+        D = jnp.zeros((H,))
+        _, st_prefix = ssd_chunked(x[:, :-1], Bm[:, :-1], Cm[:, :-1],
+                                   dt[:, :-1], A, chunk=16)
+        y_step, st_step = ssd_step(x[:, -1], Bm[:, -1], Cm[:, -1],
+                                   dt[:, -1], A, D, st_prefix)
+        y_all, st_all = ssd_chunked(x, Bm, Cm, dt, A, chunk=16)
+        np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_all[:, -1]),
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(st_step), np.asarray(st_all),
+                                   atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Blocked (flash-style) XLA attention vs dense oracle
+# ---------------------------------------------------------------------------
+
+class TestFlashXLA:
+    @pytest.mark.parametrize("window", [0, 1536])
+    def test_matches_dense_sdpa(self, window):
+        key = jax.random.PRNGKey(0)
+        B, S, H, KV, hd = 1, 4096, 4, 2, 32
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+        out_f = flash_xla(q, k, v, window)
+        m = causal_mask(S, S, window)[None, None, None]
+        out_d = _sdpa(q, k, v, m)
+        np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_d),
+                                   atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Full-model consistency: forward == prefill + decode, for every arch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    cfg = f32(get_smoke(arch))
+    m = init_model(jax.random.PRNGKey(0), cfg)
+    B, S, P = 2, 48, cfg.prefix_len or 0
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab)
+    pe = (jax.random.normal(jax.random.PRNGKey(9), (B, P, cfg.d_model)) * 0.02
+          if P else None)
+    logits_full, _ = forward_train(m.params, cfg, toks, pe, remat=False)
+    assert np.isfinite(np.asarray(logits_full)).all()
+
+    lp, caches = prefill(m.params, cfg, toks[:, : S - 1], max_seq=80,
+                         prefix_embeds=pe)
+    np.testing.assert_allclose(
+        np.asarray(lp[:, 0]), np.asarray(logits_full[:, P + S - 2]), atol=2e-4)
+    ld, _ = decode_step(m.params, cfg, toks[:, S - 1:], jnp.int32(P + S - 1),
+                        caches)
+    np.testing.assert_allclose(
+        np.asarray(ld[:, 0]), np.asarray(logits_full[:, P + S - 1]), atol=2e-4)
+
+
+def test_sliding_window_ring_decode():
+    """Decode far past the window: ring cache must agree with the full
+    forward under the same windowed mask (starcoder2 family, window=64)."""
+    cfg = f32(get_smoke("starcoder2-3b"))  # sliding_window = 64
+    m = init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 150  # well past the 64-token window
+    toks = jax.random.randint(jax.random.PRNGKey(4), (B, S), 0, cfg.vocab)
+    logits_full, _ = forward_train(m.params, cfg, toks, None, remat=False)
+
+    _, caches = prefill(m.params, cfg, toks[:, : S - 8], max_seq=S)
+    errs = []
+    for i in range(S - 8, S):
+        ld, caches = decode_step(m.params, cfg, toks[:, i:i + 1],
+                                 jnp.int32(i), caches)
+        errs.append(float(jnp.abs(ld[:, 0] - logits_full[:, i]).max()))
+    assert max(errs) < 2e-4, errs
+
+
+def test_remat_matches_no_remat():
+    cfg = f32(get_smoke("qwen1.5-32b"))
+    m = init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 32), 0, cfg.vocab)
+    l1, _ = forward_train(m.params, cfg, toks, None, remat=False)
+    l2, _ = forward_train(m.params, cfg, toks, None, remat=True)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With a finite capacity factor outputs differ from dropless only on
+    dropped tokens; aux loss stays near 1x uniform."""
+    cfg = get_smoke("phi3.5-moe-42b-a6.6b")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    m = init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(6), (4, 128), 0, cfg.vocab)
+    _, aux = forward_train(m.params, cfg, toks, None, remat=False)
+    # Switch-style aux ~ weight * 1.0 for near-uniform routing
+    assert 0.0 < float(aux) < 5 * cfg.moe.router_aux_weight

@@ -1,0 +1,214 @@
+"""Integration + property tests for the JAX discrete-event simulator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policy import strategy, base_policy
+from repro.core.types import (
+    ABANDONED, COMPLETED, INFLIGHT, PENDING, REJECTED, SHORT,
+)
+from repro.sim import (
+    SimConfig, WorkloadConfig, compute_metrics, default_physics, generate,
+    run_cell, run_sim, summarize,
+)
+from repro.sim.metrics import masked_percentile
+from repro.sim.provider import load_multiplier, service_time_ms, unloaded_latency_ms
+
+SMALL = SimConfig(n_ticks=1500)
+
+
+def run_one(name="final_adrr_olc", wl=None, seed=0, sim_cfg=SMALL):
+    wl = wl or WorkloadConfig(n_requests=48, mix="balanced", congestion="medium")
+    batch, jitter = generate(jax.random.PRNGKey(seed), wl)
+    final = run_sim(strategy(name), batch, jitter, default_physics(), sim_cfg)
+    return batch, final
+
+
+class TestProvider:
+    def test_latency_linear_in_tokens(self):
+        phys = default_physics()
+        t = jnp.asarray([100.0, 200.0, 400.0])
+        lat = unloaded_latency_ms(phys, t)
+        d1 = float(lat[1] - lat[0])
+        d2 = float(lat[2] - lat[1])
+        assert d2 == pytest.approx(2 * d1, rel=1e-5)
+
+    def test_load_multiplier_monotone_and_convex(self):
+        phys = default_physics()
+        ms = [float(load_multiplier(phys, i)) for i in range(0, 30, 3)]
+        assert all(b >= a for a, b in zip(ms, ms[1:]))
+        assert ms[0] == pytest.approx(1.0)
+        diffs = np.diff(ms)
+        assert all(d2 >= d1 - 1e-6 for d1, d2 in zip(diffs, diffs[1:]))
+
+    def test_service_time_includes_jitter(self):
+        phys = default_physics()
+        s1 = service_time_ms(phys, 100.0, 0, 1.0)
+        s2 = service_time_ms(phys, 100.0, 0, 1.05)
+        assert float(s2) == pytest.approx(float(s1) * 1.05, rel=1e-5)
+
+
+class TestWorkload:
+    def test_arrivals_sorted_positive(self):
+        wl = WorkloadConfig(n_requests=64)
+        b, _ = generate(jax.random.PRNGKey(0), wl)
+        a = np.asarray(b.arrival_ms)
+        assert (np.diff(a) >= 0).all() and (a > 0).all()
+
+    def test_bucket_token_ranges(self):
+        wl = WorkloadConfig(n_requests=256)
+        b, _ = generate(jax.random.PRNGKey(1), wl)
+        lo = np.asarray([16, 65, 257, 1025])[np.asarray(b.bucket)]
+        hi = np.asarray([64, 256, 1024, 4096])[np.asarray(b.bucket)]
+        t = np.asarray(b.true_tokens)
+        assert (t >= lo - 1).all() and (t <= hi + 1).all()
+
+    def test_class_routing(self):
+        wl = WorkloadConfig(n_requests=128)
+        b, _ = generate(jax.random.PRNGKey(2), wl)
+        assert (np.asarray(b.cls) == (np.asarray(b.bucket) != SHORT)).all()
+
+    def test_information_levels(self):
+        k = jax.random.PRNGKey(3)
+        oracle, _ = generate(k, WorkloadConfig(information="oracle"))
+        assert np.allclose(oracle.p50, oracle.true_tokens)
+        neutral, _ = generate(k, WorkloadConfig(information="class_only"))
+        assert np.unique(np.asarray(neutral.p50)).size == 1
+        coarse, _ = generate(k, WorkloadConfig(information="coarse"))
+        rel = np.abs(np.asarray(coarse.p50) / np.asarray(coarse.true_tokens) - 1)
+        assert rel.max() <= 0.25 + 1e-5 and rel.mean() > 0.01
+
+    def test_predictor_noise_bounds(self):
+        k = jax.random.PRNGKey(4)
+        clean, _ = generate(k, WorkloadConfig(information="oracle"))
+        noisy, _ = generate(k, WorkloadConfig(information="oracle", predictor_noise=0.6))
+        ratio = np.asarray(noisy.p50) / np.asarray(clean.p50)
+        assert (ratio >= 0.4 - 1e-5).all() and (ratio <= 1.6 + 1e-5).all()
+
+    def test_mix_proportions(self):
+        wl = WorkloadConfig(n_requests=2048, mix="heavy")
+        b, _ = generate(jax.random.PRNGKey(5), wl)
+        frac = np.bincount(np.asarray(b.bucket), minlength=4) / 2048
+        assert np.allclose(frac, [0.2, 0.2, 0.3, 0.3], atol=0.05)
+
+
+class TestEngine:
+    def test_conservation(self):
+        """Every request ends in exactly one terminal/annotated state."""
+        b, final = run_one()
+        s = np.asarray(final.req.status)
+        assert ((s == COMPLETED) | (s == REJECTED) | (s == ABANDONED)
+                | (s == PENDING) | (s == INFLIGHT)).all()
+        # after drain, nothing is left pending or inflight
+        assert ((s == COMPLETED) | (s == REJECTED) | (s == ABANDONED)).all()
+
+    def test_light_load_all_complete_in_time(self):
+        wl = WorkloadConfig(n_requests=12, congestion="medium")
+        b, final = run_one(wl=wl)
+        s = np.asarray(final.req.status)
+        assert (s == COMPLETED).all()
+        lat = np.asarray(final.req.finish_ms - b.arrival_ms)
+        assert (lat <= np.asarray(b.deadline_budget_ms) * 3).all()
+
+    def test_finish_after_submit_after_arrival(self):
+        b, final = run_one()
+        done = np.asarray(final.req.status) == COMPLETED
+        sub = np.asarray(final.req.submit_ms)[done]
+        fin = np.asarray(final.req.finish_ms)[done]
+        arr = np.asarray(b.arrival_ms)[done]
+        assert (sub >= arr - 25.0 - 1e-3).all()  # within one tick quantum
+        assert (fin > sub).all()
+
+    def test_shorts_never_rejected_final_olc(self):
+        wl = WorkloadConfig(n_requests=96, mix="heavy", congestion="high")
+        b, final = run_one(wl=wl, sim_cfg=SimConfig(n_ticks=4000))
+        s = np.asarray(final.req.status)
+        shorts = np.asarray(b.bucket) == SHORT
+        assert (s[shorts] != REJECTED).all()
+
+    def test_rejections_concentrate_on_expensive(self):
+        """Paper Fig 5: xlong bears the majority of rejections."""
+        wl = WorkloadConfig(n_requests=128, mix="heavy", congestion="high")
+        b, final = run_one(wl=wl, sim_cfg=SimConfig(n_ticks=4000))
+        s = np.asarray(final.req.status)
+        bkt = np.asarray(b.bucket)
+        rej = s == REJECTED
+        if rej.sum() > 0:
+            assert bkt[rej].min() >= 2  # only long/xlong under the ladder
+            assert (bkt[rej] == 3).sum() >= (bkt[rej] == 2).sum()
+
+    def test_naive_admits_everything_instantly(self):
+        b, final = run_one("direct_naive")
+        done = np.asarray(final.req.status) == COMPLETED
+        wait = np.asarray(final.req.submit_ms) - np.asarray(b.arrival_ms)
+        assert (wait[done] <= 50.0 + 1e-3).all()  # within 2 ticks
+
+    def test_deterministic_given_seed(self):
+        b1, f1 = run_one(seed=7)
+        b2, f2 = run_one(seed=7)
+        assert np.array_equal(np.asarray(f1.req.status), np.asarray(f2.req.status))
+        assert np.allclose(np.asarray(f1.req.finish_ms), np.asarray(f2.req.finish_ms))
+
+
+class TestMetrics:
+    @given(q=st.floats(0.05, 0.99), n_valid=st.integers(1, 50))
+    @settings(max_examples=40, deadline=None)
+    def test_masked_percentile_matches_numpy(self, q, n_valid):
+        rng = np.random.default_rng(0)
+        vals = rng.uniform(0, 100, size=64).astype(np.float32)
+        mask = np.zeros(64, bool)
+        mask[rng.choice(64, size=n_valid, replace=False)] = True
+        ours = float(masked_percentile(jnp.asarray(vals), jnp.asarray(mask), q))
+        ref = float(np.quantile(vals[mask], q, method="inverted_cdf"))
+        assert ours == pytest.approx(ref, rel=1e-5)
+
+    def test_masked_percentile_empty_nan(self):
+        out = masked_percentile(jnp.arange(4.0), jnp.zeros(4, bool), 0.95)
+        assert np.isnan(float(out))
+
+    def test_metrics_cr_excludes_rejects(self):
+        wl = WorkloadConfig(n_requests=128, mix="heavy", congestion="high")
+        b, final = run_one(wl=wl, sim_cfg=SimConfig(n_ticks=4000))
+        m = compute_metrics(b, final)
+        s = np.asarray(final.req.status)
+        n_rej = (s == REJECTED).sum()
+        n_done = (s == COMPLETED).sum()
+        assert float(m.completion_rate) == pytest.approx(n_done / (128 - n_rej), rel=1e-5)
+        assert int(m.n_rejects) == n_rej
+
+    def test_goodput_counts_only_met(self):
+        b, final = run_one()
+        m = compute_metrics(b, final)
+        done = np.asarray(final.req.status) == COMPLETED
+        met = done & (np.asarray(final.req.finish_ms)
+                      <= np.asarray(b.arrival_ms + b.deadline_budget_ms))
+        expect = met.sum() / (float(m.makespan_ms) / 1000.0)
+        assert float(m.goodput_rps) == pytest.approx(expect, rel=1e-4)
+
+
+class TestRunner:
+    def test_run_cell_shapes_and_seed_variation(self):
+        wl = WorkloadConfig(n_requests=48)
+        m = run_cell(strategy("final_adrr_olc"), wl, seeds=3, sim_cfg=SMALL)
+        assert m.short_p95_ms.shape == (3,)
+        s = summarize(m)
+        assert "short_p95_ms" in s and np.isfinite(s["short_p95_ms"][0])
+
+    def test_policy_vmap_over_stacked_configs(self):
+        """Stacked PolicyConfigs vmap into one compiled sweep."""
+        import jax
+        cfgs = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            strategy("adaptive_drr"), strategy("final_adrr_olc"))
+        wl = WorkloadConfig(n_requests=32)
+        batch, jitter = generate(jax.random.PRNGKey(0), wl)
+        phys = default_physics()
+
+        def one(cfg):
+            final = run_sim(cfg, batch, jitter, phys, SMALL)
+            return compute_metrics(batch, final).completion_rate
+
+        crs = jax.vmap(one)(cfgs)
+        assert crs.shape == (2,) and np.isfinite(np.asarray(crs)).all()
