@@ -1,0 +1,26 @@
+# Developer entry points. `make test` is the tier-1 verification command.
+PY := python
+export PYTHONPATH := src
+
+.PHONY: test test-fast bench bench-smoke bench-sched
+
+# Tier-1: full test suite (ROADMAP.md)
+test:
+	$(PY) -m pytest -x -q
+
+# quick slice while iterating on the scheduler stack
+test-fast:
+	$(PY) -m pytest -x -q tests/test_scheduler_core.py tests/test_multi_class.py
+
+# full paper-table benchmark suite
+bench:
+	$(PY) benchmarks/run.py
+
+# K-class sweep at tiny n_ticks — CI-sized sanity pass
+bench-smoke:
+	$(PY) benchmarks/multi_class.py --smoke
+
+# scheduler-throughput microbenchmark -> BENCH_scheduler.json
+# (slots/sec at K=2 vs K=8; the perf trajectory future PRs compare against)
+bench-sched:
+	$(PY) benchmarks/multi_class.py --sched-only

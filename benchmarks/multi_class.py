@@ -1,0 +1,196 @@
+"""Beyond-paper: config-driven K-class scheduling sweep.
+
+Exercises the tentpole generalization — the same three-layer stack
+instantiated at K ∈ {2, 4, 8} tenants under balanced/heavy congestion —
+and reports:
+
+  * per-class joint metrics (P95 / deadline satisfaction / goodput) so
+    multi-tenant fairness is legible per lane, plus the cross-class
+    dispersion that the DRR allocation is supposed to bound;
+  * scheduler-step wall-clock per K (the vectorized class axis must be
+    no slower at K=2 than the seed two-lane path, and ~flat in K);
+  * a `BENCH_scheduler.json` microbenchmark artifact (slots/sec at K=2
+    vs K=8) so future PRs have a perf trajectory to compare against.
+
+The K=2 cell runs the paper's `paper2` lane scheme with the seed policy
+(bit-exact with the seed scheduler — tests/test_multi_class.py), so its
+per-class metrics double as the seed-equivalence check: lane 0 equals
+the short-bucket scalars within seed noise.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.policy import base_policy, kclass_policy, n_classes  # noqa: E402
+from repro.core.scheduler import schedule_slot  # noqa: E402
+from repro.core.types import RequestBatch, init_sim_state  # noqa: E402
+from repro.sim import SimConfig, WorkloadConfig, run_cell, summarize  # noqa: E402
+
+from benchmarks.common import TABLE_DIR, Timer, write_csv  # noqa: E402
+
+K_SWEEP = (2, 4, 8)
+REGIMES = [("balanced", "medium"), ("heavy", "high")]
+MAX_K = max(K_SWEEP)
+BENCH_JSON = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_scheduler.json")
+
+
+def _policy_for(k: int):
+    """K=2 runs the seed (paper) policy on the paper2 lanes; K>2 runs the
+    symmetric-tenant instantiation of the same stack."""
+    return base_policy() if k == 2 else kclass_policy(k)
+
+
+def _workload_for(k: int, mix: str, congestion: str, n_req: int):
+    cmap = "paper2" if k == 2 else f"tenant{k}"
+    return WorkloadConfig(
+        n_requests=n_req, mix=mix, congestion=congestion, class_map=cmap)
+
+
+def _cell_row(k, mix, congestion, s, secs):
+    row = {
+        "n_classes": k,
+        "mix": mix,
+        "congestion": congestion,
+        "cell_seconds": round(secs, 2),
+    }
+    for key in ("global_p95_ms", "completion_rate", "satisfaction",
+                "goodput_rps", "n_rejects"):
+        row[f"{key}_mean"] = round(s[key][0], 3)
+    for c in range(MAX_K):
+        for key in ("class_p95_ms", "class_satisfaction", "class_goodput_rps"):
+            v = s.get(f"{key}#{c}")
+            row[f"{key.replace('class_', '')}_c{c}"] = (
+                round(v, 3) if v is not None else "")
+    return row
+
+
+def _per_class_summary(m, k):
+    """mean over seeds for each class lane, flattened to scalar keys."""
+    out = summarize(m)
+    flat = {kk: vv for kk, vv in out.items()}
+    for name in ("class_p95_ms", "class_satisfaction", "class_goodput_rps"):
+        arr = np.asarray(getattr(m, name), np.float64)  # (seeds, K)
+        for c in range(k):
+            col = arr[:, c]
+            finite = col[np.isfinite(col)]
+            # a lane can be empty in short smoke runs: report NaN quietly
+            flat[f"{name}#{c}"] = (
+                float(finite.mean()) if finite.size else float("nan"))
+    return flat
+
+
+def scheduler_step_bench(k: int, n_req: int = 256, iters: int = 300) -> dict:
+    """Wall-clock of one jitted schedule_slot at class count K."""
+    policy = _policy_for(k)
+    wl = _workload_for(k, "heavy", "high", n_req)
+    from repro.sim.workload import generate
+
+    batch, _ = generate(jax.random.PRNGKey(0), wl)
+    state = init_sim_state(batch.n, n_classes(policy))._replace(
+        now_ms=jnp.float32(1e5))
+    step = jax.jit(schedule_slot)
+
+    t0 = time.perf_counter()
+    d = step(policy, batch, state)
+    jax.block_until_ready(d)
+    compile_s = time.perf_counter() - t0
+
+    # best-of-3: shared-container noise easily swamps a single block
+    run_s = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            d = step(policy, batch, state)
+        jax.block_until_ready(d)
+        run_s = min(run_s, time.perf_counter() - t0)
+    return {
+        "n_classes": k,
+        "n_requests": n_req,
+        "compile_seconds": round(compile_s, 4),
+        "slot_us": round(run_s / iters * 1e6, 2),
+        "slots_per_sec": round(iters / run_s, 1),
+    }
+
+
+def run(verbose: bool = True, n_ticks: int | None = None, n_req: int = 160,
+        seeds: int = 5):
+    sim_cfg = SimConfig(n_ticks=n_ticks if n_ticks is not None else 14000)
+    rows = []
+    k2_summary = {}
+    for mix, congestion in REGIMES:
+        for k in K_SWEEP:
+            wl = _workload_for(k, mix, congestion, n_req)
+            with Timer() as t:
+                m = run_cell(_policy_for(k), wl, seeds=seeds, sim_cfg=sim_cfg)
+                jax.block_until_ready(m.class_p95_ms)
+            s = _per_class_summary(m, k)
+            if k == 2:
+                k2_summary[(mix, congestion)] = s
+            rows.append(_cell_row(k, mix, congestion, s, t.s))
+            if verbose:
+                lanes = " ".join(
+                    f"c{c}:{s[f'class_satisfaction#{c}']:.2f}"
+                    for c in range(k))
+                print(f"  K={k} {mix}/{congestion:6s} {t.s:5.1f}s "
+                      f"goodput={s['goodput_rps'][0]:.2f} sat/lane [{lanes}]")
+
+    path = write_csv("multi_class_summary", rows)
+
+    # --- seed-equivalence readout: paper2 lane 0 == short-bucket scalars
+    for (mix, congestion), s in k2_summary.items():
+        short_scalar = s["short_p95_ms"][0]
+        lane0 = s["class_p95_ms#0"]
+        ok = (not np.isfinite(short_scalar)) or abs(lane0 - short_scalar) <= max(
+            0.05 * short_scalar, 1.0)
+        print(f"  [{'PASS' if ok else 'WARN'}] K=2 {mix}/{congestion}: lane-0 "
+              f"P95 {lane0:.0f}ms matches short-bucket scalar "
+              f"{short_scalar:.0f}ms")
+
+    # --- scheduler-step microbenchmark -> BENCH_scheduler.json
+    write_sched_bench(verbose=verbose)
+    return path, BENCH_JSON
+
+
+def write_sched_bench(verbose: bool = True, iters: int = 300) -> str:
+    """Scheduler-throughput microbenchmark: slots/sec per K, written to
+    BENCH_scheduler.json so future PRs have a perf trajectory."""
+    bench = {"benchmark": "schedule_slot", "steps": []}
+    base_rate = None
+    for k in K_SWEEP:
+        b = scheduler_step_bench(k, iters=iters)
+        bench["steps"].append(b)
+        if k == 2:
+            base_rate = b["slots_per_sec"]
+        if verbose:
+            print(f"  schedule_slot K={k}: {b['slot_us']:7.1f}us/slot "
+                  f"({b['slots_per_sec']:.0f} slots/s, "
+                  f"compile {b['compile_seconds']:.2f}s)")
+    k8_rate = bench["steps"][-1]["slots_per_sec"]
+    bench["k8_vs_k2_rate_ratio"] = round(k8_rate / base_rate, 3)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(bench, f, indent=2)
+    ok = k8_rate >= 0.5 * base_rate
+    print(f"  [{'PASS' if ok else 'WARN'}] K=8 scheduler rate "
+          f"{'within' if ok else 'NOT within'} 2x of K=2 "
+          f"(vectorized class axis)")
+    return BENCH_JSON
+
+
+if __name__ == "__main__":
+    if "--sched-only" in sys.argv:
+        write_sched_bench()
+    else:
+        smoke = "--smoke" in sys.argv
+        run(n_ticks=300 if smoke else None,
+            n_req=48 if smoke else 160,
+            seeds=2 if smoke else 5)

@@ -20,6 +20,7 @@ from benchmarks import (  # noqa: E402
     latency_calibration,
     layerwise,
     main_policy,
+    multi_class,
     overload_policy,
     predictor_noise,
     sharegpt_trace,
@@ -38,6 +39,8 @@ SUITES = [
     ("latency_calibration[T3]", latency_calibration.run),
     # beyond-paper: client stack vs per-architecture provider physics
     ("arch_physics[ext]", arch_physics.run),
+    # beyond-paper: config-driven K-class scheduling (tenants/lanes sweep)
+    ("multi_class[ext]", multi_class.run),
 ]
 
 

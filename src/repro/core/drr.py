@@ -1,17 +1,24 @@
-"""Layer 1 — allocation (paper §3.1.1).
+"""Layer 1 — allocation (paper §3.1.1), generalized to K classes.
 
-Adaptive Deficit Round Robin over the two service classes plus the
+Adaptive Deficit Round Robin over K service classes plus the
 alternative allocation policies evaluated in the paper (§4.5/§4.6):
-naive FIFO, quota-tiered isolation, fair queuing, short-priority.
+naive FIFO, quota-tiered isolation, fair queuing, strict priority.
+K is static (the length of the per-class arrays in `PolicyConfig` and
+of the deficit vector), so one trace serves any class count and trace
+size is O(1) in K.
 
 Semantics implemented (one *dispatch slot* at a time):
   * each backlogged class accrues `quantum * w_eff` deficit per slot;
   * a class may send iff its deficit covers the estimated cost (p50
     tokens) of the request its ordering layer would release;
-  * work-conserving borrowing: when exactly one class is backlogged it
-    additionally consumes the idle peer's quantum;
-  * congestion adaptation: the interactive weight scales by
-    (1 + kappa * severity) so protected share grows under stress.
+  * work-conserving borrowing: idle classes' quanta are redistributed
+    to backlogged classes in proportion to their effective weights
+    (for K=2 this reduces exactly to the classic "lone class consumes
+    the idle peer's quantum" rule);
+  * congestion adaptation: protected classes (`class_protect`) scale
+    their weight by (1 + kappa * severity) so protected share grows
+    under stress, and keep their inflight cap while unprotected caps
+    shrink.
 
 Returns a `ClassChoice` — which class (if any) may release one request
 this slot — plus updated deficits.  Branchless across allocation modes:
@@ -33,42 +40,41 @@ from repro.core.policy import (
     ALLOC_SP,
     PolicyConfig,
 )
-from repro.core.types import N_CLASSES
 
 
 class ClassChoice(NamedTuple):
     cls_id: jnp.ndarray        # () int32 selected class (valid iff send_ok)
     send_ok: jnp.ndarray       # () bool a release is allowed this slot
     ignore_class: jnp.ndarray  # () bool pick request globally (naive lane)
-    deficit: jnp.ndarray       # (2,) f32 updated deficit counters
+    deficit: jnp.ndarray       # (K,) f32 updated deficit counters
     rr_turn: jnp.ndarray       # () int32 updated round-robin pointer
 
 
 def effective_weights(cfg: PolicyConfig, severity) -> jnp.ndarray:
-    """Congestion-aware weights: interactive share grows with severity."""
-    w = cfg.drr_weights
-    scale = jnp.asarray([1.0 + cfg.congestion_kappa * severity, 1.0])
-    return w * scale
+    """Congestion-aware weights: protected share grows with severity."""
+    return cfg.drr_weights * (
+        1.0 + cfg.congestion_kappa * severity * cfg.class_protect
+    )
 
 
 def allocate(
     cfg: PolicyConfig,
     *,
-    backlog: jnp.ndarray,        # (2,) int32 eligible count per class
-    head_cost: jnp.ndarray,      # (2,) f32 p50 of each class's would-be pick
-    inflight_cls: jnp.ndarray,   # (2,) int32 in-flight count per class
+    backlog: jnp.ndarray,        # (K,) int32 eligible count per class
+    head_cost: jnp.ndarray,      # (K,) f32 p50 of each class's would-be pick
+    inflight_cls: jnp.ndarray,   # (K,) int32 in-flight count per class
     inflight_total: jnp.ndarray, # () int32
     severity: jnp.ndarray,       # () f32 overload severity in [0, ~1.5]
-    deficit: jnp.ndarray,        # (2,) f32
+    deficit: jnp.ndarray,        # (K,) f32
     rr_turn: jnp.ndarray,        # () int32
 ) -> ClassChoice:
+    k = deficit.shape[-1]
     under_cap = inflight_total < cfg.max_inflight
-    # per-class inflight caps; the heavy cap shrinks with severity so
-    # interactive traffic keeps protected share under stress without
-    # leaving capacity idle when the heavy class is empty.
-    cap_eff = cfg.class_cap * jnp.asarray(
-        [1.0, jnp.maximum(1.0 - cfg.cap_kappa * jnp.minimum(severity, 1.2), 0.3)]
-    )
+    # per-class inflight caps; unprotected caps shrink with severity so
+    # protected traffic keeps its share under stress without leaving
+    # capacity idle when the unprotected classes are empty.
+    shrink = jnp.maximum(1.0 - cfg.cap_kappa * jnp.minimum(severity, 1.2), 0.3)
+    cap_eff = cfg.class_cap * jnp.where(cfg.class_protect > 0, 1.0, shrink)
     cap_eff = jnp.maximum(cap_eff, 1.0)
     open_cls = inflight_cls < cap_eff
     has_work = (backlog > 0) & open_cls
@@ -88,12 +94,11 @@ def allocate(
     def _quota(_):
         # tiered isolation: a class may send iff its own inflight < quota.
         # No borrowing — strict silos (this is what strands heavy work).
-        can = has_work
-        # prefer interactive when both allowed (tiering)
-        cls_id = jnp.where(can[0], 0, 1)
+        # Tiering prefers the lowest class index (argmax = first True).
+        cls_id = jnp.argmax(has_work)
         return ClassChoice(
             cls_id=i32(cls_id),
-            send_ok=can.any() & under_cap,
+            send_ok=any_work & under_cap,
             ignore_class=jnp.asarray(False),
             deficit=deficit,
             rr_turn=rr_turn,
@@ -101,22 +106,28 @@ def allocate(
 
     def _adrr(_):
         w_eff = effective_weights(cfg, severity)
-        # classic DRR: backlogged classes accrue quantum*w; borrowing gives
-        # an idle peer's quantum to the (single) backlogged class.
+        # classic DRR: backlogged classes accrue quantum*w; borrowing
+        # redistributes idle classes' quanta to backlogged ones in
+        # proportion to effective weight (work conservation).
         accrue = cfg.drr_quantum * w_eff * has_work
-        lone = has_work & (~has_work[::-1])          # backlogged while peer idle
-        borrow = cfg.drr_quantum * w_eff[::-1] * lone
+        idle_quota = (cfg.drr_quantum * w_eff * (~has_work)).sum()
+        w_backlogged = w_eff * has_work
+        denom = w_backlogged.sum()
+        share = jnp.where(denom > 0, w_backlogged / denom, 0.0)
+        borrow = idle_quota * share
         d = jnp.minimum(deficit + accrue + borrow, cfg.deficit_cap)
         # affordability is clamped by the cap so a single oversized request
         # can never starve behind an unreachable deficit target
         affordable = has_work & (d >= jnp.minimum(head_cost, cfg.deficit_cap))
         # among affordable classes pick the largest normalized deficit
-        pref = jnp.where(affordable, d * cfg.drr_weights / cfg.drr_weights.sum(), -jnp.inf)
+        pref = jnp.where(
+            affordable, d * cfg.drr_weights / cfg.drr_weights.sum(), -jnp.inf
+        )
         cls_id = jnp.argmax(pref)
         ok = affordable.any() & under_cap
         d = jnp.where(
             ok,
-            d - jax.nn.one_hot(cls_id, N_CLASSES) * head_cost[cls_id],
+            d - jax.nn.one_hot(cls_id, k) * head_cost[cls_id],
             d,
         )
         # deficits of idle classes reset (classic DRR drops state when empty)
@@ -130,10 +141,10 @@ def allocate(
         )
 
     def _fq(_):
-        # strict round robin across classes; skip an empty class
-        first = rr_turn % N_CLASSES
-        second = (rr_turn + 1) % N_CLASSES
-        cls_id = jnp.where(has_work[first], first, second)
+        # strict round robin across classes; skip empty classes by taking
+        # the first backlogged class in rotation order from rr_turn
+        offsets = (rr_turn + jnp.arange(k)) % k
+        cls_id = offsets[jnp.argmax(has_work[offsets])]
         ok = any_work & under_cap
         turn = jnp.where(ok, cls_id + 1, rr_turn)
         return ClassChoice(
@@ -145,7 +156,8 @@ def allocate(
         )
 
     def _sp(_):
-        cls_id = jnp.where(has_work[0], 0, 1)
+        # strict priority: lowest backlogged class index first
+        cls_id = jnp.argmax(has_work)
         return ClassChoice(
             cls_id=i32(cls_id),
             send_ok=any_work & under_cap,

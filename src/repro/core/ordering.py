@@ -1,12 +1,19 @@
-"""Layer 2 — intra-class ordering (paper §3.1.2).
+"""Layer 2 — intra-class ordering (paper §3.1.2), generalized to K classes.
 
 Among requests eligible under the fairness constraints, score each
 candidate with the paper's slowdown-aware feasible-set rule
 
     score = w1 * (wait / cost) - w2 * (size / ref) + w3 * urgency
 
-and release the argmax.  The interactive class is FIFO (the paper applies
-the scoring rule to the heavy class; shorts have near-uniform cost).
+and release the argmax.  Whether a class orders FIFO or scored is a
+per-class policy bit (`PolicyConfig.ord_scored`); the paper's scheme is
+FIFO for the interactive class (shorts have near-uniform cost) and
+scored for heavy.
+
+`select_per_class` is the vectorized entry point: FIFO keys and scores
+are computed once over the request axis and reduced along a (K, N)
+class-mask, so the trace contains no Python loop over classes and is
+O(1) in K.
 
 All functions are pure and operate on the full struct-of-arrays with a
 feasibility mask, so they jit/vmap cleanly and can be swapped for the
@@ -60,14 +67,26 @@ def select_scored(batch: RequestBatch, mask, now_ms, cfg: PolicyConfig):
     return idx, mask.any()
 
 
-def select_for_class(batch: RequestBatch, mask, cls_id, now_ms, cfg: PolicyConfig):
-    """Class 0 (interactive) is FIFO; class 1 (heavy) uses the scored rule.
+def select_per_class(
+    batch: RequestBatch,
+    cls_mask: jnp.ndarray,  # (K, N) bool — eligible requests per class
+    now_ms,
+    cfg: PolicyConfig,
+):
+    """Vectorized head-of-line pick for every class at once.
 
-    `cls_id` is a traced scalar, so blend the two selections branchlessly.
+    Returns (idx, ok): (K,) int32 candidate per class and (K,) bool
+    whether the class has any eligible request.  FIFO keys and scores
+    are evaluated once over N; the per-class argmin/argmax is a masked
+    reduction over the class axis — no Python loop, trace O(1) in K.
     """
-    fifo_idx, fifo_any = select_fifo(batch, mask)
-    sc_idx, sc_any = select_scored(batch, mask, now_ms, cfg)
-    use_score = cls_id == 1
-    idx = jnp.where(use_score, sc_idx, fifo_idx)
-    ok = jnp.where(use_score, sc_any, fifo_any)
+    fifo_key = jnp.where(cls_mask, batch.arrival_ms[None, :], jnp.inf)
+    scores = jnp.where(
+        cls_mask, order_scores(batch, now_ms, cfg)[None, :], _NEG
+    )
+    fifo_idx = jnp.argmin(fifo_key, axis=1)
+    sc_idx = jnp.argmax(scores, axis=1)
+    use_score = cfg.ord_scored > 0
+    idx = jnp.where(use_score, sc_idx, fifo_idx).astype(jnp.int32)
+    ok = cls_mask.any(axis=1)
     return idx, ok

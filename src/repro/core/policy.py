@@ -41,16 +41,25 @@ ALLOC_SP = 4        # short-priority: interactive strictly first
 
 class PolicyConfig(NamedTuple):
     """All fields are jnp scalars/arrays => one XLA program serves every
-    strategy; sweeps vmap over stacked PolicyConfigs."""
+    strategy; sweeps vmap over stacked PolicyConfigs.
+
+    The class count K is carried implicitly as the (static) length of the
+    per-class arrays (`drr_weights`, `class_cap`, `class_protect`,
+    `ord_scored`); `n_classes(cfg)` reads it back.  Every per-class array
+    must share one K.
+    """
 
     # --- allocation (layer 1) ---
     alloc_mode: jnp.ndarray          # () int32, one of ALLOC_*
     drr_quantum: jnp.ndarray         # () f32 tokens added per backlogged turn
-    drr_weights: jnp.ndarray         # (2,) f32 base class weights
-    congestion_kappa: jnp.ndarray    # () f32 short-weight scaling vs severity
+    drr_weights: jnp.ndarray         # (K,) f32 base class weights
+    congestion_kappa: jnp.ndarray    # () f32 protected-weight scaling vs severity
     deficit_cap: jnp.ndarray         # () f32 max deficit (anti-burst)
-    class_cap: jnp.ndarray           # (2,) f32 per-class inflight caps
-    cap_kappa: jnp.ndarray           # () f32 severity shrink of the heavy cap
+    class_cap: jnp.ndarray           # (K,) f32 per-class inflight caps
+    cap_kappa: jnp.ndarray           # () f32 severity shrink of unprotected caps
+    class_protect: jnp.ndarray       # (K,) f32 0/1 — protected lanes gain
+                                     #        weight and keep their cap under
+                                     #        stress (paper: interactive lane)
     max_inflight: jnp.ndarray        # () f32 client-wide concurrency cap
     load_ref: jnp.ndarray            # () f32 severity normalizer for
                                      #        provider load (decoupled from the
@@ -59,6 +68,9 @@ class PolicyConfig(NamedTuple):
                                      #        comfortable operating point)
 
     # --- ordering (layer 2) ---
+    ord_scored: jnp.ndarray          # (K,) f32 0/1 — scored rule per class
+                                     #        (0 = FIFO; paper: shorts FIFO,
+                                     #        heavy scored)
     ord_w_wait: jnp.ndarray          # () f32 weight on wait/cost
     ord_w_size: jnp.ndarray          # () f32 weight on size/ref (penalty)
     ord_w_urg: jnp.ndarray           # () f32 weight on deadline urgency
@@ -87,6 +99,16 @@ def _f(x) -> jnp.ndarray:
     return jnp.asarray(x, jnp.float32)
 
 
+def n_classes(cfg: PolicyConfig) -> int:
+    """Static class count K carried by the per-class policy arrays."""
+    return cfg.drr_weights.shape[-1]
+
+
+# Default client-wide concurrency budget — shared by base_policy and the
+# K-class cap sizing so the two can't drift apart.
+DEFAULT_MAX_INFLIGHT = 20.0
+
+
 def base_policy(**overrides) -> PolicyConfig:
     """The Final (OLC) configuration — paper defaults."""
     cfg = dict(
@@ -100,8 +122,10 @@ def base_policy(**overrides) -> PolicyConfig:
         # interactive traffic keeps protected share without idling capacity.
         class_cap=_f([16.0, 4.0]),
         cap_kappa=_f(0.5),
-        max_inflight=_f(20.0),
+        class_protect=_f([1.0, 0.0]),
+        max_inflight=_f(DEFAULT_MAX_INFLIGHT),
         load_ref=_f(6.0),
+        ord_scored=_f([0.0, 1.0]),
         ord_w_wait=_f(1.0),
         ord_w_size=_f(0.6),
         ord_w_urg=_f(0.8),
@@ -207,6 +231,67 @@ def with_information(cfg: PolicyConfig, level: str) -> PolicyConfig:
     if level in ("coarse", "oracle"):
         return cfg
     raise ValueError(f"unknown information level: {level}")
+
+
+# ---------------------------------------------------------------------------
+# K-class builders (beyond-paper scenarios) — the tentpole generalization.
+# The paper's decomposition is explicitly objective-agnostic; these builders
+# instantiate the same three-layer stack for richer class structures.
+# ---------------------------------------------------------------------------
+
+def kclass_policy(
+    k: int,
+    *,
+    weights=None,
+    caps=None,
+    protect=None,
+    scored=None,
+    **overrides,
+) -> PolicyConfig:
+    """Generic K-class policy: seed defaults with (K,)-shaped class arrays.
+
+    Unspecified per-class arrays fall back to symmetric defaults: uniform
+    weights, evenly split inflight caps, no protected lane, scored
+    ordering everywhere.  `overrides` pass through to `base_policy`.
+    """
+    if k < 1:
+        raise ValueError(f"n_classes must be >= 1, got {k}")
+    w = _f([1.0] * k) if weights is None else _f(weights)
+    # split the global concurrency budget with slack so borrowing-like
+    # work conservation still has room (mirrors the seed's 16+4 > 20);
+    # honor a max_inflight override so caps track the actual budget
+    budget = float(overrides.get("max_inflight", DEFAULT_MAX_INFLIGHT))
+    default_cap = max(2.0, round(2.0 * budget / k))
+    c = _f([default_cap] * k) if caps is None else _f(caps)
+    p = _f([0.0] * k) if protect is None else _f(protect)
+    s = _f([1.0] * k) if scored is None else _f(scored)
+    for name, arr in (("weights", w), ("caps", c), ("protect", p), ("scored", s)):
+        if arr.shape != (k,):
+            raise ValueError(f"{name} must have shape ({k},), got {arr.shape}")
+    return base_policy(
+        drr_weights=w, class_cap=c, class_protect=p, ord_scored=s, **overrides
+    )
+
+
+def multi_tenant_policy(k: int, **overrides) -> PolicyConfig:
+    """K symmetric tenants: uniform DRR weights, per-tenant inflight caps,
+    scored ordering in every lane, no protected lane (fairness is purely
+    the allocation layer's deficit accounting)."""
+    return kclass_policy(k, **overrides)
+
+
+def per_bucket_policy(**overrides) -> PolicyConfig:
+    """Four lanes keyed directly on the token bucket (short/medium/long/
+    xlong): the short lane keeps the paper's protected-FIFO role; the
+    other three use the scored rule with descending weight."""
+    return kclass_policy(
+        4,
+        weights=[2.0, 1.0, 0.7, 0.4],
+        caps=[16.0, 6.0, 4.0, 3.0],
+        protect=[1.0, 0.0, 0.0, 0.0],
+        scored=[0.0, 1.0, 1.0, 1.0],
+        **overrides,
+    )
 
 
 STRATEGIES = {

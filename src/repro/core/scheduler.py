@@ -1,4 +1,4 @@
-"""The fused three-layer client scheduler (paper §3).
+"""The fused three-layer client scheduler (paper §3), K-class generalized.
 
 `schedule_slot` composes the layers exactly as the paper describes:
 the allocation layer selects a class; the ordering layer names a concrete
@@ -7,23 +7,31 @@ It is a pure function of (PolicyConfig, RequestBatch, SimState) and
 returns a `SlotDecision`; the simulation engine (repro.sim.engine) and
 the live serving adapter (repro.serving.blackbox) both consume it, so
 the policy logic is written once.
+
+The class count K is static — the length of `PolicyConfig`'s per-class
+arrays and of `SchedState.deficit`.  All per-class computation here is
+vectorized over a (K, N) class-membership mask (no Python loop over
+classes), so trace size and compile time are O(1) in K and the same
+compiled program shape serves the paper's 2-lane split, a per-bucket
+4-lane scheme, or K tenants.
 """
 from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import drr, ordering, overload
-from repro.core.policy import PolicyConfig
-from repro.core.types import INFLIGHT, N_CLASSES, RequestBatch, SimState
+from repro.core.policy import PolicyConfig, n_classes
+from repro.core.types import INFLIGHT, RequestBatch, SimState
 
 
 class SlotDecision(NamedTuple):
     action: jnp.ndarray       # () int32: -1 idle, 0 admit, 1 defer, 2 reject
     req_idx: jnp.ndarray      # () int32 target request (valid iff action>=0)
     severity: jnp.ndarray     # () f32 overload severity used
-    deficit: jnp.ndarray      # (2,) f32 updated allocation deficits
+    deficit: jnp.ndarray      # (K,) f32 updated allocation deficits
     rr_turn: jnp.ndarray      # () int32 updated FQ pointer
 
 
@@ -31,44 +39,41 @@ IDLE = -1
 
 
 def effective_class(cfg: PolicyConfig, batch: RequestBatch) -> jnp.ndarray:
-    """Info-ladder: without class routing every request shares one lane."""
-    return jnp.where(cfg.route_by_class > 0, batch.cls, 0).astype(jnp.int32)
+    """Info-ladder: without class routing every request shares one lane.
+
+    Class ids are clipped into [0, K) so a batch generated for a larger
+    class scheme degrades gracefully instead of indexing out of range.
+    """
+    k = n_classes(cfg)
+    cls = jnp.clip(batch.cls, 0, k - 1)
+    return jnp.where(cfg.route_by_class > 0, cls, 0).astype(jnp.int32)
 
 
 def schedule_slot(
     cfg: PolicyConfig, batch: RequestBatch, state: SimState
 ) -> SlotDecision:
+    k = n_classes(cfg)
     now = state.now_ms
     elig = ordering.eligibility(
         batch, state.req.status, state.req.defer_until, now
     )
     eff_cls = effective_class(cfg, batch)
 
+    # (K, N) class-membership masks — the vectorized class axis
+    cls_onehot = eff_cls[None, :] == jnp.arange(k, dtype=jnp.int32)[:, None]
+    elig_kn = cls_onehot & elig[None, :]
+
     # --- layer 2 first per class: the allocation layer needs each class's
     # would-be head cost to test deficit affordability (classic DRR).
-    cand_idx = []
-    cand_ok = []
-    head_cost = []
-    for c in range(N_CLASSES):
-        mask = elig & (eff_cls == c)
-        idx, ok = ordering.select_for_class(
-            batch, mask, jnp.asarray(c, jnp.int32), now, cfg
-        )
-        cand_idx.append(idx)
-        cand_ok.append(ok)
-        head_cost.append(jnp.where(ok, batch.p50[idx], jnp.inf))
-    cand_idx = jnp.stack(cand_idx)
-    cand_ok = jnp.stack(cand_ok)
-    head_cost = jnp.stack(head_cost)
+    cand_idx, cand_ok = ordering.select_per_class(batch, elig_kn, now, cfg)
+    head_cost = jnp.where(cand_ok, batch.p50[cand_idx], jnp.inf)
 
-    backlog = jnp.stack(
-        [(elig & (eff_cls == c)).sum() for c in range(N_CLASSES)]
-    ).astype(jnp.int32)
+    backlog = elig_kn.sum(axis=1).astype(jnp.int32)
 
     inflight_mask = state.req.status == INFLIGHT
-    inflight_cls = jnp.stack(
-        [(inflight_mask & (eff_cls == c)).sum() for c in range(N_CLASSES)]
-    ).astype(jnp.int32)
+    inflight_cls = (cls_onehot & inflight_mask[None, :]).sum(axis=1).astype(
+        jnp.int32
+    )
     inflight_total = state.provider.inflight
 
     # --- layer 3 signals (client-observable only)
@@ -108,10 +113,8 @@ def schedule_slot(
 
     # DRR charged the head cost assuming a release; refund it when the
     # overload layer blocked the release (defer/reject consumed no share).
-    import jax
-
     refund = (
-        jax.nn.one_hot(choice.cls_id, N_CLASSES)
+        jax.nn.one_hot(choice.cls_id, k)
         * head_cost[choice.cls_id]
         * ((action == overload.DEFER) | (action == overload.REJECT))
         * (~choice.ignore_class)

@@ -31,7 +31,12 @@ ABANDONED = 4
 SHORT, MEDIUM, LONG, XLONG = 0, 1, 2, 3
 N_BUCKETS = 4
 
-# Service classes (paper: interactive "short" lane vs "heavy" lane)
+# Service classes.  The paper's scheme is two lanes — interactive
+# (short) vs heavy (everything else) — but the whole stack is now
+# parameterized by a static class count K: `PolicyConfig` carries
+# (K,)-shaped per-class arrays, `SchedState.deficit` is (K,), and the
+# scheduler vectorizes over the class axis, so trace size and compile
+# time are O(1) in K.  `N_CLASSES` remains the default (paper) K = 2.
 CLS_INTERACTIVE = 0
 CLS_HEAVY = 1
 N_CLASSES = 2
@@ -48,7 +53,7 @@ class RequestBatch(NamedTuple):
 
     arrival_ms: jnp.ndarray      # (N,) float32 absolute arrival time
     bucket: jnp.ndarray          # (N,) int32 in [0, 4)
-    cls: jnp.ndarray             # (N,) int32 service class (0/1)
+    cls: jnp.ndarray             # (N,) int32 service class in [0, K)
     true_tokens: jnp.ndarray     # (N,) float32 realized output tokens
     p50: jnp.ndarray             # (N,) float32 policy-facing coarse prior
     p90: jnp.ndarray             # (N,) float32 policy-facing tail prior
@@ -73,7 +78,7 @@ class RequestState(NamedTuple):
 class SchedState(NamedTuple):
     """Scheduler-internal state (allocation layer + overload signals)."""
 
-    deficit: jnp.ndarray       # (N_CLASSES,) float32 DRR deficit counters
+    deficit: jnp.ndarray       # (K,) float32 DRR deficit counters
     rr_turn: jnp.ndarray       # () int32 round-robin pointer (fair queuing)
     ema_latency_ratio: jnp.ndarray  # () float32 observed/expected latency EMA
     n_completed_obs: jnp.ndarray    # () int32 completions observed so far
@@ -103,9 +108,9 @@ def init_request_state(n: int) -> RequestState:
     )
 
 
-def init_sched_state() -> SchedState:
+def init_sched_state(n_classes: int = N_CLASSES) -> SchedState:
     return SchedState(
-        deficit=jnp.zeros((N_CLASSES,), jnp.float32),
+        deficit=jnp.zeros((n_classes,), jnp.float32),
         rr_turn=jnp.zeros((), jnp.int32),
         ema_latency_ratio=jnp.ones((), jnp.float32),
         n_completed_obs=jnp.zeros((), jnp.int32),
@@ -119,10 +124,10 @@ def init_provider_state() -> ProviderState:
     )
 
 
-def init_sim_state(n: int) -> SimState:
+def init_sim_state(n: int, n_classes: int = N_CLASSES) -> SimState:
     return SimState(
         now_ms=jnp.zeros((), jnp.float32),
         req=init_request_state(n),
-        sched=init_sched_state(),
+        sched=init_sched_state(n_classes),
         provider=init_provider_state(),
     )

@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.config import ModelConfig, ServeConfig
 from repro.core import overload as olc
-from repro.core.policy import PolicyConfig
+from repro.core.policy import PolicyConfig, n_classes
 from repro.core.scheduler import IDLE, schedule_slot
 from repro.core.types import (
     ABANDONED,
@@ -43,6 +43,9 @@ class Request:
     max_new: int                # realized output tokens (the "true" cost)
     p50: float                  # coarse prior available at submission
     bucket: int
+    cls: Optional[int] = None   # service class; None = paper 2-lane
+                                # bucket split (K-class policies expect
+                                # the caller to tag tenant/lane ids)
     arrival_s: float = 0.0
     submit_s: float = 0.0
     finish_s: float = 0.0
@@ -80,18 +83,22 @@ class ScheduledClient:
         compute-bound on CPU); the scheduler still controls ORDER and
         admit/defer/reject, which is what the paper's layers own."""
         n = len(requests)
+        buckets = jnp.asarray([r.bucket for r in requests], jnp.int32)
+        default_cls = np.asarray(bucket_to_class(buckets))  # one device pull
+        cls = jnp.asarray(
+            [r.cls if r.cls is not None else default_cls[i]
+             for i, r in enumerate(requests)], jnp.int32)
         batch = RequestBatch(
             arrival_ms=jnp.asarray([r.arrival_s * 1e3 for r in requests], jnp.float32),
-            bucket=jnp.asarray([r.bucket for r in requests], jnp.int32),
-            cls=bucket_to_class(jnp.asarray([r.bucket for r in requests], jnp.int32)),
+            bucket=buckets,
+            cls=cls,
             true_tokens=jnp.asarray([r.max_new for r in requests], jnp.float32),
             p50=jnp.asarray([r.p50 for r in requests], jnp.float32),
             p90=jnp.asarray([r.p50 * 1.8 for r in requests], jnp.float32),
-            deadline_budget_ms=DEADLINE_BUDGET_MS[
-                jnp.asarray([r.bucket for r in requests], jnp.int32)],
+            deadline_budget_ms=DEADLINE_BUDGET_MS[buckets],
             valid=jnp.ones((n,), bool),
         )
-        state = init_sim_state(n)
+        state = init_sim_state(n, n_classes(self.policy))
         t0 = time.monotonic()
 
         done = 0

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import overload as olc
-from repro.core.policy import PolicyConfig
+from repro.core.policy import PolicyConfig, n_classes
 from repro.core.scheduler import IDLE, schedule_slot
 from repro.core.types import (
     ABANDONED,
@@ -71,9 +71,8 @@ def _complete_and_timeout(
     status = jnp.where(done_now, COMPLETED, jnp.where(timed_out, ABANDONED, req.status))
 
     # tail signal: observed end-to-end latency vs unloaded expectation
-    latency = req.finish_ms - batch.arrival_ms
     expected = unloaded_latency_ms(phys, batch.true_tokens)
-    ratio = jnp.where(done_now, latency / jnp.maximum(expected, 1.0), 0.0)
+    ratio = jnp.where(done_now, e2e / jnp.maximum(expected, 1.0), 0.0)
     k = done_now.sum()
     mean_ratio = jnp.where(k > 0, ratio.sum() / jnp.maximum(k, 1), 0.0)
     ema = jnp.where(
@@ -176,7 +175,7 @@ def run_sim(
     sim_cfg: SimConfig = SimConfig(),
 ) -> SimState:
     """Run the full horizon; returns the final SimState (jit-friendly)."""
-    state0 = init_sim_state(batch.n)
+    state0 = init_sim_state(batch.n, n_classes(policy))
 
     def tick(state: SimState, t_idx):
         now = (t_idx + 1).astype(jnp.float32) * sim_cfg.dt_ms

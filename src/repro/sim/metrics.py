@@ -1,10 +1,17 @@
-"""Joint metrics (paper §4.3).
+"""Joint metrics (paper §4.3), with per-class vectors for K-class runs.
 
 The paper insists these be read together: tails alone can improve "for
 the wrong reason" (withheld work), so every run reports short P95,
 global P95, completion rate, deadline satisfaction, useful goodput
 (completed AND SLO-meeting requests per second), makespan, and the
 overload action counts that make shedding legible.
+
+The K-class generalization adds (K,)-shaped per-class vectors — P95,
+completion rate, deadline satisfaction, goodput — computed with one
+masked reduction over a (K, N) class mask (vmap'd percentile), keeping
+the block O(1) in K inside the trace.  The seed's bucket-keyed scalars
+(short/long P95 etc.) are retained so every existing table reads the
+same.
 
 Masked percentiles are computed by sorting with +inf fill so the whole
 metric block stays inside jit/vmap.
@@ -13,6 +20,7 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.types import (
@@ -51,9 +59,22 @@ class SimMetrics(NamedTuple):
     n_defer_events: jnp.ndarray
     n_abandoned: jnp.ndarray
     mean_severity_proxy: jnp.ndarray
+    # --- per-class joint metrics (K-class runs; K=2 -> lane 0 = short,
+    # lane 1 = heavy under the paper2 scheme) ---
+    class_p95_ms: jnp.ndarray          # (K,) f32 completed-latency P95
+    class_completion_rate: jnp.ndarray # (K,) f32 over the accepted set
+    class_satisfaction: jnp.ndarray    # (K,) f32 deadline-met fraction
+    class_goodput_rps: jnp.ndarray     # (K,) f32 met requests / makespan
+    class_n_requests: jnp.ndarray      # (K,) int32 offered per class
 
 
-def compute_metrics(batch: RequestBatch, final: SimState) -> SimMetrics:
+def compute_metrics(
+    batch: RequestBatch, final: SimState, n_classes: int | None = None
+) -> SimMetrics:
+    if n_classes is None:
+        # the deficit vector carries the run's static K — infer it so a
+        # direct call can't silently merge lanes into a 2-class view
+        n_classes = final.sched.deficit.shape[-1]
     req = final.req
     done = (req.status == COMPLETED) & batch.valid
     latency = req.finish_ms - batch.arrival_ms
@@ -80,6 +101,20 @@ def compute_metrics(batch: RequestBatch, final: SimState) -> SimMetrics:
     glob_mean = jnp.nanmean(glob_lat)
     glob_std = jnp.sqrt(jnp.nanmean((glob_lat - glob_mean) ** 2))
 
+    # --- per-class vectors: one (K, N) masked reduction, O(1) in K ---
+    cls = jnp.clip(batch.cls, 0, n_classes - 1)
+    cls_kn = (
+        cls[None, :] == jnp.arange(n_classes, dtype=jnp.int32)[:, None]
+    ) & batch.valid[None, :]
+    done_kn = cls_kn & done[None, :]
+    met_kn = cls_kn & met[None, :]
+    accepted_k = (cls_kn & ~rejected[None, :]).sum(axis=1)
+    done_k = done_kn.sum(axis=1)
+    met_k = met_kn.sum(axis=1)
+    class_p95 = jax.vmap(
+        lambda m: masked_percentile(latency, m, 0.95)
+    )(done_kn)
+
     return SimMetrics(
         short_p95_ms=masked_percentile(latency, short_mask, 0.95),
         short_p90_ms=masked_percentile(latency, short_mask, 0.90),
@@ -94,4 +129,9 @@ def compute_metrics(batch: RequestBatch, final: SimState) -> SimMetrics:
         n_defer_events=jnp.where(batch.valid, req.n_defers, 0).sum(),
         n_abandoned=((req.status == ABANDONED) & batch.valid).sum(),
         mean_severity_proxy=final.sched.ema_latency_ratio,
+        class_p95_ms=class_p95,
+        class_completion_rate=done_k / jnp.maximum(accepted_k, 1),
+        class_satisfaction=met_k / jnp.maximum(accepted_k, 1),
+        class_goodput_rps=met_k / (makespan / 1000.0),
+        class_n_requests=cls_kn.sum(axis=1).astype(jnp.int32),
     )

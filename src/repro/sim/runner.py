@@ -12,11 +12,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policy import PolicyConfig
+from repro.core.policy import PolicyConfig, n_classes
 from repro.sim.engine import SimConfig, run_sim
 from repro.sim.metrics import SimMetrics, compute_metrics
 from repro.sim.provider import ProviderPhysics, default_physics
-from repro.sim.workload import WorkloadConfig, generate
+from repro.sim.workload import WorkloadConfig, generate, n_classes_of
 
 
 @functools.partial(
@@ -32,7 +32,7 @@ def _run_seeds(
     def one(key):
         batch, jitter = generate(key, wl_cfg)
         final = run_sim(policy, batch, jitter, phys, sim_cfg)
-        return compute_metrics(batch, final)
+        return compute_metrics(batch, final, n_classes(policy))
 
     return jax.vmap(one)(keys)
 
@@ -48,6 +48,13 @@ def run_cell(
 ) -> SimMetrics:
     """Metrics stacked over `seeds` runs (leading axis = seed)."""
     phys = phys if phys is not None else default_physics()
+    wl_k = n_classes_of(wl_cfg.class_map)
+    pol_k = n_classes(policy)
+    if wl_k > pol_k:
+        raise ValueError(
+            f"workload lane scheme {wl_cfg.class_map!r} needs {wl_k} classes "
+            f"but the policy carries {pol_k}; build it with kclass_policy({wl_k})"
+        )
     keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(seed0, seed0 + seeds))
     return _run_seeds(policy, phys, keys, wl_cfg, sim_cfg)
 

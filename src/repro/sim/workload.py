@@ -5,6 +5,10 @@ Produces a `RequestBatch` (struct-of-arrays) for one seed:
   * bucket mix per regime (balanced 50/25/15/10, heavy 20/20/30/30,
     sharegpt 12/42/46/1 — the paper's published ShareGPT-English split),
   * realized output tokens per bucket,
+  * a service-class id per request under one of the lane schemes
+    (`class_map`): the paper's 2-lane short/heavy split (`paper2`),
+    a per-bucket 4-lane scheme (`bucket4`), or K symmetric tenants
+    assigned independently of bucket (`tenant<K>`, e.g. `tenant8`),
   * policy-facing p50/p90 priors at one of the four information-ladder
     levels (no_info / class_only / coarse / oracle),
   * optional multiplicative predictor noise L (paper §4.10): priors are
@@ -13,7 +17,9 @@ Produces a `RequestBatch` (struct-of-arrays) for one seed:
 
 All randomness is materialized here; the simulator itself is
 deterministic given a RequestBatch, which keeps the lax.scan engine
-replayable and the experiments seed-exact.
+replayable and the experiments seed-exact.  The `paper2` random stream
+is bit-identical to the seed generator (tenant assignment draws from a
+folded key, never perturbing the base streams).
 """
 from __future__ import annotations
 
@@ -98,11 +104,46 @@ class WorkloadConfig(NamedTuple):
     arrival_scale: float = 1.0    # multiplies the arrival rate; used by
                                   # per-arch physics sweeps to renormalize
                                   # offered load to a slower/faster provider
+    class_map: str = "paper2"     # lane scheme: paper2 | bucket4 | tenant<K>
 
 
 def bucket_to_class(bucket: jnp.ndarray) -> jnp.ndarray:
     """Interactive lane = short bucket; heavy lane = everything else."""
     return jnp.where(bucket == SHORT, CLS_INTERACTIVE, CLS_HEAVY).astype(jnp.int32)
+
+
+def n_classes_of(class_map: str) -> int:
+    """Static class count implied by a lane scheme."""
+    if class_map == "paper2":
+        return 2
+    if class_map == "bucket4":
+        return 4
+    if class_map.startswith("tenant"):
+        suffix = class_map[len("tenant"):]
+        if not suffix.isdigit() or int(suffix) < 1:
+            raise ValueError(
+                f"tenant scheme must be 'tenant<K>' with K >= 1 "
+                f"(e.g. 'tenant8'), got {class_map!r}")
+        return int(suffix)
+    raise ValueError(f"unknown class_map: {class_map!r}")
+
+
+def assign_class(
+    key: jax.Array, bucket: jnp.ndarray, class_map: str
+) -> jnp.ndarray:
+    """Service-class id per request under the given lane scheme.
+
+    `tenant<K>` draws ids from a key folded off the workload key, so the
+    base random streams (arrivals/buckets/tokens/priors) stay bit-exact
+    with the seed `paper2` generator.
+    """
+    if class_map == "paper2":
+        return bucket_to_class(bucket)
+    if class_map == "bucket4":
+        return bucket.astype(jnp.int32)
+    k = n_classes_of(class_map)  # validates the scheme string
+    k_tenant = jax.random.fold_in(key, 7)
+    return jax.random.randint(k_tenant, bucket.shape, 0, k, jnp.int32)
 
 
 def generate(key: jax.Array, cfg: WorkloadConfig) -> tuple[RequestBatch, jnp.ndarray]:
@@ -148,7 +189,7 @@ def generate(key: jax.Array, cfg: WorkloadConfig) -> tuple[RequestBatch, jnp.nda
         p50 = p50 * f
         p90 = p90 * f
 
-    cls = bucket_to_class(bucket)
+    cls = assign_class(key, bucket, cfg.class_map)
     jitter = jax.random.uniform(k_jit, (n,), minval=0.95, maxval=1.05)
 
     batch = RequestBatch(
