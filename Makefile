@@ -2,7 +2,7 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test test-fast bench bench-smoke bench-sched
+.PHONY: test test-fast bench bench-smoke bench-sched check-clean ci
 
 # Tier-1: full test suite (ROADMAP.md)
 test:
@@ -21,6 +21,17 @@ bench-smoke:
 	$(PY) benchmarks/multi_class.py --smoke
 
 # scheduler-throughput microbenchmark -> BENCH_scheduler.json
-# (slots/sec at K=2 vs K=8; the perf trajectory future PRs compare against)
+# (slots/sec at K=2 vs K=8 plus the batch-dispatch B x N sweep; the perf
+# trajectory future PRs compare against)
 bench-sched:
 	$(PY) benchmarks/multi_class.py --sched-only
+
+# repo hygiene: no bytecode may ever be tracked
+check-clean:
+	@bad=$$(git ls-files | grep -E '(^|/)__pycache__/|\.pyc$$' || true); \
+	if [ -n "$$bad" ]; then \
+		echo "ERROR: tracked bytecode files:"; echo "$$bad"; exit 1; \
+	fi; echo "check-clean: no tracked __pycache__/*.pyc"
+
+# CI entry point: hygiene check, tier-1 tests, CI-sized bench smoke
+ci: check-clean test bench-smoke

@@ -9,8 +9,13 @@ and reports:
     dispersion that the DRR allocation is supposed to bound;
   * scheduler-step wall-clock per K (the vectorized class axis must be
     no slower at K=2 than the seed two-lane path, and ~flat in K);
-  * a `BENCH_scheduler.json` microbenchmark artifact (slots/sec at K=2
-    vs K=8) so future PRs have a perf trajectory to compare against.
+  * batch-dispatch throughput: `schedule_batch` at B ∈ {1, 4, 16}
+    grants per tick × queue depth N ∈ {1e3, 1e5} — the multi-grant pass
+    amortizes the O(K·N) layer-2 work over B grants, so slots/sec must
+    scale super-linearly vs B sequential single-slot traces (the
+    acceptance bar is ≥2× at B=16 vs B=1 at equal tick budgets);
+  * a `BENCH_scheduler.json` microbenchmark artifact (both sweeps) so
+    future PRs have a perf trajectory to compare against.
 
 The K=2 cell runs the paper's `paper2` lane scheme with the seed policy
 (bit-exact with the seed scheduler — tests/test_multi_class.py), so its
@@ -31,13 +36,15 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.core.policy import base_policy, kclass_policy, n_classes  # noqa: E402
-from repro.core.scheduler import schedule_slot  # noqa: E402
+from repro.core.scheduler import schedule_batch, schedule_slot  # noqa: E402
 from repro.core.types import RequestBatch, init_sim_state  # noqa: E402
 from repro.sim import SimConfig, WorkloadConfig, run_cell, summarize  # noqa: E402
 
 from benchmarks.common import TABLE_DIR, Timer, write_csv  # noqa: E402
 
 K_SWEEP = (2, 4, 8)
+B_SWEEP = (1, 4, 16)           # grants per batched dispatch pass
+N_SWEEP = (1_000, 100_000)     # queue depths (requests resident)
 REGIMES = [("balanced", "medium"), ("heavy", "high")]
 MAX_K = max(K_SWEEP)
 BENCH_JSON = os.path.join(
@@ -122,6 +129,66 @@ def scheduler_step_bench(k: int, n_req: int = 256, iters: int = 300) -> dict:
     }
 
 
+def batch_dispatch_bench(b: int, n_req: int, iters: int = 100) -> dict:
+    """Wall-clock of one jitted schedule_batch granting up to B per call
+    at queue depth N.  slots/sec counts grant opportunities (B × calls),
+    the apples-to-apples rate against B sequential schedule_slot calls
+    at an equal tick budget."""
+    policy = base_policy()
+    wl = _workload_for(2, "heavy", "high", n_req)
+    from repro.sim.workload import generate
+
+    batch, _ = generate(jax.random.PRNGKey(0), wl)
+    state = init_sim_state(batch.n, n_classes(policy))._replace(
+        now_ms=jnp.float32(1e7))  # everything arrived: worst-case queue
+    step = jax.jit(schedule_batch, static_argnames=("max_grants", "backend"))
+
+    t0 = time.perf_counter()
+    d = step(policy, batch, state, max_grants=b)
+    jax.block_until_ready(d)
+    compile_s = time.perf_counter() - t0
+
+    run_s = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            d = step(policy, batch, state, max_grants=b)
+        jax.block_until_ready(d)
+        run_s = min(run_s, time.perf_counter() - t0)
+    return {
+        "max_grants": b,
+        "n_requests": n_req,
+        "compile_seconds": round(compile_s, 4),
+        "call_us": round(run_s / iters * 1e6, 2),
+        "slots_per_sec": round(b * iters / run_s, 1),
+    }
+
+
+def write_batch_bench(bench: dict, verbose: bool = True) -> None:
+    """B × N batch-dispatch sweep appended into the BENCH artifact."""
+    rows = []
+    for n_req in N_SWEEP:
+        iters = 100 if n_req <= 10_000 else 20
+        base_rate = None
+        for b in B_SWEEP:
+            r = batch_dispatch_bench(b, n_req, iters=iters)
+            rows.append(r)
+            if b == 1:
+                base_rate = r["slots_per_sec"]
+            if verbose:
+                print(f"  schedule_batch B={b:2d} N={n_req:6d}: "
+                      f"{r['call_us']:9.1f}us/call "
+                      f"({r['slots_per_sec']:.0f} slots/s)")
+        ratio = rows[-1]["slots_per_sec"] / base_rate
+        key = f"b16_vs_b1_rate_ratio_n{n_req}"
+        bench[key] = round(ratio, 3)
+        ok = ratio >= 2.0
+        print(f"  [{'PASS' if ok else 'WARN'}] N={n_req}: B=16 grants "
+              f"{ratio:.1f}x the B=1 slot rate at equal tick budgets "
+              f"({'meets' if ok else 'MISSES'} the >=2x bar)")
+    bench["batch_dispatch"] = rows
+
+
 def run(verbose: bool = True, n_ticks: int | None = None, n_req: int = 160,
         seeds: int = 5):
     sim_cfg = SimConfig(n_ticks=n_ticks if n_ticks is not None else 14000)
@@ -162,8 +229,9 @@ def run(verbose: bool = True, n_ticks: int | None = None, n_req: int = 160,
 
 
 def write_sched_bench(verbose: bool = True, iters: int = 300) -> str:
-    """Scheduler-throughput microbenchmark: slots/sec per K, written to
-    BENCH_scheduler.json so future PRs have a perf trajectory."""
+    """Scheduler-throughput microbenchmark: slots/sec per K plus the
+    batch-dispatch B × N sweep, written to BENCH_scheduler.json so
+    future PRs have a perf trajectory."""
     bench = {"benchmark": "schedule_slot", "steps": []}
     base_rate = None
     for k in K_SWEEP:
@@ -177,12 +245,18 @@ def write_sched_bench(verbose: bool = True, iters: int = 300) -> str:
                   f"compile {b['compile_seconds']:.2f}s)")
     k8_rate = bench["steps"][-1]["slots_per_sec"]
     bench["k8_vs_k2_rate_ratio"] = round(k8_rate / base_rate, 3)
-    with open(BENCH_JSON, "w") as f:
-        json.dump(bench, f, indent=2)
     ok = k8_rate >= 0.5 * base_rate
     print(f"  [{'PASS' if ok else 'WARN'}] K=8 scheduler rate "
           f"{'within' if ok else 'NOT within'} 2x of K=2 "
           f"(vectorized class axis)")
+    # persist the K sweep before the (longer) batch sweep, then rewrite
+    # with the batch rows — an interrupted B x N run can't lose the data
+    # already computed
+    with open(BENCH_JSON, "w") as f:
+        json.dump(bench, f, indent=2)
+    write_batch_bench(bench, verbose=verbose)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(bench, f, indent=2)
     return BENCH_JSON
 
 

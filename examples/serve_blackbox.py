@@ -2,8 +2,9 @@
 served behind an opaque submit() API, with the three-layer client
 scheduler deciding order and admission.
 
-This is the same `schedule_slot` the simulator exercises, driven by wall
-clock — proving the policy stack is not simulator-bound. The model is a
+This is the same batched `schedule_batch` the simulator exercises, driven
+by wall clock (one vectorized pass drains up to `max_grants` sends per
+poll) — proving the policy stack is not simulator-bound. The model is a
 reduced same-family variant of an assigned architecture (CPU-friendly);
 on TPU hardware the provider would wrap the pjit-sharded engine from
 repro/launch/serve.py instead.

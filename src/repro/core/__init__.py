@@ -8,4 +8,9 @@ Layers:
   * repro.core.policy    — PolicyConfig + named paper strategies
 """
 from repro.core.policy import PolicyConfig, strategy, STRATEGIES  # noqa: F401
-from repro.core.scheduler import SlotDecision, schedule_slot  # noqa: F401
+from repro.core.scheduler import (  # noqa: F401
+    BatchDecision,
+    SlotDecision,
+    schedule_batch,
+    schedule_slot,
+)

@@ -146,7 +146,9 @@ def allocate(
         offsets = (rr_turn + jnp.arange(k)) % k
         cls_id = offsets[jnp.argmax(has_work[offsets])]
         ok = any_work & under_cap
-        turn = jnp.where(ok, cls_id + 1, rr_turn)
+        # wrap the stored pointer: cls_id can be k-1, and rr_turn must
+        # stay in [0, k) rather than rely on the re-modulo above
+        turn = jnp.where(ok, (cls_id + 1) % k, rr_turn)
         return ClassChoice(
             cls_id=i32(cls_id),
             send_ok=ok,

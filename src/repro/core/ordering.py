@@ -13,20 +13,33 @@ scored for heavy.
 `select_per_class` is the vectorized entry point: FIFO keys and scores
 are computed once over the request axis and reduced along a (K, N)
 class-mask, so the trace contains no Python loop over classes and is
-O(1) in K.
+O(1) in K.  `select_top_b` generalizes it to a ranked (K, B) candidate
+list — the feed for the multi-grant batch dispatcher
+(`scheduler.schedule_batch`).
+
+Both selectors take a `backend` switch: "jnp" is the masked-reduction
+path; "pallas" routes the score+argmax through the fused
+`kernels/sched_score` kernel (one VMEM stream per argmax, no HBM score
+materialization), the intended path at production queue depths (10^5+
+pending).  FIFO classes run through the same kernel with weights
+[1, 0, 0, 1], unit cost, and -arrival_ms in the wait slot, making the
+score exactly -arrival_ms — argmax == argmin(arrival) with identical
+first-occurrence tie-breaking, independent of now_ms.
 
 All functions are pure and operate on the full struct-of-arrays with a
-feasibility mask, so they jit/vmap cleanly and can be swapped for the
-Pallas `sched_score` kernel at large queue depths.
+feasibility mask, so they jit/vmap cleanly.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.policy import PolicyConfig
 from repro.core.types import RequestBatch
 
 _NEG = -1e30
+
+BACKENDS = ("jnp", "pallas")
 
 
 def eligibility(batch: RequestBatch, status, defer_until, now_ms):
@@ -39,13 +52,22 @@ def eligibility(batch: RequestBatch, status, defer_until, now_ms):
     )
 
 
-def order_scores(batch: RequestBatch, now_ms, cfg: PolicyConfig):
-    """Paper scoring rule over every request (mask applied by caller)."""
+def _wait_and_urgency(batch: RequestBatch, now_ms):
+    """Shared score features — the single definition both the jnp path
+    (`order_scores`) and the Pallas kernel inputs build from, so the
+    backends cannot drift."""
     wait = jnp.maximum(now_ms - batch.arrival_ms, 0.0)
-    cost = jnp.maximum(batch.p50, 1.0)
     deadline_abs = batch.arrival_ms + batch.deadline_budget_ms
     time_left = deadline_abs - now_ms
-    urgency = jnp.clip(1.0 - time_left / jnp.maximum(batch.deadline_budget_ms, 1.0), 0.0, 2.0)
+    urgency = jnp.clip(
+        1.0 - time_left / jnp.maximum(batch.deadline_budget_ms, 1.0), 0.0, 2.0)
+    return wait, urgency
+
+
+def order_scores(batch: RequestBatch, now_ms, cfg: PolicyConfig):
+    """Paper scoring rule over every request (mask applied by caller)."""
+    wait, urgency = _wait_and_urgency(batch, now_ms)
+    cost = jnp.maximum(batch.p50, 1.0)
     return (
         cfg.ord_w_wait * (wait / cost)
         - cfg.ord_w_size * (cost / cfg.ord_ref_tokens)
@@ -67,26 +89,114 @@ def select_scored(batch: RequestBatch, mask, now_ms, cfg: PolicyConfig):
     return idx, mask.any()
 
 
+def _kernel_inputs(batch: RequestBatch, now_ms, cfg: PolicyConfig):
+    """Per-request feature vectors + per-class weight rows for the fused
+    kernel.  A FIFO class feeds -arrival_ms through the `wait` slot with
+    unit cost, zero urgency, and weights [1, 0, 0, 1], so its score is
+    exactly -arrival_ms: argmax == argmin(arrival) with identical
+    first-occurrence tie-breaking and no dependence on now_ms (a
+    `now - arrival` key would quantize distinct arrivals into f32 ties
+    at large now_ms)."""
+    wait, urgency = _wait_and_urgency(batch, now_ms)
+    fifo_key = -batch.arrival_ms
+    cost = batch.p50  # the kernel applies the max(cost, 1) clamp itself
+    w_scored = jnp.stack(
+        [cfg.ord_w_wait, cfg.ord_w_size, cfg.ord_w_urg, cfg.ord_ref_tokens]
+    ).astype(jnp.float32)
+    w_fifo = jnp.asarray([1.0, 0.0, 0.0, 1.0], jnp.float32)
+    return wait, fifo_key, cost, urgency, w_scored, w_fifo
+
+
 def select_per_class(
     batch: RequestBatch,
     cls_mask: jnp.ndarray,  # (K, N) bool — eligible requests per class
     now_ms,
     cfg: PolicyConfig,
+    backend: str = "jnp",
 ):
     """Vectorized head-of-line pick for every class at once.
 
     Returns (idx, ok): (K,) int32 candidate per class and (K,) bool
-    whether the class has any eligible request.  FIFO keys and scores
-    are evaluated once over N; the per-class argmin/argmax is a masked
-    reduction over the class axis — no Python loop, trace O(1) in K.
+    whether the class has any eligible request.  Defined as the b=1
+    column of `select_top_b` on both backends — one source of truth for
+    the ranking, so the head pick and the ranked list cannot drift
+    (`lax.top_k` keeps argmax/argmin first-occurrence tie-breaking).
+    `backend` must be static (a Python string) under jit.
     """
+    idx, _ = select_top_b(batch, cls_mask, now_ms, cfg, 1, backend=backend)
+    return idx[:, 0], cls_mask.any(axis=1)
+
+
+def rank_fifo(batch: RequestBatch, mask, b: int):
+    """Global FIFO ranked list: the first `b` eligible requests by
+    arrival (earliest first).  Returns ((L,) int32 indices, () int32
+    eligible count), L = min(b, N).  Feeds the naive (ignore-class)
+    lane of the batch dispatcher."""
+    b = min(int(b), batch.n)
+    key = jnp.where(mask, batch.arrival_ms, jnp.inf)
+    _, idx = jax.lax.top_k(-key, b)
+    return idx.astype(jnp.int32), mask.sum().astype(jnp.int32)
+
+
+def _select_top_b_pallas(batch, cls_mask, now_ms, cfg, b: int):
+    """Ranked (K, B) candidates via B successive fused-argmax passes per
+    class: release the argmax, mask it out, repeat.  B and K are small
+    and static.  Note this is K*B fused streams over N (each avoiding
+    the HBM score materialization), not a single pass — a true fused
+    top-B kernel is the follow-on if B grows past tens."""
+    from repro.kernels.sched_score.ops import sched_score_argmax
+
+    k = cls_mask.shape[0]
+    wait, fifo_key, cost, urgency, w_scored, w_fifo = _kernel_inputs(
+        batch, now_ms, cfg)
+    n = batch.n
+    rows = []
+    for c in range(k):
+        use_score = cfg.ord_scored[c] > 0
+        w = jnp.where(use_score, w_scored, w_fifo)
+        wait_c = jnp.where(use_score, wait, fifo_key)
+        cost_c = jnp.where(use_score, cost, 1.0)
+        urg_c = jnp.where(use_score, urgency, 0.0)
+        mask = cls_mask[c]
+        picks = []
+        for _ in range(b):
+            i, _ = sched_score_argmax(wait_c, cost_c, urg_c, mask, w)
+            i = jnp.maximum(i, 0).astype(jnp.int32)
+            picks.append(i)
+            mask = mask & (jnp.arange(n, dtype=jnp.int32) != i)
+        rows.append(jnp.stack(picks))
+    return jnp.stack(rows)
+
+
+def select_top_b(
+    batch: RequestBatch,
+    cls_mask: jnp.ndarray,  # (K, N) bool — eligible requests per class
+    now_ms,
+    cfg: PolicyConfig,
+    b: int,
+    backend: str = "jnp",
+):
+    """Ranked head-of-line candidates for every class: the top `b`
+    releases per class in release order (best first).
+
+    Returns (idx, n_elig): (K, L) int32 ranked candidate indices with
+    L = min(b, N), and (K,) int32 true per-class eligible counts.  Only
+    the first min(n_elig[c], L) entries of row c are meaningful; column
+    0 is bit-identical to `select_per_class` (same argmax/argmin with
+    first-occurrence tie-breaking, which `lax.top_k` preserves).
+    """
+    b = min(int(b), batch.n)
+    n_elig = cls_mask.sum(axis=1).astype(jnp.int32)
+    if backend == "pallas":
+        return _select_top_b_pallas(batch, cls_mask, now_ms, cfg, b), n_elig
+    if backend != "jnp":
+        raise ValueError(f"unknown ordering backend: {backend!r}")
     fifo_key = jnp.where(cls_mask, batch.arrival_ms[None, :], jnp.inf)
     scores = jnp.where(
         cls_mask, order_scores(batch, now_ms, cfg)[None, :], _NEG
     )
-    fifo_idx = jnp.argmin(fifo_key, axis=1)
-    sc_idx = jnp.argmax(scores, axis=1)
-    use_score = cfg.ord_scored > 0
-    idx = jnp.where(use_score, sc_idx, fifo_idx).astype(jnp.int32)
-    ok = cls_mask.any(axis=1)
-    return idx, ok
+    _, fifo_rank = jax.lax.top_k(-fifo_key, b)   # (K, L) earliest-first
+    _, sc_rank = jax.lax.top_k(scores, b)        # (K, L) best-score-first
+    use_score = cfg.ord_scored[:, None] > 0
+    idx = jnp.where(use_score, sc_rank, fifo_rank).astype(jnp.int32)
+    return idx, n_elig

@@ -1,13 +1,35 @@
-"""Public jit'd wrapper: interpret=True on CPU, compiled on TPU."""
-import functools
+"""Public jit'd wrapper: interpret=True on CPU, compiled on TPU.
+
+Pads the queue axis to a lane-aligned block multiple (mask=False
+padding) so callers can hand in any N — e.g. the 10^5-deep queues of
+the batch-dispatch benchmark — while the kernel always sees TPU-tileable
+block shapes.  Padding is shape-static, so jit specializes once per
+(N, blk).
+"""
+import jax.numpy as jnp
 
 from repro.kernels import interpret_mode
 from repro.kernels.sched_score.sched_score import (
     sched_score_argmax as _kernel_call,
 )
 
+_LANE = 128  # TPU lane width: block shapes must stay a multiple of this
 
-@functools.wraps(_kernel_call)
+
 def sched_score_argmax(wait, cost, urgency, mask, weights, *, blk: int = 2048):
+    """wait/cost/urgency: (n,) f32; mask: (n,) bool; weights: (4,)
+    [w_wait, w_size, w_urg, ref_tokens]. Returns (best_idx i32, best_score).
+    Any n is accepted — the queue is padded internally to a lane-aligned
+    block multiple with mask=False lanes."""
+    n = wait.shape[0]
+    # shrink the block for short queues without losing lane alignment
+    blk = min(blk, max(_LANE, -(-n // _LANE) * _LANE))
+    pad = (-n) % blk
+    if pad:
+        zf = jnp.zeros((pad,), wait.dtype)
+        wait = jnp.concatenate([wait, zf])
+        cost = jnp.concatenate([cost, jnp.ones((pad,), cost.dtype)])
+        urgency = jnp.concatenate([urgency, zf])
+        mask = jnp.concatenate([mask, jnp.zeros((pad,), bool)])
     return _kernel_call(wait, cost, urgency, mask, weights, blk=blk,
                         interpret=interpret_mode())

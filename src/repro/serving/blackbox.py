@@ -4,16 +4,18 @@
 API surface the paper assumes the client sees: submit(request) ->
 completion with latency; no internals exposed.  `ScheduledClient` runs
 the paper's three-layer stack (repro.core) in front of it — the same
-`schedule_slot` decision function the simulator uses, driven by wall
-clock instead of ticks.  This is the end-to-end deployment path
+batched `schedule_batch` decision function the simulator uses, driven by
+wall clock instead of ticks: each poll runs ONE vectorized pass and
+drains up to `max_grants` sends, instead of re-tracing the full policy
+per request.  This is the end-to-end deployment path
 (examples/serve_blackbox.py) proving the scheduler is not simulator-bound.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
+import functools
 import time
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,12 +24,10 @@ import numpy as np
 from repro.config import ModelConfig, ServeConfig
 from repro.core import overload as olc
 from repro.core.policy import PolicyConfig, n_classes
-from repro.core.scheduler import IDLE, schedule_slot
+from repro.core.scheduler import IDLE, schedule_batch
 from repro.core.types import (
-    ABANDONED,
     COMPLETED,
     INFLIGHT,
-    PENDING,
     REJECTED,
     RequestBatch,
     init_sim_state,
@@ -67,15 +67,20 @@ class BlackBoxProvider:
 
 class ScheduledClient:
     """Three-layer client (allocation/ordering/overload) in front of a
-    BlackBoxProvider, reusing the exact same `schedule_slot` the simulator
-    exercises — the policy logic is written once (DESIGN.md §2)."""
+    BlackBoxProvider, reusing the exact same `schedule_batch` the
+    simulator exercises — the policy logic is written once (DESIGN.md
+    §2).  Each wall-clock poll makes one batched decision and drains up
+    to `max_grants` releases."""
 
     def __init__(self, provider: BlackBoxProvider, policy: PolicyConfig,
-                 capacity: int = 64):
+                 max_grants: int = 4):
         self.provider = provider
         self.policy = policy
         self.requests: list[Request] = []
-        self._slot = jax.jit(schedule_slot)
+        # max_grants is baked into the jitted partial (it must be static);
+        # build a new client to change the drain width
+        self._batch = jax.jit(
+            functools.partial(schedule_batch, max_grants=max_grants))
 
     def run(self, requests: list[Request], time_scale: float = 1.0) -> list[Request]:
         """Executes the full request list; arrival times honored in scaled
@@ -105,42 +110,51 @@ class ScheduledClient:
         while done < n:
             now_ms = (time.monotonic() - t0) * 1e3 * time_scale
             state = state._replace(now_ms=jnp.float32(now_ms))
-            d = self._slot(self.policy, batch, state)
-            a = int(d.action)
+            d = self._batch(self.policy, batch, state)
             state = state._replace(sched=state.sched._replace(
                 deficit=d.deficit, rr_turn=d.rr_turn))
-            if a == IDLE:
+            actions = np.asarray(d.actions)
+            req_idx = np.asarray(d.req_idx)
+            if (actions == IDLE).all():
                 # nothing eligible yet: advance to next arrival
                 pend = [r for r in requests if r.status == "pending"]
                 if not pend:
                     break
                 time.sleep(0.005)
                 continue
-            i = int(d.req_idx)
-            req = requests[i]
-            if a == olc.REJECT:
-                req.status = "rejected"
-                state = _set_status(state, i, REJECTED)
-                done += 1
-            elif a == olc.DEFER:
-                back = olc.defer_backoff(
-                    self.policy, d.severity, state.req.n_defers[i])
-                state = state._replace(req=state.req._replace(
-                    defer_until=state.req.defer_until.at[i].set(
-                        now_ms + float(back)),
-                    n_defers=state.req.n_defers.at[i].add(1)))
-            else:  # admit -> call the black box (synchronous)
-                req.submit_s = time.monotonic() - t0
-                state = _set_status(state, i, INFLIGHT)
-                state = state._replace(provider=state.provider._replace(
-                    inflight=state.provider.inflight + 1))
-                req.output = self.provider.submit(req.prompt, req.max_new)
-                req.finish_s = time.monotonic() - t0
-                req.status = "completed"
-                state = _set_status(state, i, COMPLETED)
-                state = state._replace(provider=state.provider._replace(
-                    inflight=state.provider.inflight - 1))
-                done += 1
+            # drain every grant of the batch in decision order
+            for a, i in zip(actions.tolist(), req_idx.tolist()):
+                if a == IDLE:
+                    continue
+                req = requests[i]
+                if a == olc.REJECT:
+                    req.status = "rejected"
+                    state = _set_status(state, i, REJECTED)
+                    done += 1
+                elif a == olc.DEFER:
+                    back = olc.defer_backoff(
+                        self.policy, d.severity, state.req.n_defers[i])
+                    # backoff starts at apply time, not decision time:
+                    # synchronous admits earlier in this batch consumed
+                    # real wall clock, and the pacing window must not
+                    # silently expire under them
+                    cur_ms = (time.monotonic() - t0) * 1e3 * time_scale
+                    state = state._replace(req=state.req._replace(
+                        defer_until=state.req.defer_until.at[i].set(
+                            cur_ms + float(back)),
+                        n_defers=state.req.n_defers.at[i].add(1)))
+                else:  # admit -> call the black box (synchronous)
+                    req.submit_s = time.monotonic() - t0
+                    state = _set_status(state, i, INFLIGHT)
+                    state = state._replace(provider=state.provider._replace(
+                        inflight=state.provider.inflight + 1))
+                    req.output = self.provider.submit(req.prompt, req.max_new)
+                    req.finish_s = time.monotonic() - t0
+                    req.status = "completed"
+                    state = _set_status(state, i, COMPLETED)
+                    state = state._replace(provider=state.provider._replace(
+                        inflight=state.provider.inflight - 1))
+                    done += 1
         return requests
 
 

@@ -1,0 +1,525 @@
+"""Tests for the batched top-B dispatch pass (`schedule_batch`) and the
+Pallas-fused ordering backend.
+
+Covers the PR's acceptance points:
+  (a) B=1 bit-exactness: the batched pass reduces exactly to
+      `schedule_slot`, decision-by-decision over a driven state stream,
+      and the rewritten engine at k_slots=1 reproduces the sequential
+      slot-loop engine state bit-for-bit;
+  (b) multi-grant semantics: grants are distinct eligible requests,
+      per-class caps and the global max_inflight bind cumulatively
+      across the batch, and DRR deficit conservation holds — admits
+      charge exactly head_cost, defer/reject round-trip to zero net
+      change, multi-grant charges sum over grants;
+  (c) the Pallas `sched_score` ordering backend matches the jnp path
+      (CPU interpret mode), including FIFO-class emulation and queue
+      padding to a block multiple.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import drr, ordering, overload as olc
+from repro.core.policy import base_policy, kclass_policy, strategy
+from repro.core.scheduler import (
+    IDLE,
+    effective_class,
+    schedule_batch,
+    schedule_slot,
+)
+from repro.core.types import (
+    INFLIGHT,
+    PENDING,
+    RequestBatch,
+    SimState,
+    init_sim_state,
+)
+from repro.sim import SimConfig, WorkloadConfig, default_physics, generate, run_sim
+from repro.sim.provider import service_time_ms
+
+
+def mk_batch(n=24, seed=0, k=2):
+    rng = np.random.default_rng(seed)
+    arrival = np.sort(rng.uniform(0, 400.0, n)).astype(np.float32)
+    bucket = rng.integers(0, 4, n)
+    p50 = (np.float32([60, 150, 600, 2000])[bucket]
+           * rng.uniform(0.7, 1.3, n).astype(np.float32))
+    if k == 2:
+        cls = (bucket != 0).astype(np.int32)
+    else:
+        cls = rng.integers(0, k, n).astype(np.int32)
+    return RequestBatch(
+        arrival_ms=jnp.asarray(arrival),
+        bucket=jnp.asarray(bucket, jnp.int32),
+        cls=jnp.asarray(cls),
+        true_tokens=jnp.asarray(p50),
+        p50=jnp.asarray(p50),
+        p90=jnp.asarray(p50 * 1.8),
+        deadline_budget_ms=jnp.full((n,), 5000.0, jnp.float32),
+        valid=jnp.ones((n,), bool),
+    )
+
+
+_slot = jax.jit(schedule_slot)
+_batch = jax.jit(schedule_batch, static_argnames=("max_grants", "backend"))
+
+
+# ---------------------------------------------------------------------------
+# (a) B=1 bit-exactness with the single-slot path
+# ---------------------------------------------------------------------------
+
+class TestB1BitExact:
+    @pytest.mark.parametrize("name", [
+        "final_adrr_olc", "adaptive_drr", "fair_queuing", "short_priority",
+        "quota_tiered", "direct_naive",
+    ])
+    def test_decision_stream_matches_schedule_slot(self, name):
+        """Drive 40 engine-style steps; every SlotDecision field must be
+        bit-identical to row 0 of the max_grants=1 BatchDecision."""
+        cfg = strategy(name)
+        batch = mk_batch()
+        state = init_sim_state(batch.n)._replace(
+            now_ms=jnp.float32(50.0),
+            sched=init_sim_state(batch.n).sched._replace(
+                ema_latency_ratio=jnp.float32(2.5)),
+        )
+        live = 0
+        for step in range(40):
+            d = _slot(cfg, batch, state)
+            b = _batch(cfg, batch, state, max_grants=1)
+            assert b.actions.shape == (1,)
+            assert int(d.action) == int(b.actions[0]), f"step {step}"
+            if int(d.action) != IDLE:
+                live += 1
+                assert int(d.req_idx) == int(b.req_idx[0]), f"step {step}"
+            assert np.array_equal(np.asarray(d.deficit), np.asarray(b.deficit))
+            assert int(d.rr_turn) == int(b.rr_turn)
+            assert float(d.severity) == float(b.severity)
+            assert int(b.inflight_at[0]) == int(state.provider.inflight)
+
+            state = state._replace(
+                sched=state.sched._replace(deficit=d.deficit, rr_turn=d.rr_turn))
+            if int(d.action) == olc.ADMIT:
+                i = int(d.req_idx)
+                state = state._replace(
+                    req=state.req._replace(
+                        status=state.req.status.at[i].set(INFLIGHT)),
+                    provider=state.provider._replace(
+                        inflight=state.provider.inflight + 1))
+            elif int(d.action) == olc.DEFER:
+                i = int(d.req_idx)
+                state = state._replace(req=state.req._replace(
+                    defer_until=state.req.defer_until.at[i].set(
+                        state.now_ms + 100.0),
+                    n_defers=state.req.n_defers.at[i].add(1)))
+            if step % 8 == 7:
+                state = state._replace(
+                    req=state.req._replace(status=jnp.where(
+                        state.req.status == INFLIGHT, 2, state.req.status)),
+                    provider=state.provider._replace(inflight=jnp.int32(0)))
+            state = state._replace(now_ms=state.now_ms + jnp.float32(25.0))
+        if name != "direct_naive":
+            assert live > 5
+
+    def test_engine_k_slots_1_matches_sequential_reference(self):
+        """Full-horizon engine equivalence: the batched tick at
+        k_slots=1 equals the former sequential `_dispatch_one` loop,
+        replayed here verbatim over `schedule_slot`."""
+        from repro.sim.engine import _complete_and_timeout
+
+        policy = strategy("final_adrr_olc")
+        wl = WorkloadConfig(n_requests=48, mix="heavy", congestion="high")
+        batch, jitter = generate(jax.random.PRNGKey(3), wl)
+        phys = default_physics()
+        sim_cfg = SimConfig(n_ticks=1200, k_slots=1)
+
+        def dispatch_one(state: SimState) -> SimState:
+            # verbatim port of the seed engine's per-slot transition
+            d = schedule_slot(policy, batch, state)
+            i = d.req_idx
+            req = state.req
+            onehot = jnp.arange(batch.n) == i
+            admit = d.action == olc.ADMIT
+            defer = d.action == olc.DEFER
+            reject = d.action == olc.REJECT
+            service = service_time_ms(
+                phys, batch.true_tokens[i], state.provider.inflight, jitter[i])
+            finish = state.now_ms + service
+            backoff = olc.defer_backoff(policy, d.severity, req.n_defers[i])
+            status = jnp.where(
+                onehot & admit, INFLIGHT,
+                jnp.where(onehot & reject, 3, req.status))
+            submit = jnp.where(onehot & admit, state.now_ms, req.submit_ms)
+            finish_ms = jnp.where(onehot & admit, finish, req.finish_ms)
+            defer_until = jnp.where(
+                onehot & defer, state.now_ms + backoff, req.defer_until)
+            n_defers = req.n_defers + (onehot & defer).astype(jnp.int32)
+            inflight = state.provider.inflight + admit.astype(jnp.int32)
+            inflight_tokens = state.provider.inflight_tokens + jnp.where(
+                admit, batch.p50[i], 0.0)
+            noop = d.action == IDLE
+            new_req = jax.tree.map(
+                lambda new, old: jnp.where(noop, old, new),
+                req._replace(status=status, submit_ms=submit,
+                             finish_ms=finish_ms, defer_until=defer_until,
+                             n_defers=n_defers),
+                req)
+            return state._replace(
+                req=new_req,
+                sched=state.sched._replace(deficit=d.deficit, rr_turn=d.rr_turn),
+                provider=state.provider._replace(
+                    inflight=jnp.where(noop, state.provider.inflight, inflight),
+                    inflight_tokens=jnp.where(
+                        noop, state.provider.inflight_tokens, inflight_tokens)))
+
+        @jax.jit
+        def reference_sim():
+            state0 = init_sim_state(batch.n, 2)
+
+            def tick(state, t_idx):
+                now = (t_idx + 1).astype(jnp.float32) * sim_cfg.dt_ms
+                state = state._replace(now_ms=now)
+                state = _complete_and_timeout(policy, phys, batch, state)
+                return dispatch_one(state), None
+
+            final, _ = jax.lax.scan(tick, state0, jnp.arange(sim_cfg.n_ticks))
+            final = final._replace(now_ms=final.now_ms + 1e9)
+            return _complete_and_timeout(policy, phys, batch, final)
+
+        ref = reference_sim()
+        got = run_sim(policy, batch, jitter, phys, sim_cfg)
+        for field in ("status", "submit_ms", "finish_ms", "defer_until",
+                      "n_defers"):
+            assert np.array_equal(
+                np.asarray(getattr(got.req, field)),
+                np.asarray(getattr(ref.req, field))), field
+        assert np.array_equal(np.asarray(got.sched.deficit),
+                              np.asarray(ref.sched.deficit))
+        assert int(got.sched.rr_turn) == int(ref.sched.rr_turn)
+        # the run actually scheduled work
+        assert int((np.asarray(got.req.status) == 2).sum()) > 10
+
+
+# ---------------------------------------------------------------------------
+# (b) multi-grant semantics
+# ---------------------------------------------------------------------------
+
+class TestMultiGrant:
+    def _ready_state(self, batch, k=2, deficit=None):
+        st = init_sim_state(batch.n, k)._replace(now_ms=jnp.float32(1e6))
+        if deficit is not None:
+            st = st._replace(sched=st.sched._replace(
+                deficit=jnp.asarray(deficit, jnp.float32)))
+        return st
+
+    def test_grants_distinct_eligible_and_bounded(self):
+        cfg = kclass_policy(4)
+        batch = mk_batch(64, seed=5, k=4)
+        state = self._ready_state(batch, 4)
+        d = _batch(cfg, batch, state, max_grants=8)
+        acts = np.asarray(d.actions)
+        idxs = np.asarray(d.req_idx)
+        live = idxs[acts != IDLE]
+        assert acts.shape == (8,)
+        assert len(set(live.tolist())) == len(live)  # no double grants
+        assert np.asarray(batch.valid)[live].all()
+        assert (np.asarray(batch.arrival_ms)[live] <= 1e6).all()
+
+    def test_global_max_inflight_binds_cumulatively(self):
+        cfg = kclass_policy(2, max_inflight=jnp.float32(3.0))
+        batch = mk_batch(64, seed=6)
+        state = self._ready_state(batch)
+        d = _batch(cfg, batch, state, max_grants=16)
+        admits = int((np.asarray(d.actions) == olc.ADMIT).sum())
+        assert admits == 3  # plenty eligible; cap must stop the batch
+
+    def test_class_cap_binds_cumulatively(self):
+        cfg = kclass_policy(
+            2, caps=[2.0, 2.0], olc_enabled=jnp.float32(0.0))
+        batch = mk_batch(64, seed=7)
+        state = self._ready_state(batch)
+        d = _batch(cfg, batch, state, max_grants=16)
+        acts, idxs = np.asarray(d.actions), np.asarray(d.req_idx)
+        cls = np.asarray(effective_class(cfg, batch))
+        admitted_cls = cls[idxs[acts == olc.ADMIT]]
+        for c in range(2):
+            assert (admitted_cls == c).sum() <= 2
+
+    def test_deficit_multi_grant_charges_sum(self):
+        """With zero quantum and overload off, the net deficit change of
+        a batch is exactly the (sequentially accumulated) sum of the
+        admitted head costs."""
+        k, n = 2, 64
+        cfg = kclass_policy(
+            k,
+            drr_quantum=jnp.float32(0.0),
+            olc_enabled=jnp.float32(0.0),
+            deficit_cap=jnp.float32(8000.0),
+        )
+        batch = mk_batch(n, seed=8)
+        init = [8000.0, 8000.0]
+        state = self._ready_state(batch, k, deficit=init)
+        B = 6
+        d = _batch(cfg, batch, state, max_grants=B)
+        acts, idxs = np.asarray(d.actions), np.asarray(d.req_idx)
+        assert (acts == olc.ADMIT).sum() >= 2  # both lanes afford work
+        cls = np.asarray(effective_class(cfg, batch))
+        expect = np.float32(init).copy()
+        for a, i in zip(acts, idxs):
+            if a == olc.ADMIT:
+                expect[cls[i]] -= np.float32(batch.p50[i])
+        np.testing.assert_allclose(
+            np.asarray(d.deficit), expect, rtol=0, atol=1e-3)
+
+    @pytest.mark.parametrize("reject", [False, True])
+    def test_deficit_defer_reject_round_trips_to_zero(self, reject):
+        """A blocked release must leave the deficit vector untouched
+        (charge + refund cancel exactly) — across all B grants."""
+        k, n = 2, 48
+        thr, rej = (10.0, 0.01) if reject else (0.01, 10.0)
+        cfg = kclass_policy(
+            k,
+            drr_quantum=jnp.float32(0.0),
+            deficit_cap=jnp.float32(8000.0),
+            defer_thr=jnp.asarray([jnp.inf, thr, thr, thr], jnp.float32),
+            reject_thr=jnp.asarray([jnp.inf, rej, rej, rej], jnp.float32),
+        )
+        rng = np.random.default_rng(9)
+        bucket = rng.integers(1, 4, n)  # no shorts: every grant blocks
+        batch = mk_batch(n, seed=9)._replace(
+            bucket=jnp.asarray(bucket, jnp.int32),
+            cls=jnp.asarray(rng.integers(0, k, n), jnp.int32))
+        init = [8000.0, 8000.0]
+        state = self._ready_state(batch, k, deficit=init)
+        state = state._replace(sched=state.sched._replace(
+            ema_latency_ratio=jnp.float32(3.0)))
+        d = _batch(cfg, batch, state, max_grants=6)
+        want = olc.REJECT if reject else olc.DEFER
+        acts = np.asarray(d.actions)
+        assert (acts == want).sum() >= 2
+        np.testing.assert_allclose(
+            np.asarray(d.deficit), np.float32(init), rtol=0, atol=0)
+
+    def test_blocked_candidate_leaves_feasible_set_for_batch(self):
+        """A deferred candidate must not be re-granted later in the same
+        batch (it left the feasible set exactly as its backoff would
+        remove it)."""
+        k, n = 2, 48
+        cfg = kclass_policy(
+            k,
+            defer_thr=jnp.asarray([jnp.inf, 0.01, 0.01, 0.01], jnp.float32),
+            reject_thr=jnp.asarray([jnp.inf] * 4, jnp.float32),
+        )
+        rng = np.random.default_rng(10)
+        batch = mk_batch(n, seed=10)._replace(
+            bucket=jnp.asarray(rng.integers(1, 4, n), jnp.int32))
+        state = self._ready_state(batch, k)
+        state = state._replace(sched=state.sched._replace(
+            ema_latency_ratio=jnp.float32(3.0)))
+        d = _batch(cfg, batch, state, max_grants=8)
+        acts, idxs = np.asarray(d.actions), np.asarray(d.req_idx)
+        live = idxs[acts != IDLE]
+        assert (acts[acts != IDLE] == olc.DEFER).all()
+        assert len(set(live.tolist())) == len(live)
+
+    def test_engine_b4_terminates_and_conserves(self):
+        """Full sim at k_slots=4 (one batched pass per tick): every
+        request reaches a terminal state."""
+        wl = WorkloadConfig(n_requests=48, mix="heavy", congestion="high")
+        batch, jitter = generate(jax.random.PRNGKey(4), wl)
+        final = run_sim(strategy("final_adrr_olc"), batch, jitter,
+                        default_physics(), SimConfig(n_ticks=1500, k_slots=4))
+        s = np.asarray(final.req.status)
+        assert ((s == 2) | (s == 3) | (s == 4)).all()
+        assert int(final.provider.inflight) == 0
+
+
+# ---------------------------------------------------------------------------
+# rr_turn stays in range across long FQ runs (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+class TestRrTurnRange:
+    @pytest.mark.parametrize("k", [2, 3, 8])
+    def test_allocate_pointer_wraps(self, k):
+        cfg = kclass_policy(k, alloc_mode=jnp.asarray(3, jnp.int32))
+        rng = np.random.default_rng(0)
+        turn = jnp.int32(0)
+        deficit = jnp.zeros((k,), jnp.float32)
+        for step in range(6 * k):
+            backlog = jnp.asarray(rng.integers(0, 3, k), jnp.int32)
+            c = drr.allocate(
+                cfg,
+                backlog=backlog,
+                head_cost=jnp.full((k,), 100.0, jnp.float32),
+                inflight_cls=jnp.zeros((k,), jnp.int32),
+                inflight_total=jnp.int32(0),
+                severity=jnp.float32(0.0),
+                deficit=deficit,
+                rr_turn=turn,
+            )
+            turn = c.rr_turn
+            assert 0 <= int(turn) < k, f"step {step}: rr_turn={int(turn)}"
+
+    def test_fq_engine_run_keeps_pointer_in_range(self):
+        wl = WorkloadConfig(n_requests=48, mix="heavy", congestion="high")
+        batch, jitter = generate(jax.random.PRNGKey(5), wl)
+        final = run_sim(strategy("fair_queuing"), batch, jitter,
+                        default_physics(), SimConfig(n_ticks=2000, k_slots=4))
+        assert 0 <= int(final.sched.rr_turn) < 2
+
+    def test_fq_rotation_visits_all_classes(self):
+        """Long driven FQ run at K=3: the pointer cycles through every
+        class instead of sticking past K."""
+        k = 3
+        cfg = kclass_policy(k, alloc_mode=jnp.asarray(3, jnp.int32),
+                            olc_enabled=jnp.float32(0.0))
+        batch = mk_batch(60, seed=11, k=k)
+        state = init_sim_state(batch.n, k)._replace(now_ms=jnp.float32(1e6))
+        seen = set()
+        for _ in range(30):
+            d = _batch(cfg, batch, state, max_grants=1)
+            assert 0 <= int(d.rr_turn) < k
+            if int(d.actions[0]) == olc.ADMIT:
+                seen.add(int(np.asarray(effective_class(cfg, batch))[
+                    int(d.req_idx[0])]))
+            state = state._replace(sched=state.sched._replace(
+                deficit=d.deficit, rr_turn=d.rr_turn))
+            # release provider slots so the rotation keeps granting
+            state = state._replace(req=state.req._replace(status=jnp.where(
+                state.req.status == INFLIGHT, PENDING, state.req.status)))
+            i = int(d.req_idx[0])
+            if int(d.actions[0]) == olc.ADMIT:
+                state = state._replace(req=state.req._replace(
+                    status=state.req.status.at[i].set(2)))
+        assert seen == {0, 1, 2}
+
+
+# ---------------------------------------------------------------------------
+# (c) Pallas ordering backend parity (CPU interpret mode)
+# ---------------------------------------------------------------------------
+
+class TestPallasOrderingParity:
+    def _mask_and_state(self, cfg, batch, seed=0):
+        k = cfg.drr_weights.shape[0]
+        state = init_sim_state(batch.n, k)._replace(now_ms=jnp.float32(1e5))
+        elig = ordering.eligibility(
+            batch, state.req.status, state.req.defer_until, state.now_ms)
+        eff = effective_class(cfg, batch)
+        kn = (eff[None, :] == jnp.arange(k)[:, None]) & elig[None, :]
+        return kn, state
+
+    @pytest.mark.parametrize("n", [64, 700])  # 700 exercises block padding
+    def test_select_per_class_backends_agree(self, n):
+        cfg = base_policy()
+        batch = mk_batch(n, seed=1)
+        kn, state = self._mask_and_state(cfg, batch)
+        i_j, ok_j = ordering.select_per_class(
+            batch, kn, state.now_ms, cfg, backend="jnp")
+        i_p, ok_p = ordering.select_per_class(
+            batch, kn, state.now_ms, cfg, backend="pallas")
+        assert np.array_equal(np.asarray(ok_j), np.asarray(ok_p))
+        ok = np.asarray(ok_j)
+        assert np.array_equal(np.asarray(i_j)[ok], np.asarray(i_p)[ok])
+
+    def test_select_top_b_backends_agree(self):
+        cfg = base_policy()
+        batch = mk_batch(96, seed=2)
+        kn, state = self._mask_and_state(cfg, batch)
+        b = 4
+        i_j, n_j = ordering.select_top_b(
+            batch, kn, state.now_ms, cfg, b, backend="jnp")
+        i_p, n_p = ordering.select_top_b(
+            batch, kn, state.now_ms, cfg, b, backend="pallas")
+        assert np.array_equal(np.asarray(n_j), np.asarray(n_p))
+        for c in range(2):
+            valid = min(int(n_j[c]), b)
+            assert np.array_equal(
+                np.asarray(i_j)[c, :valid], np.asarray(i_p)[c, :valid]), c
+
+    def test_schedule_batch_pallas_backend_matches_jnp(self):
+        cfg = base_policy()
+        batch = mk_batch(64, seed=3)
+        state = init_sim_state(batch.n, 2)._replace(
+            now_ms=jnp.float32(1e5),
+            sched=init_sim_state(batch.n, 2).sched._replace(
+                ema_latency_ratio=jnp.float32(2.0)))
+        d_j = _batch(cfg, batch, state, max_grants=4, backend="jnp")
+        d_p = _batch(cfg, batch, state, max_grants=4, backend="pallas")
+        assert np.array_equal(np.asarray(d_j.actions), np.asarray(d_p.actions))
+        live = np.asarray(d_j.actions) != IDLE
+        assert np.array_equal(
+            np.asarray(d_j.req_idx)[live], np.asarray(d_p.req_idx)[live])
+        assert np.array_equal(np.asarray(d_j.deficit), np.asarray(d_p.deficit))
+
+    def test_fifo_parity_at_large_now_with_close_arrivals(self):
+        """FIFO emulation keys on -arrival_ms, not now - arrival: at
+        large now_ms a f32 wait would quantize sub-ms arrival gaps into
+        ties and break backend parity."""
+        n = 64
+        rng = np.random.default_rng(4)
+        arrival = np.cumsum(rng.uniform(0.1, 0.9, n)).astype(np.float32)
+        order = rng.permutation(n)  # not pre-sorted by arrival
+        batch = mk_batch(n, seed=4)._replace(
+            arrival_ms=jnp.asarray(arrival[order]))
+        cfg = base_policy()
+        kn = jnp.stack([batch.bucket == 0, batch.bucket != 0])
+        now = jnp.float32(1e7)
+        i_j, ok_j = ordering.select_per_class(batch, kn, now, cfg, backend="jnp")
+        i_p, ok_p = ordering.select_per_class(
+            batch, kn, now, cfg, backend="pallas")
+        assert bool(ok_j[0]) and bool(ok_p[0])
+        assert int(i_j[0]) == int(i_p[0])  # the FIFO (short) lane
+
+    def test_ops_padding_matches_ref(self):
+        """N not a block multiple: the ops wrapper pads with mask=False
+        and the fused result still matches the unpadded oracle."""
+        from repro.kernels.sched_score.ops import sched_score_argmax
+        from repro.kernels.sched_score.ref import sched_score_argmax_ref
+
+        n = 700  # blk=512 -> 324 padding lanes
+        ks = jax.random.split(jax.random.PRNGKey(7), 4)
+        wait = jax.random.uniform(ks[0], (n,)) * 1e4
+        cost = jax.random.uniform(ks[1], (n,)) * 4000 + 16
+        urg = jax.random.uniform(ks[2], (n,)) * 2
+        mask = jax.random.bernoulli(ks[3], 0.5, (n,))
+        w = jnp.asarray([1.0, 0.6, 0.8, 512.0])
+        i1, s1 = sched_score_argmax(wait, cost, urg, mask, w, blk=512)
+        i2, s2 = sched_score_argmax_ref(wait, cost, urg, mask, w)
+        assert int(i1) == int(i2)
+        assert float(s1) == pytest.approx(float(s2), rel=1e-5)
+
+    def test_unknown_backend_raises(self):
+        cfg = base_policy()
+        batch = mk_batch(8)
+        kn, state = self._mask_and_state(cfg, batch)
+        with pytest.raises(ValueError, match="backend"):
+            ordering.select_per_class(
+                batch, kn, state.now_ms, cfg, backend="cuda")
+
+
+# ---------------------------------------------------------------------------
+# Refund mode-gating (satellite bugfix): non-ADRR modes never charged,
+# so a blocked release must not credit their deficit vector.
+# ---------------------------------------------------------------------------
+
+class TestRefundModeGated:
+    @pytest.mark.parametrize("mode", [1, 3, 4])  # quota, fq, sp
+    def test_blocked_release_leaves_non_adrr_deficit_untouched(self, mode):
+        cfg = kclass_policy(
+            2,
+            alloc_mode=jnp.asarray(mode, jnp.int32),
+            defer_thr=jnp.asarray([jnp.inf, 0.01, 0.01, 0.01], jnp.float32),
+            reject_thr=jnp.asarray([jnp.inf] * 4, jnp.float32),
+        )
+        rng = np.random.default_rng(12)
+        batch = mk_batch(32, seed=12)._replace(
+            bucket=jnp.asarray(rng.integers(1, 4, 32), jnp.int32))
+        init = jnp.asarray([123.0, 456.0], jnp.float32)
+        state = init_sim_state(batch.n, 2)._replace(
+            now_ms=jnp.float32(1e6),
+            sched=init_sim_state(batch.n, 2).sched._replace(
+                deficit=init, ema_latency_ratio=jnp.float32(3.0)))
+        d = _slot(cfg, batch, state)
+        assert int(d.action) == olc.DEFER  # the release was blocked
+        np.testing.assert_array_equal(np.asarray(d.deficit), np.asarray(init))

@@ -216,7 +216,10 @@ class TestSeedBitExact:
                 assert int(d.req_idx) == int(ri), f"step {step}: idx diverged"
             assert np.array_equal(np.asarray(d.deficit), np.asarray(rd)), (
                 f"step {step}: deficit diverged: {d.deficit} vs {rd}")
-            assert int(d.rr_turn) == int(rt)
+            # the seed stored an unwrapped FQ pointer (cls_id + 1, which
+            # can reach K) and re-moduloed it on read; the fixed scheduler
+            # stores (cls_id + 1) % K — identical rotation, wrapped store
+            assert int(d.rr_turn) == int(rt) % _SEED_N_CLASSES
             assert float(d.severity) == float(rs)
 
             # engine-style transition so the state stream stays shared
