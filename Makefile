@@ -2,29 +2,46 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test test-fast bench bench-smoke bench-sched check-clean ci
+.PHONY: test test-fast bench bench-smoke bench-sched bench-scenarios \
+	check-bench check-clean ci
 
 # Tier-1: full test suite (ROADMAP.md)
 test:
 	$(PY) -m pytest -x -q
 
-# quick slice while iterating on the scheduler stack
+# quick slice while iterating on the scheduler stack: the scheduler/sim
+# test files minus the `slow`-marked long sim-horizon tests (~1 min);
+# CI runs the full suite via `make test`
 test-fast:
-	$(PY) -m pytest -x -q tests/test_scheduler_core.py tests/test_multi_class.py
+	$(PY) -m pytest -x -q -m "not slow" \
+		tests/test_scheduler_core.py tests/test_multi_class.py \
+		tests/test_batch_dispatch.py tests/test_sim.py \
+		tests/test_scenarios.py
 
 # full paper-table benchmark suite
 bench:
 	$(PY) benchmarks/run.py
 
-# K-class sweep at tiny n_ticks — CI-sized sanity pass
+# CI-sized sanity pass: K-class sweep + scenario sweep at tiny horizons,
+# both exiting nonzero on any non-finite aggregate metric
 bench-smoke:
 	$(PY) benchmarks/multi_class.py --smoke
+	$(PY) benchmarks/scenario_sweep.py --smoke
 
 # scheduler-throughput microbenchmark -> BENCH_scheduler.json
 # (slots/sec at K=2 vs K=8 plus the batch-dispatch B x N sweep; the perf
 # trajectory future PRs compare against)
 bench-sched:
 	$(PY) benchmarks/multi_class.py --sched-only
+
+# full nonstationary scenario grid -> BENCH_scenarios.json
+bench-scenarios:
+	$(PY) benchmarks/scenario_sweep.py
+
+# bench-regression gate: fresh B=16 dispatch rate vs the committed
+# BENCH_scheduler.json baseline (>30% drop fails; BENCH_TOLERANCE widens)
+check-bench:
+	$(PY) benchmarks/check_regression.py
 
 # repo hygiene: no bytecode may ever be tracked
 check-clean:
@@ -33,5 +50,6 @@ check-clean:
 		echo "ERROR: tracked bytecode files:"; echo "$$bad"; exit 1; \
 	fi; echo "check-clean: no tracked __pycache__/*.pyc"
 
-# CI entry point: hygiene check, tier-1 tests, CI-sized bench smoke
-ci: check-clean test bench-smoke
+# CI entry point (.github/workflows/ci.yml runs exactly this): hygiene
+# check, tier-1 tests, CI-sized bench smoke, bench-regression gate
+ci: check-clean test bench-smoke check-bench

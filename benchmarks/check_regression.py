@@ -1,0 +1,106 @@
+"""Bench-regression gate: fresh scheduler throughput vs the committed
+baseline.
+
+Re-runs the batched-dispatch microbenchmark (`schedule_batch` at B=16,
+the production drain width) at each committed queue depth and fails if
+the fresh slot rate regresses more than the tolerance band below the
+committed `BENCH_scheduler.json` baseline.  Two checks:
+
+  * **absolute**: fresh B=16 slots/sec >= (1 - tolerance) x baseline.
+    Cross-machine noise is real — the tolerance default (30%) is wide,
+    and `BENCH_TOLERANCE` can widen it for known-slow runners without
+    editing the Makefile.
+  * **structural** (machine-independent): fresh B=16 must still beat
+    fresh B=1 by the repo's >=2x batched-dispatch bar.  A refactor that
+    quietly serializes the batch fails here even on a faster machine.
+
+Wired into `make ci` as `make check-bench`.  The baseline is read from
+git (`HEAD:BENCH_scheduler.json`) so a local `make bench-sched` that
+rewrote the working-tree artifact can't silently compare fresh against
+fresh; outside a git checkout it falls back to the file on disk.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+
+import numpy as np  # noqa: E402
+
+from benchmarks.multi_class import batch_dispatch_bench  # noqa: E402
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(REPO, "BENCH_scheduler.json")
+DEFAULT_TOLERANCE = 0.30  # fail on >30% regression at B=16
+MIN_B16_VS_B1 = 2.0       # the repo's batched-dispatch acceptance bar
+
+
+def load_baseline() -> dict:
+    try:
+        out = subprocess.run(
+            ["git", "show", "HEAD:BENCH_scheduler.json"],
+            cwd=REPO, capture_output=True, text=True, check=True,
+        ).stdout
+        return json.loads(out)
+    except (subprocess.CalledProcessError, FileNotFoundError,
+            json.JSONDecodeError):
+        with open(BASELINE) as f:
+            return json.load(f)
+
+
+def main(argv: list[str]) -> int:
+    tolerance = float(
+        os.environ.get("BENCH_TOLERANCE", DEFAULT_TOLERANCE))
+    for a in argv:
+        if a.startswith("--tolerance="):
+            tolerance = float(a.split("=", 1)[1])
+
+    baseline = load_baseline()
+    rows = baseline.get("batch_dispatch", [])
+    base_by_n = {
+        r["n_requests"]: r["slots_per_sec"]
+        for r in rows if r.get("max_grants") == 16
+    }
+    if not base_by_n:
+        print("FAIL: committed BENCH_scheduler.json has no B=16 "
+              "batch_dispatch rows to gate against")
+        return 1
+
+    failures = []
+    print(f"bench-regression gate: tolerance {tolerance:.0%} at B=16")
+    for n_req, base_rate in sorted(base_by_n.items()):
+        iters = 100 if n_req <= 10_000 else 20
+        fresh16 = batch_dispatch_bench(16, n_req, iters=iters)
+        fresh1 = batch_dispatch_bench(1, n_req, iters=iters)
+        rate = fresh16["slots_per_sec"]
+        floor = (1.0 - tolerance) * base_rate
+        ratio = rate / fresh1["slots_per_sec"]
+        ok_abs = np.isfinite(rate) and rate >= floor
+        ok_ratio = np.isfinite(ratio) and ratio >= MIN_B16_VS_B1
+        print(f"  N={n_req:6d}: fresh {rate:10.0f} slots/s vs baseline "
+              f"{base_rate:10.0f} (floor {floor:10.0f}) "
+              f"[{'ok' if ok_abs else 'REGRESSION'}]  "
+              f"B16/B1 {ratio:4.1f}x [{'ok' if ok_ratio else 'FAIL'}]")
+        if not ok_abs:
+            failures.append(
+                f"N={n_req}: B=16 rate {rate:.0f} < floor {floor:.0f} "
+                f"({rate / base_rate - 1.0:+.0%} vs baseline)")
+        if not ok_ratio:
+            failures.append(
+                f"N={n_req}: B=16 only {ratio:.2f}x B=1 "
+                f"(bar: >={MIN_B16_VS_B1}x)")
+
+    if failures:
+        print("FAIL: scheduler throughput regression:")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print("check-bench OK: no regression beyond tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

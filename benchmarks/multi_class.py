@@ -189,8 +189,32 @@ def write_batch_bench(bench: dict, verbose: bool = True) -> None:
     bench["batch_dispatch"] = rows
 
 
+# aggregate summary keys that must be finite in every cell (exactly the
+# columns _cell_row emits): NaN/inf here means a degenerate run (nothing
+# arrived or completed), which must fail loudly — a silent pass would
+# blind the CI bench gate.  Per-lane values are exempt: a lane can be
+# legitimately empty in short smoke runs.
+REQUIRED_FINITE = (
+    "global_p95_ms", "completion_rate", "satisfaction", "goodput_rps",
+    "n_rejects",
+)
+
+
+def check_finite(rows: list[dict]) -> list[str]:
+    """Returns violation strings for any non-finite required aggregate."""
+    bad = []
+    for row in rows:
+        for key in REQUIRED_FINITE:
+            v = row.get(f"{key}_mean")
+            if v is None or not np.isfinite(v):
+                bad.append(
+                    f"K={row['n_classes']} {row['mix']}/{row['congestion']}: "
+                    f"{key}_mean = {v}")
+    return bad
+
+
 def run(verbose: bool = True, n_ticks: int | None = None, n_req: int = 160,
-        seeds: int = 5):
+        seeds: int = 5, sched_bench: bool = True):
     sim_cfg = SimConfig(n_ticks=n_ticks if n_ticks is not None else 14000)
     rows = []
     k2_summary = {}
@@ -223,8 +247,22 @@ def run(verbose: bool = True, n_ticks: int | None = None, n_req: int = 160,
               f"P95 {lane0:.0f}ms matches short-bucket scalar "
               f"{short_scalar:.0f}ms")
 
+    violations = check_finite(rows)
+    if violations:
+        # raise (don't just return) so every driver — __main__/--smoke,
+        # benchmarks/run.py, an interactive call — fails loudly
+        print("FAIL: non-finite aggregate metrics:")
+        for v in violations:
+            print(f"  {v}")
+        raise RuntimeError(
+            f"degenerate benchmark run: {len(violations)} non-finite "
+            f"aggregate metric(s)")
+
     # --- scheduler-step microbenchmark -> BENCH_scheduler.json
-    write_sched_bench(verbose=verbose)
+    # (skipped in smoke: the committed artifact is the full run's, and
+    # the CI regression gate compares fresh numbers against it)
+    if sched_bench:
+        write_sched_bench(verbose=verbose)
     return path, BENCH_JSON
 
 
@@ -265,6 +303,11 @@ if __name__ == "__main__":
         write_sched_bench()
     else:
         smoke = "--smoke" in sys.argv
-        run(n_ticks=300 if smoke else None,
-            n_req=48 if smoke else 160,
-            seeds=2 if smoke else 5)
+        try:
+            run(n_ticks=300 if smoke else None,
+                n_req=48 if smoke else 160,
+                seeds=2 if smoke else 5,
+                sched_bench=not smoke)
+        except RuntimeError as e:
+            print(e)
+            sys.exit(1)

@@ -1,0 +1,168 @@
+"""Scenario sweep: the full policy stack across the nonstationary
+scenario registry (DESIGN.md §5) × allocation modes.
+
+For every named scenario (burst trains, diurnal ramps, heavy-dominated
+phase shifts, flash crowds, brownouts, provider rate limits, …) and
+each allocation mode, runs the three-layer stack over seeds and reports
+per-phase windowed metrics — P95 by class, deadline satisfaction, shed
+counts by ladder rung, provider 429 bounces — into the
+`BENCH_scenarios.json` artifact.  This is the regime grid the paper's
+regime-dependent claims actually turn on: the stationary anchors are
+where the policies agree, the nonstationary cells are where they
+separate.
+
+`--smoke` runs a CI-sized slice (no artifact write — the committed
+artifact is the full run's) and exits nonzero if any required aggregate
+metric is NaN/inf, so a degenerate run can't pass silently.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+import warnings
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+
+import numpy as np  # noqa: E402
+
+from repro.core.policy import fair_queuing, final_adrr_olc  # noqa: E402
+from repro.sim import (  # noqa: E402
+    SimConfig,
+    list_scenarios,
+    run_scenario_cell,
+    summarize,
+)
+
+BENCH_JSON = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_scenarios.json")
+
+ALLOC_MODES = {
+    "adrr": final_adrr_olc,   # the paper's Final (OLC) stack
+    "fq": fair_queuing,       # strict round-robin allocation, no OLC
+}
+
+# aggregates that must be finite in every cell — a NaN here means the
+# run was degenerate (nothing completed / nothing arrived), which must
+# fail loudly rather than produce an empty-looking artifact
+REQUIRED_FINITE = (
+    "completion_rate", "satisfaction", "goodput_rps", "global_p95_ms",
+    "makespan_ms",
+)
+
+
+def _mean_over_seeds(arr) -> np.ndarray:
+    a = np.asarray(arr, np.float64)
+    with warnings.catch_warnings():
+        # a phase can be legitimately empty across every seed (no
+        # completions in a trough window) — report NaN -> null, quietly
+        warnings.simplefilter("ignore", RuntimeWarning)
+        return np.nanmean(a, axis=0)
+
+
+def _phase_rows(pm) -> list[dict]:
+    """Per-phase dicts, seed-averaged; class vectors flattened to lists."""
+    mean = {name: _mean_over_seeds(getattr(pm, name)) for name in pm._fields}
+
+    def f(x, r=3):
+        v = float(x)
+        return round(v, r) if np.isfinite(v) else None
+
+    rows = []
+    for p in range(mean["phase_start_ms"].shape[0]):
+        rows.append({
+            "start_ms": f(mean["phase_start_ms"][p], 1),
+            "n_arrived": f(mean["n_arrived"][p], 1),
+            "n_completed": f(mean["n_completed"][p], 1),
+            "n_abandoned": f(mean["n_abandoned"][p], 1),
+            "n_throttled": f(mean["n_throttled"][p], 1),
+            "shed_by_bucket": [f(v, 1) for v in mean["shed_by_bucket"][p]],
+            "satisfaction": f(mean["satisfaction"][p]),
+            "p95_ms": f(mean["p95_ms"][p], 1),
+            "class_p95_ms": [f(v, 1) for v in mean["class_p95_ms"][p]],
+            "class_satisfaction": [
+                f(v) for v in mean["class_satisfaction"][p]],
+        })
+    return rows
+
+
+def run_sweep(
+    *,
+    n_requests: int,
+    n_ticks: int,
+    seeds: int,
+    verbose: bool = True,
+) -> tuple[list[dict], list[str]]:
+    """Returns (cell dicts, list of NaN/inf violations)."""
+    sim_cfg = SimConfig(n_ticks=n_ticks)
+    cells, violations = [], []
+    for name in list_scenarios():
+        for mode, policy_fn in ALLOC_MODES.items():
+            t0 = time.perf_counter()
+            m, pm = run_scenario_cell(
+                policy_fn(), name,
+                seeds=seeds, n_requests=n_requests, sim_cfg=sim_cfg,
+            )
+            secs = time.perf_counter() - t0
+            s = summarize(m)
+            for key in REQUIRED_FINITE:
+                if not np.isfinite(s[key][0]):
+                    violations.append(f"{name}/{mode}: {key} = {s[key][0]}")
+            agg = {
+                k: round(s[k][0], 3) if np.isfinite(s[k][0]) else None
+                for k in REQUIRED_FINITE + ("n_rejects", "n_abandoned")
+            }
+            agg["n_throttled"] = round(
+                float(np.asarray(pm.n_throttled, np.float64).sum(axis=1).mean()),
+                1,
+            )
+            cells.append({
+                "scenario": name,
+                "alloc": mode,
+                "cell_seconds": round(secs, 2),
+                "aggregate": agg,
+                "phases": _phase_rows(pm),
+            })
+            if verbose:
+                def fv(key, spec):
+                    v = agg[key]
+                    return format(v, spec) if v is not None else "nan"
+                print(
+                    f"  {name:16s} {mode:5s} {secs:5.1f}s "
+                    f"cr={fv('completion_rate', '.2f')} "
+                    f"sat={fv('satisfaction', '.2f')} "
+                    f"p95={fv('global_p95_ms', '.0f')}ms "
+                    f"shed={fv('n_rejects', '.1f')} "
+                    f"429={agg['n_throttled']:.0f}"
+                )
+    return cells, violations
+
+
+def main(argv: list[str]) -> int:
+    smoke = "--smoke" in argv
+    if smoke:
+        cells, violations = run_sweep(n_requests=48, n_ticks=2400, seeds=2)
+    else:
+        cells, violations = run_sweep(n_requests=160, n_ticks=14000, seeds=3)
+        artifact = {
+            "benchmark": "scenario_sweep",
+            "sim": {"n_requests": 160, "n_ticks": 14000, "seeds": 3},
+            "alloc_modes": sorted(ALLOC_MODES),
+            "scenarios": list_scenarios(),
+            "cells": cells,
+        }
+        with open(BENCH_JSON, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"wrote {os.path.relpath(BENCH_JSON)} ({len(cells)} cells)")
+    if violations:
+        print("FAIL: non-finite aggregate metrics:")
+        for v in violations:
+            print(f"  {v}")
+        return 1
+    print(f"scenario sweep OK: {len(cells)} cells, all aggregates finite")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -73,6 +73,9 @@ class RequestState(NamedTuple):
     finish_ms: jnp.ndarray    # (N,) float32 provider completion time
     defer_until: jnp.ndarray  # (N,) float32 earliest re-eligibility
     n_defers: jnp.ndarray     # (N,) int32 times this request was deferred
+    n_throttles: jnp.ndarray  # (N,) int32 provider 429s this request saw
+                              #        (rate-limited sends that bounced with
+                              #        a client-visible retry-after)
 
 
 class SchedState(NamedTuple):
@@ -85,10 +88,19 @@ class SchedState(NamedTuple):
 
 
 class ProviderState(NamedTuple):
-    """Client-visible view of the black box: only aggregate signals."""
+    """Client-visible view of the black box: only aggregate signals.
+
+    `tb_tokens` / `n_throttled` are the provider-boundary token-bucket
+    rate limiter (sim/provider.ProviderDynamics): grants remaining per
+    service class and the running count of 429-style bounces.  Both stay
+    at their init values when no limiter is configured, so every
+    existing consumer is unaffected.
+    """
 
     inflight: jnp.ndarray       # () int32 outstanding requests
     inflight_tokens: jnp.ndarray  # () float32 outstanding predicted work
+    tb_tokens: jnp.ndarray      # (K,) float32 rate-limit grants available
+    n_throttled: jnp.ndarray    # () int32 total 429-style bounces
 
 
 class SimState(NamedTuple):
@@ -105,6 +117,7 @@ def init_request_state(n: int) -> RequestState:
         finish_ms=jnp.full((n,), jnp.inf, jnp.float32),
         defer_until=jnp.zeros((n,), jnp.float32),
         n_defers=jnp.zeros((n,), jnp.int32),
+        n_throttles=jnp.zeros((n,), jnp.int32),
     )
 
 
@@ -117,10 +130,14 @@ def init_sched_state(n_classes: int = N_CLASSES) -> SchedState:
     )
 
 
-def init_provider_state() -> ProviderState:
+def init_provider_state(n_classes: int = N_CLASSES) -> ProviderState:
+    # tb_tokens starts at zero; the engine seeds it to the configured
+    # burst capacity when a rate limiter is active (sim/engine.run_sim).
     return ProviderState(
         inflight=jnp.zeros((), jnp.int32),
         inflight_tokens=jnp.zeros((), jnp.float32),
+        tb_tokens=jnp.zeros((n_classes,), jnp.float32),
+        n_throttled=jnp.zeros((), jnp.int32),
     )
 
 
@@ -129,5 +146,5 @@ def init_sim_state(n: int, n_classes: int = N_CLASSES) -> SimState:
         now_ms=jnp.zeros((), jnp.float32),
         req=init_request_state(n),
         sched=init_sched_state(n_classes),
-        provider=init_provider_state(),
+        provider=init_provider_state(n_classes),
     )

@@ -1,6 +1,26 @@
 """JAX discrete-event simulation of the black-box provider boundary."""
 from repro.sim.engine import SimConfig, run_sim  # noqa: F401
-from repro.sim.metrics import SimMetrics, compute_metrics  # noqa: F401
-from repro.sim.provider import ProviderPhysics, default_physics  # noqa: F401
-from repro.sim.runner import run_cell, summarize  # noqa: F401
+from repro.sim.metrics import (  # noqa: F401
+    PhaseMetrics,
+    SimMetrics,
+    compute_metrics,
+    compute_phase_metrics,
+)
+from repro.sim.provider import (  # noqa: F401
+    ProviderDynamics,
+    ProviderPhysics,
+    default_physics,
+)
+from repro.sim.runner import (  # noqa: F401
+    run_cell,
+    run_scenario_cell,
+    summarize,
+)
+from repro.sim.scenarios import (  # noqa: F401
+    SCENARIOS,
+    Phase,
+    Scenario,
+    get_scenario,
+    list_scenarios,
+)
 from repro.sim.workload import REGIMES, WorkloadConfig, generate  # noqa: F401

@@ -18,6 +18,16 @@ Each tick:
      cost is O(K·N + B·K) instead of the O(B·K·N) the former sequential
      slot loop paid; with k_slots=1 the tick is bit-exact with the
      sequential `schedule_slot` path.
+
+Nonstationary provider dynamics (DESIGN.md §5): `run_sim` optionally
+takes a `ProviderDynamics` whose (T,)-shaped schedules ride the scan as
+xs — brownout comfort scaling applied to the tick's admissions, and a
+per-class token-bucket rate limiter at the provider boundary whose
+429-style bounces return the request to PENDING with a client-visible
+retry-after.  Presence of each mechanism is pytree structure (None =
+off), so scenario complexity costs nothing at trace time: the whole
+horizon stays one `lax.scan` with no Python per-tick branching, and
+`dynamics=None` compiles the exact stationary program.
 """
 from __future__ import annotations
 
@@ -27,7 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import overload as olc
-from repro.core.policy import PolicyConfig, n_classes
+from repro.core.policy import ALLOC_ADRR, PolicyConfig, n_classes
 from repro.core.scheduler import BatchDecision, schedule_batch
 from repro.core.types import (
     ABANDONED,
@@ -40,6 +50,7 @@ from repro.core.types import (
     init_sim_state,
 )
 from repro.sim.provider import (
+    ProviderDynamics,
     ProviderPhysics,
     service_time_ms,
     unloaded_latency_ms,
@@ -119,6 +130,8 @@ def _apply_batch(
     jitter: jnp.ndarray,
     state: SimState,
     d: BatchDecision,
+    comfort_scale=None,
+    limiter: ProviderDynamics | None = None,
 ) -> SimState:
     """State transition for up to B grants, as one set of scatters.
 
@@ -126,6 +139,15 @@ def _apply_batch(
     distinct entry of the ranked candidate lists), so the scatters never
     collide; idle rows are routed to the out-of-range index N and
     dropped.
+
+    `comfort_scale` is this tick's brownout value (None = stationary);
+    `limiter` enables the provider-boundary token bucket: an ADMIT whose
+    class bucket is out of grants bounces 429-style — the request stays
+    PENDING with `defer_until = now + retry_after` (the client-visible
+    retry) and the DRR charge is refunded like any blocked release.
+    Grants later in the same batch were decided against the optimistic
+    inflight count (the client only observes the bounce after the send),
+    which matches a real async client racing its own rate limit.
     """
     n = batch.n
     req = state.req
@@ -133,11 +155,23 @@ def _apply_batch(
     defer = d.actions == olc.DEFER
     reject = d.actions == olc.REJECT
     idx = d.req_idx
+    deficit = d.deficit
+
+    if limiter is not None:
+        k = state.provider.tb_tokens.shape[0]
+        gcls = jnp.clip(batch.cls[idx], 0, k - 1)
+        # g-th grant's rank among this batch's admits of the same class:
+        # admit is allowed iff the bucket holds that many grants
+        take = (gcls[:, None] == jnp.arange(k, dtype=jnp.int32)) & admit[:, None]
+        rank = (jnp.cumsum(take, axis=0) * take).sum(axis=-1)  # (B,) 1-based
+        allowed = rank.astype(jnp.float32) <= state.provider.tb_tokens[gcls] + 1e-6
+        throttled = admit & ~allowed
+        admit = admit & allowed
 
     # per-grant service physics at the inflight level the grant saw —
     # identical floats to the sequential one-admit-at-a-time path
     service = service_time_ms(
-        phys, batch.true_tokens[idx], d.inflight_at, jitter[idx]
+        phys, batch.true_tokens[idx], d.inflight_at, jitter[idx], comfort_scale
     )
     finish = state.now_ms + service
     backoff = olc.defer_backoff(cfg, d.severity, req.n_defers[idx])
@@ -154,9 +188,33 @@ def _apply_batch(
     defer_until = req.defer_until.at[def_i].set(
         state.now_ms + backoff, mode="drop")
     n_defers = req.n_defers.at[def_i].add(1, mode="drop")
+    n_throttles = req.n_throttles
 
-    inflight = state.provider.inflight + admit.sum().astype(jnp.int32)
-    inflight_tokens = state.provider.inflight_tokens + jnp.where(
+    provider = state.provider
+    if limiter is not None:
+        thr_i = jnp.where(throttled, idx, drop)
+        defer_until = defer_until.at[thr_i].set(
+            state.now_ms + limiter.retry_after_ms, mode="drop")
+        n_throttles = n_throttles.at[thr_i].add(1, mode="drop")
+        consumed = (take & admit[:, None]).sum(axis=0).astype(jnp.float32)
+        provider = provider._replace(
+            tb_tokens=provider.tb_tokens - consumed,
+            n_throttled=provider.n_throttled
+            + throttled.sum().astype(jnp.int32),
+        )
+        # deficit conservation: the allocation layer charged for these
+        # sends inside schedule_batch; the 429 blocked the release, so
+        # credit it back exactly like a defer/reject refund (ADRR only).
+        refund = (
+            jax.nn.one_hot(gcls, k)
+            * batch.p50[idx][:, None]
+            * throttled[:, None]
+        ).sum(axis=0) * (cfg.alloc_mode == ALLOC_ADRR)
+        deficit = jnp.where(jnp.isfinite(deficit + refund),
+                            deficit + refund, deficit)
+
+    inflight = provider.inflight + admit.sum().astype(jnp.int32)
+    inflight_tokens = provider.inflight_tokens + jnp.where(
         admit, batch.p50[idx], 0.0
     ).sum()
 
@@ -167,9 +225,10 @@ def _apply_batch(
             finish_ms=finish_ms,
             defer_until=defer_until,
             n_defers=n_defers,
+            n_throttles=n_throttles,
         ),
-        sched=state.sched._replace(deficit=d.deficit, rr_turn=d.rr_turn),
-        provider=state.provider._replace(
+        sched=state.sched._replace(deficit=deficit, rr_turn=d.rr_turn),
+        provider=provider._replace(
             inflight=inflight, inflight_tokens=inflight_tokens
         ),
     )
@@ -181,23 +240,57 @@ def run_sim(
     jitter: jnp.ndarray,
     phys: ProviderPhysics,
     sim_cfg: SimConfig = SimConfig(),
+    dynamics: ProviderDynamics | None = None,
 ) -> SimState:
-    """Run the full horizon; returns the final SimState (jit-friendly)."""
-    state0 = init_sim_state(batch.n, n_classes(policy))
+    """Run the full horizon; returns the final SimState (jit-friendly).
 
-    def tick(state: SimState, t_idx):
+    `dynamics` threads time-varying provider schedules through the scan
+    as (T,)-shaped xs (DESIGN.md §5).  Which mechanisms exist is pytree
+    structure — `dynamics=None` (or all-None fields) traces exactly the
+    stationary program, and schedule *content* never changes trace size:
+    scenario complexity is O(1) at compile time.
+    """
+    state0 = init_sim_state(batch.n, n_classes(policy))
+    has_brownout = dynamics is not None and dynamics.comfort_scale is not None
+    has_limiter = dynamics is not None and dynamics.tb_refill is not None
+    if has_limiter:
+        # buckets start full: the burst capacity is available at t=0
+        state0 = state0._replace(
+            provider=state0.provider._replace(tb_tokens=dynamics.tb_capacity)
+        )
+
+    def tick(state: SimState, xs):
+        t_idx, comfort_t, refill_t = xs
         now = (t_idx + 1).astype(jnp.float32) * sim_cfg.dt_ms
         state = state._replace(now_ms=now)
         state = _complete_and_timeout(policy, phys, batch, state)
+        if has_limiter:
+            state = state._replace(
+                provider=state.provider._replace(
+                    tb_tokens=jnp.minimum(
+                        state.provider.tb_tokens + refill_t,
+                        dynamics.tb_capacity,
+                    )
+                )
+            )
         d = schedule_batch(
             policy, batch, state,
             max_grants=sim_cfg.k_slots,
             backend=sim_cfg.ordering_backend,
         )
-        state = _apply_batch(policy, phys, batch, jitter, state, d)
+        state = _apply_batch(
+            policy, phys, batch, jitter, state, d,
+            comfort_scale=comfort_t,
+            limiter=dynamics if has_limiter else None,
+        )
         return state, None
 
-    final, _ = jax.lax.scan(tick, state0, jnp.arange(sim_cfg.n_ticks))
+    xs = (
+        jnp.arange(sim_cfg.n_ticks),
+        dynamics.comfort_scale if has_brownout else None,
+        dynamics.tb_refill if has_limiter else None,
+    )
+    final, _ = jax.lax.scan(tick, state0, xs)
     # drain bookkeeping: completions that land exactly at/after the horizon
     final = final._replace(now_ms=final.now_ms + 1e9)
     final = _complete_and_timeout(policy, phys, batch, final)

@@ -15,6 +15,14 @@ same.
 
 Masked percentiles are computed by sorting with +inf fill so the whole
 metric block stays inside jit/vmap.
+
+The windowed extension (`compute_phase_metrics`, DESIGN.md §5) slices
+every joint metric by scenario phase: requests are assigned to the
+phase their *arrival* falls in, and each phase reports per-class P95,
+deadline satisfaction, shed counts by ladder rung (the bucket-keyed
+cost ladder), abandonment, and provider 429 bounces.  The (P, N) and
+(P, K, N) masks reduce under one nested vmap, so the block stays O(1)
+in P and K inside the trace.
 """
 from __future__ import annotations
 
@@ -134,4 +142,91 @@ def compute_metrics(
         class_satisfaction=met_k / jnp.maximum(accepted_k, 1),
         class_goodput_rps=met_k / (makespan / 1000.0),
         class_n_requests=cls_kn.sum(axis=1).astype(jnp.int32),
+    )
+
+
+class PhaseMetrics(NamedTuple):
+    """Per-phase joint metrics for a scenario run (leading axis = phase).
+
+    Requests belong to the phase their arrival falls in (arrivals past
+    the last edge clip into the final phase).  Counts are over offered
+    requests; rates are over the phase's accepted set, mirroring the
+    aggregate `SimMetrics` conventions.
+    """
+
+    phase_start_ms: jnp.ndarray       # (P,) f32 window left edges
+    n_arrived: jnp.ndarray            # (P,) int32 offered per phase
+    n_completed: jnp.ndarray          # (P,) int32
+    n_abandoned: jnp.ndarray          # (P,) int32 implicit failures
+    n_throttled: jnp.ndarray          # (P,) int32 provider 429 bounces
+    shed_by_bucket: jnp.ndarray       # (P, 4) int32 rejects per ladder rung
+    satisfaction: jnp.ndarray         # (P,) f32 deadline-met / accepted
+    p95_ms: jnp.ndarray               # (P,) f32 completed-latency P95
+    class_p95_ms: jnp.ndarray         # (P, K) f32
+    class_satisfaction: jnp.ndarray   # (P, K) f32
+
+
+def compute_phase_metrics(
+    batch: RequestBatch,
+    final: SimState,
+    edges_ms: jnp.ndarray,
+    n_classes: int | None = None,
+) -> PhaseMetrics:
+    """Windowed metrics over the (P+1,) phase boundaries `edges_ms`."""
+    if n_classes is None:
+        n_classes = final.sched.deficit.shape[-1]
+    n_phases = edges_ms.shape[0] - 1
+    req = final.req
+    done = (req.status == COMPLETED) & batch.valid
+    rejected = (req.status == REJECTED) & batch.valid
+    abandoned = (req.status == ABANDONED) & batch.valid
+    latency = req.finish_ms - batch.arrival_ms
+    met = done & (req.finish_ms <= batch.arrival_ms + batch.deadline_budget_ms)
+
+    phase = jnp.clip(
+        jnp.searchsorted(edges_ms, batch.arrival_ms, side="right") - 1,
+        0,
+        n_phases - 1,
+    )
+    # (P, N) membership, then (P, K, N) for the class split
+    in_p = (
+        phase[None, :] == jnp.arange(n_phases, dtype=jnp.int32)[:, None]
+    ) & batch.valid[None, :]
+    cls = jnp.clip(batch.cls, 0, n_classes - 1)
+    cls_kn = cls[None, :] == jnp.arange(n_classes, dtype=jnp.int32)[:, None]
+    in_pk = in_p[:, None, :] & cls_kn[None, :, :]
+
+    accepted_p = (in_p & ~rejected[None, :]).sum(axis=1)
+    done_pk = in_pk & done[None, None, :]
+    met_pk = in_pk & met[None, None, :]
+    accepted_pk = (in_pk & ~rejected[None, None, :]).sum(axis=2)
+
+    bucket_oh = (
+        batch.bucket[None, :] == jnp.arange(4, dtype=jnp.int32)[:, None]
+    )  # (4, N)
+    shed = (
+        in_p[:, None, :] & bucket_oh[None, :, :] & rejected[None, None, :]
+    ).sum(axis=2)
+
+    p95 = jax.vmap(lambda m: masked_percentile(latency, m, 0.95))(
+        in_p & done[None, :]
+    )
+    class_p95 = jax.vmap(
+        jax.vmap(lambda m: masked_percentile(latency, m, 0.95))
+    )(done_pk)
+
+    return PhaseMetrics(
+        phase_start_ms=edges_ms[:-1],
+        n_arrived=in_p.sum(axis=1).astype(jnp.int32),
+        n_completed=(in_p & done[None, :]).sum(axis=1).astype(jnp.int32),
+        n_abandoned=(in_p & abandoned[None, :]).sum(axis=1).astype(jnp.int32),
+        n_throttled=jnp.where(in_p, req.n_throttles[None, :], 0)
+        .sum(axis=1)
+        .astype(jnp.int32),
+        shed_by_bucket=shed.astype(jnp.int32),
+        satisfaction=(in_p & met[None, :]).sum(axis=1)
+        / jnp.maximum(accepted_p, 1),
+        p95_ms=p95,
+        class_p95_ms=class_p95,
+        class_satisfaction=met_pk.sum(axis=2) / jnp.maximum(accepted_pk, 1),
     )

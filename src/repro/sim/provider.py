@@ -14,10 +14,30 @@ the provider is driven past its comfortable concurrency.
 The provider is intentionally *not* observable beyond completions: the
 client sees latencies and its own outstanding count, matching the
 black-box boundary.
+
+Time-varying dynamics (DESIGN.md §5): real providers are not a fixed
+curve.  `ProviderDynamics` carries (T,)-shaped per-tick schedules the
+engine threads through its `lax.scan` —
+
+  * **brownout windows**: `comfort_scale[t]` multiplies the comfort
+    concurrency, so the same inflight level produces a steeper slowdown
+    inside the window (capacity loss the client can only infer from
+    latencies);
+  * **per-class token-bucket rate limits**: `tb_refill[t]` grants/tick
+    per service class against a `tb_capacity` burst; an admitted send
+    that finds the bucket empty bounces with a 429-style rejection and
+    a client-visible `retry_after_ms` (the request returns to PENDING
+    with its defer clock set — the client observes the bounce, not the
+    bucket).
+
+Each field is None when that mechanism is off; None is pytree
+*structure*, so jit specializes the engine statically without tracing a
+branch per tick.  Schedules are built from a static `Scenario` spec
+(sim/scenarios.py) inside the jit boundary.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 
@@ -50,11 +70,22 @@ def physics_for_arch(ms_per_token: float, base_ms: float = 90.0) -> ProviderPhys
     return default_physics(base_ms=base_ms, ms_per_token=ms_per_token)
 
 
-def load_multiplier(phys: ProviderPhysics, inflight) -> jnp.ndarray:
-    """Convex slowdown once offered load passes the comfort knee."""
+def load_multiplier(
+    phys: ProviderPhysics, inflight, comfort_scale=None
+) -> jnp.ndarray:
+    """Convex slowdown once offered load passes the comfort knee.
+
+    `comfort_scale` (brownout schedule value) multiplies the comfort
+    concurrency: scale < 1 moves the knee left, so the same inflight
+    level is deeper into the convex region.  None (the stationary
+    default) leaves the computation untouched.
+    """
+    comfort = phys.comfort_concurrency
+    if comfort_scale is not None:
+        comfort = comfort * jnp.asarray(comfort_scale, jnp.float32)
     excess = jnp.maximum(
-        jnp.asarray(inflight, jnp.float32) - phys.comfort_concurrency, 0.0
-    ) / jnp.maximum(phys.comfort_concurrency, 1.0)
+        jnp.asarray(inflight, jnp.float32) - comfort, 0.0
+    ) / jnp.maximum(comfort, 1.0)
     return 1.0 + phys.slowdown_slope * excess + phys.slowdown_quad * excess**2
 
 
@@ -62,8 +93,82 @@ def unloaded_latency_ms(phys: ProviderPhysics, tokens) -> jnp.ndarray:
     return phys.base_ms + phys.ms_per_token * jnp.asarray(tokens, jnp.float32)
 
 
-def service_time_ms(phys: ProviderPhysics, tokens, inflight, jitter) -> jnp.ndarray:
+def service_time_ms(
+    phys: ProviderPhysics, tokens, inflight, jitter, comfort_scale=None
+) -> jnp.ndarray:
     """Realized service time for a request admitted with `inflight`
     concurrent jobs already outstanding; `jitter` is a per-request
-    multiplicative noise term (~U[0.95, 1.05]) from the workload PRNG."""
-    return unloaded_latency_ms(phys, tokens) * load_multiplier(phys, inflight) * jitter
+    multiplicative noise term (~U[0.95, 1.05]) from the workload PRNG.
+    `comfort_scale` applies the brownout window active at admission —
+    service time is fixed at admission, so a window inflates exactly the
+    requests admitted inside it."""
+    return (
+        unloaded_latency_ms(phys, tokens)
+        * load_multiplier(phys, inflight, comfort_scale)
+        * jitter
+    )
+
+
+# ---------------------------------------------------------------------------
+# Time-varying provider dynamics (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+
+class ProviderDynamics(NamedTuple):
+    """Per-tick provider schedules, threaded through the engine scan.
+
+    All-or-nothing per mechanism: `comfort_scale` is None when no
+    brownout is configured; `tb_refill`/`tb_capacity`/`retry_after_ms`
+    are None together when no rate limiter is configured.  Build these
+    inside the jit boundary (from a static scenario spec) so the None
+    checks stay Python-static.
+    """
+
+    comfort_scale: Optional[jnp.ndarray]  # (T,) f32 brownout knee multiplier
+    tb_refill: Optional[jnp.ndarray]      # (T, K) f32 grants refilled per tick
+    tb_capacity: Optional[jnp.ndarray]    # (K,) f32 bucket burst size
+    retry_after_ms: Optional[jnp.ndarray] # () f32 client-visible Retry-After
+
+
+def no_dynamics() -> ProviderDynamics:
+    """The stationary provider: every mechanism off."""
+    return ProviderDynamics(None, None, None, None)
+
+
+def brownout_schedule(
+    n_ticks: int,
+    dt_ms: float,
+    windows: tuple[tuple[float, float, float], ...],
+    span_ms: float,
+) -> jnp.ndarray:
+    """(T,) comfort multiplier: 1 everywhere except inside each window.
+
+    Windows are `(start_frac, end_frac, scale)` as fractions of
+    `span_ms` (the scenario's arrival span, not the raw sim horizon, so
+    windows land on the traffic).  Overlapping windows compound by
+    taking the minimum scale.
+    """
+    t_ms = (jnp.arange(n_ticks, dtype=jnp.float32) + 1.0) * dt_ms
+    scale = jnp.ones((n_ticks,), jnp.float32)
+    for start_frac, end_frac, s in windows:
+        inside = (t_ms >= start_frac * span_ms) & (t_ms < end_frac * span_ms)
+        scale = jnp.where(inside, jnp.minimum(scale, jnp.float32(s)), scale)
+    return scale
+
+
+def token_bucket_schedule(
+    n_ticks: int,
+    dt_ms: float,
+    rate_rps: tuple[float, ...],
+    burst: float,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-class refill schedule: `(T, K)` grants/tick and `(K,)` burst
+    capacity for a limiter of `rate_rps[k]` sustained grants per second.
+    Constant over time today, but shaped (T, K) so a future scenario can
+    tighten limits mid-run without touching the engine contract."""
+    rate = jnp.asarray(rate_rps, jnp.float32)  # (K,)
+    refill = jnp.broadcast_to(
+        rate * (dt_ms / 1000.0), (n_ticks, rate.shape[0])
+    )
+    capacity = jnp.full((rate.shape[0],), jnp.float32(burst))
+    return refill, capacity

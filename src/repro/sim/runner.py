@@ -2,6 +2,10 @@
 
 `run_cell` executes one (policy, workload-config) cell over S seeds in a
 single jit'd vmap — the unit every benchmark is built from.
+`run_scenario_cell` is the nonstationary counterpart: one (policy,
+scenario) cell, with the static `Scenario` spec materialized into
+schedule arrays inside the jit boundary and per-phase windowed metrics
+returned alongside the aggregates.
 """
 from __future__ import annotations
 
@@ -13,8 +17,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policy import PolicyConfig, n_classes
+from repro.sim import scenarios as scn
 from repro.sim.engine import SimConfig, run_sim
-from repro.sim.metrics import SimMetrics, compute_metrics
+from repro.sim.metrics import (
+    PhaseMetrics,
+    SimMetrics,
+    compute_metrics,
+    compute_phase_metrics,
+)
 from repro.sim.provider import ProviderPhysics, default_physics
 from repro.sim.workload import WorkloadConfig, generate, n_classes_of
 
@@ -57,6 +67,74 @@ def run_cell(
         )
     keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(seed0, seed0 + seeds))
     return _run_seeds(policy, phys, keys, wl_cfg, sim_cfg)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scenario", "sim_cfg", "n_requests", "class_map",
+                     "information"),
+)
+def _run_scenario_seeds(
+    policy: PolicyConfig,
+    phys: ProviderPhysics,
+    keys: jax.Array,
+    scenario: scn.Scenario,
+    sim_cfg: SimConfig,
+    n_requests: int,
+    class_map: str,
+    information: str,
+) -> tuple[SimMetrics, PhaseMetrics]:
+    k = n_classes(policy)
+    wl_cfg, sched, dynamics, edges = scn.build(
+        scenario, n_requests, sim_cfg.n_ticks, sim_cfg.dt_ms,
+        class_map=class_map, information=information,
+        limiter_classes=k,
+    )
+
+    def one(key):
+        batch, jitter = generate(key, wl_cfg, sched)
+        final = run_sim(policy, batch, jitter, phys, sim_cfg, dynamics)
+        return (
+            compute_metrics(batch, final, k),
+            compute_phase_metrics(batch, final, edges, k),
+        )
+
+    return jax.vmap(one)(keys)
+
+
+def run_scenario_cell(
+    policy: PolicyConfig,
+    scenario: scn.Scenario | str,
+    *,
+    seeds: int = 5,
+    seed0: int = 0,
+    n_requests: int = 160,
+    class_map: str = "paper2",
+    information: str = "coarse",
+    phys: ProviderPhysics | None = None,
+    sim_cfg: SimConfig = SimConfig(),
+) -> tuple[SimMetrics, PhaseMetrics]:
+    """One (policy, scenario) cell over S seeds in a single jit'd vmap.
+
+    Returns (aggregate metrics, per-phase metrics), both stacked over
+    the leading seed axis.  The scenario spec is static: each distinct
+    scenario compiles once and its schedule arrays are trace constants.
+    """
+    if isinstance(scenario, str):
+        scenario = scn.get_scenario(scenario)
+    phys = phys if phys is not None else default_physics()
+    wl_k = n_classes_of(class_map)
+    pol_k = n_classes(policy)
+    if wl_k > pol_k:
+        raise ValueError(
+            f"lane scheme {class_map!r} needs {wl_k} classes but the "
+            f"policy carries {pol_k}; build it with kclass_policy({wl_k})"
+        )
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(seed0, seed0 + seeds))
+    return _run_scenario_seeds(
+        policy, phys, keys, scenario, sim_cfg, n_requests, class_map,
+        information,
+    )
 
 
 def summarize(m: SimMetrics) -> Mapping[str, tuple[float, float]]:

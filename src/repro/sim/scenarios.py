@@ -1,0 +1,278 @@
+"""Scenario registry: named nonstationary workload + provider regimes.
+
+The paper's headline claims are regime-dependent — balanced vs
+high-congestion vs heavy-dominated mixes separate the policies on
+completion, tail, and shedding — and related work (adaptively robust
+inference optimization; queueing with predictions) argues nonstationary
+arrivals are where prediction-aware policies earn their keep.  A
+`Scenario` is a *static, hashable* spec composing:
+
+  * **arrival shape** — piecewise-constant phases `(frac, rate_mult,
+    mix)` over the scenario's arrival span: burst trains, diurnal ramps,
+    flash crowds, heavy-dominated phase shifts;
+  * **provider dynamics** — brownout windows (comfort-concurrency drops
+    mid-run) and per-class token-bucket rate limits with 429-style
+    bounces (sim/provider.ProviderDynamics).
+
+Because the spec is hashable (tuples of floats/strings) it rides jit as
+a static argument; `build()` materializes the `(T,)`-shaped schedule
+arrays *inside* the jit boundary, so the engine's `lax.scan` shape is
+O(1) in scenario complexity and which mechanisms exist is decided at
+trace time (None = off).
+
+Phases are laid over the scenario's expected stationary arrival span
+(`n_requests / base_rate`), not the raw sim horizon — the horizon
+includes drain time, and phases must land on the traffic.  Registry
+scenarios keep the frac-weighted mean rate multiplier at 1.0 so every
+phase is populated in expectation and total offered work matches the
+stationary regime of the same name.
+
+The `balanced` scenario is the stationary anchor: its schedule is the
+trivial one-phase identity and it configures no provider dynamics, so
+it reproduces plain `generate` + `run_sim` *bit-exactly*
+(tests/test_scenarios.py pins this).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.sim.provider import (
+    ProviderDynamics,
+    brownout_schedule,
+    token_bucket_schedule,
+)
+from repro.sim.workload import (
+    MIXES,
+    ArrivalSchedule,
+    WorkloadConfig,
+    arrival_rate,
+    n_classes_of,
+)
+
+
+class Phase(NamedTuple):
+    """One arrival phase: a fraction of the arrival span at a rate
+    multiplier, optionally overriding the bucket mix."""
+
+    frac: float
+    rate_mult: float = 1.0
+    mix: Optional[str] = None  # None = the scenario's base mix
+
+
+class Scenario(NamedTuple):
+    """Static scenario spec.  Hashable — usable as a jit static arg."""
+
+    name: str
+    mix: str = "balanced"
+    congestion: str = "medium"
+    phases: tuple[Phase, ...] = (Phase(1.0),)
+    # brownout windows: (start_frac, end_frac, comfort_scale) over the
+    # arrival span; comfort_scale < 1 shrinks provider capacity inside
+    brownouts: tuple[tuple[float, float, float], ...] = ()
+    # per-class token-bucket rate limit (sustained grants/sec); a scalar
+    # applies to every class, None disables the limiter
+    tb_rate_rps: Optional[float | tuple[float, ...]] = None
+    tb_burst: float = 6.0
+    retry_after_ms: float = 1500.0
+
+    @property
+    def has_dynamics(self) -> bool:
+        return bool(self.brownouts) or self.tb_rate_rps is not None
+
+
+def arrival_span_ms(sc: Scenario, n_requests: int) -> float:
+    """Expected stationary arrival span the phases are laid over."""
+    return n_requests / arrival_rate(sc.mix, sc.congestion) * 1000.0
+
+
+def phase_edges_ms(sc: Scenario, n_requests: int) -> jnp.ndarray:
+    """(P+1,) wall-clock phase boundaries — the metric windows."""
+    span = arrival_span_ms(sc, n_requests)
+    fracs = jnp.asarray([p.frac for p in sc.phases], jnp.float32)
+    return jnp.concatenate(
+        [jnp.zeros((1,), jnp.float32), jnp.cumsum(fracs) * span]
+    )
+
+
+def build_arrival_schedule(sc: Scenario, n_requests: int) -> ArrivalSchedule:
+    """Materialize the piecewise schedule arrays from the static spec."""
+    total = sum(p.frac for p in sc.phases)
+    if abs(total - 1.0) > 1e-6:
+        raise ValueError(
+            f"scenario {sc.name!r}: phase fracs must sum to 1, got {total}")
+    span = arrival_span_ms(sc, n_requests)
+    t0, cum_work = [], []
+    t = w = 0.0
+    for p in sc.phases:
+        if p.rate_mult <= 0:
+            raise ValueError(
+                f"scenario {sc.name!r}: rate_mult must be > 0, got "
+                f"{p.rate_mult}")
+        t0.append(t)
+        cum_work.append(w)
+        t += p.frac * span
+        w += p.rate_mult * p.frac * span
+    mix_w = jnp.stack(
+        [MIXES[p.mix if p.mix is not None else sc.mix] for p in sc.phases]
+    )
+    return ArrivalSchedule(
+        t0_ms=jnp.asarray(t0, jnp.float32),
+        cum_work_ms=jnp.asarray(cum_work, jnp.float32),
+        rate_mult=jnp.asarray([p.rate_mult for p in sc.phases], jnp.float32),
+        mix_w=mix_w,
+        mix_varies=any(p.mix is not None and p.mix != sc.mix
+                       for p in sc.phases),
+    )
+
+
+def build_dynamics(
+    sc: Scenario, n_ticks: int, dt_ms: float, n_requests: int, k: int
+) -> ProviderDynamics | None:
+    """Materialize the (T,)-shaped provider schedules; None when the
+    scenario configures no dynamics (the engine then compiles the exact
+    stationary program)."""
+    if not sc.has_dynamics:
+        return None
+    span = arrival_span_ms(sc, n_requests)
+    comfort = (
+        brownout_schedule(n_ticks, dt_ms, sc.brownouts, span)
+        if sc.brownouts else None
+    )
+    refill = capacity = retry = None
+    if sc.tb_rate_rps is not None:
+        rate = sc.tb_rate_rps
+        rate_k = tuple([float(rate)] * k) if isinstance(rate, (int, float)) \
+            else tuple(float(r) for r in rate)
+        if len(rate_k) != k:
+            raise ValueError(
+                f"scenario {sc.name!r}: tb_rate_rps has {len(rate_k)} "
+                f"classes but the run carries {k}")
+        refill, capacity = token_bucket_schedule(
+            n_ticks, dt_ms, rate_k, sc.tb_burst)
+        retry = jnp.float32(sc.retry_after_ms)
+    return ProviderDynamics(
+        comfort_scale=comfort,
+        tb_refill=refill,
+        tb_capacity=capacity,
+        retry_after_ms=retry,
+    )
+
+
+def build(
+    sc: Scenario,
+    n_requests: int,
+    n_ticks: int,
+    dt_ms: float,
+    class_map: str = "paper2",
+    information: str = "coarse",
+    limiter_classes: int | None = None,
+) -> tuple[WorkloadConfig, ArrivalSchedule, ProviderDynamics | None,
+           jnp.ndarray]:
+    """One-stop materialization: (workload cfg, arrival schedule,
+    provider dynamics, metric phase edges).  Call inside the jit
+    boundary with a static `sc`.
+
+    `limiter_classes` sizes the token-bucket vectors; pass the *policy*
+    class count when it exceeds the lane scheme's (the engine's bucket
+    state is sized by the policy).  Defaults to the lane scheme's K.
+    """
+    wl_cfg = WorkloadConfig(
+        n_requests=n_requests,
+        mix=sc.mix,
+        congestion=sc.congestion,
+        information=information,
+        class_map=class_map,
+    )
+    sched = build_arrival_schedule(sc, n_requests)
+    k = limiter_classes if limiter_classes is not None \
+        else n_classes_of(class_map)
+    dynamics = build_dynamics(sc, n_ticks, dt_ms, n_requests, k)
+    return wl_cfg, sched, dynamics, phase_edges_ms(sc, n_requests)
+
+
+# ---------------------------------------------------------------------------
+# The registry.  Mean rate multiplier is 1.0 in every scenario (offered
+# work matches the stationary regime; all phases populated in
+# expectation); burstiness lives in the phase-to-phase ratios.
+# ---------------------------------------------------------------------------
+
+_QUIET, _BURST = 0.4, 1.6  # burst train: 4x rate swing, mean 1.0
+
+SCENARIOS: dict[str, Scenario] = {
+    # stationary anchors — `balanced` is pinned bit-exact vs run_sim
+    "balanced": Scenario("balanced"),
+    "high_congestion": Scenario("high_congestion", congestion="high"),
+    # alternating quiet/burst epochs (queueing-with-predictions style)
+    "burst_train": Scenario(
+        "burst_train",
+        phases=tuple(
+            Phase(0.125, m) for m in (_QUIET, _BURST) * 4
+        ),
+    ),
+    # diurnal ramp: trough -> peak -> trough, peak 5x the trough rate
+    "diurnal": Scenario(
+        "diurnal",
+        phases=tuple(
+            Phase(1.0 / 7.0, m)
+            for m in (0.4, 0.8, 1.3, 2.0, 1.3, 0.8, 0.4)
+        ),
+    ),
+    # heavy-dominated phase shift: token mix flips mid-run while the
+    # request rate holds, overloading the provider through work, not count
+    "heavy_shift": Scenario(
+        "heavy_shift",
+        phases=(
+            Phase(0.4, 1.0),
+            Phase(0.3, 1.0, mix="heavy"),
+            Phase(0.3, 1.0),
+        ),
+    ),
+    # flash crowd: short 4.3x spike over a calm baseline
+    "flash_crowd": Scenario(
+        "flash_crowd",
+        phases=(Phase(0.45, 0.75), Phase(0.1, 3.25), Phase(0.45, 0.75)),
+    ),
+    # brownout: stationary high congestion, provider loses 60% of its
+    # comfort capacity for the middle third of the run
+    "brownout": Scenario(
+        "brownout",
+        congestion="high",
+        phases=(Phase(1 / 3), Phase(1 / 3), Phase(1 / 3)),
+        brownouts=((1 / 3, 2 / 3, 0.4),),
+    ),
+    # provider-boundary rate limit: sustained per-class grant budget well
+    # under the offered rate, bursts absorbed by the bucket then 429'd
+    "rate_limited": Scenario(
+        "rate_limited",
+        congestion="high",
+        phases=(Phase(0.25, _QUIET), Phase(0.25, _BURST),
+                Phase(0.25, _QUIET), Phase(0.25, _BURST)),
+        tb_rate_rps=0.5,
+        tb_burst=6.0,
+    ),
+    # the perfect storm: flash crowd into a browned-out, rate-limited
+    # provider — every mechanism at once
+    "storm": Scenario(
+        "storm",
+        congestion="high",
+        phases=(Phase(0.3, 0.7), Phase(0.2, 2.2), Phase(0.5, 0.7)),
+        brownouts=((0.3, 0.5, 0.5),),
+        tb_rate_rps=0.8,
+        tb_burst=8.0,
+    ),
+}
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; known: {sorted(SCENARIOS)}"
+        ) from None
+
+
+def list_scenarios() -> list[str]:
+    return sorted(SCENARIOS)

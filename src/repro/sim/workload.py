@@ -20,6 +20,17 @@ deterministic given a RequestBatch, which keeps the lax.scan engine
 replayable and the experiments seed-exact.  The `paper2` random stream
 is bit-identical to the seed generator (tenant assignment draws from a
 folded key, never perturbing the base streams).
+
+Nonstationary arrivals (DESIGN.md §5): `generate` optionally takes an
+`ArrivalSchedule` — a piecewise-constant rate multiplier + bucket mix
+over phases of the horizon.  Arrivals are produced by time-warping the
+stationary Poisson stream (inverse of the cumulative-work function, one
+vectorized searchsorted), so the trivial schedule (one phase, unit
+multiplier) is *bit-exact* with the stationary generator: the warp is
+`t = 0 + (u - 0) / 1.0`, an IEEE identity.  Per-phase bucket mixes use
+inverse-CDF sampling on the same bucket key only when the mix actually
+varies (a static property of the schedule), so constant-mix scenarios
+keep the seed bucket stream bit-exact too.
 """
 from __future__ import annotations
 
@@ -107,6 +118,62 @@ class WorkloadConfig(NamedTuple):
     class_map: str = "paper2"     # lane scheme: paper2 | bucket4 | tenant<K>
 
 
+class ArrivalSchedule(NamedTuple):
+    """Piecewise-constant arrival shaping over P phases.
+
+    Build from a static `Scenario` spec (sim/scenarios.py) *inside* the
+    jit boundary: `mix_varies` is a plain Python bool and must stay
+    concrete at trace time.  Phase p covers `[t0_ms[p], t0_ms[p+1])`
+    (the last phase extends to +inf) with arrival-rate multiplier
+    `rate_mult[p]` and bucket mix `mix_w[p]`.  `cum_work_ms[p]` is the
+    stationary-equivalent work consumed before phase p — the running
+    integral of the rate multiplier — which makes the Poisson time-warp
+    a single searchsorted.
+    """
+
+    t0_ms: jnp.ndarray        # (P,) f32 phase start times
+    cum_work_ms: jnp.ndarray  # (P,) f32 warped work at each phase start
+    rate_mult: jnp.ndarray    # (P,) f32 arrival-rate multiplier per phase
+    mix_w: jnp.ndarray        # (P, 4) f32 bucket mix per phase
+    mix_varies: bool          # static: any phase deviates from the base mix
+
+
+def phase_index(sched: ArrivalSchedule, t_ms: jnp.ndarray) -> jnp.ndarray:
+    """Phase id of each time point (clipped into [0, P))."""
+    p = jnp.searchsorted(sched.t0_ms, t_ms, side="right") - 1
+    return jnp.clip(p, 0, sched.t0_ms.shape[0] - 1).astype(jnp.int32)
+
+
+def warp_arrivals(work_ms: jnp.ndarray, sched: ArrivalSchedule) -> jnp.ndarray:
+    """Invert the cumulative-work function: map stationary-equivalent
+    work coordinates onto wall-clock arrival times.
+
+    A phase with multiplier m compresses its arrivals by 1/m (m > 1 =
+    burst).  Work beyond the last boundary extrapolates with the last
+    phase's multiplier.  With the trivial schedule this reduces to the
+    identity `0 + (u - 0) / 1.0` — bit-exact with the stationary path.
+    """
+    p = jnp.clip(
+        jnp.searchsorted(sched.cum_work_ms, work_ms, side="right") - 1,
+        0,
+        sched.cum_work_ms.shape[0] - 1,
+    )
+    return sched.t0_ms[p] + (work_ms - sched.cum_work_ms[p]) / sched.rate_mult[p]
+
+
+def _sample_bucket_per_request(key: jax.Array, p: jnp.ndarray) -> jnp.ndarray:
+    """Inverse-CDF categorical draw with per-request probabilities (N, 4).
+
+    Only used when the schedule's mix actually varies — the constant-mix
+    path keeps `jax.random.choice` so its bucket stream stays bit-exact
+    with the seed generator.
+    """
+    cdf = jnp.cumsum(p, axis=-1)
+    cdf = cdf / cdf[..., -1:]  # renormalize against float drift
+    r = jax.random.uniform(key, (p.shape[0], 1))
+    return (r >= cdf[..., :-1]).sum(axis=-1).astype(jnp.int32)
+
+
 def bucket_to_class(bucket: jnp.ndarray) -> jnp.ndarray:
     """Interactive lane = short bucket; heavy lane = everything else."""
     return jnp.where(bucket == SHORT, CLS_INTERACTIVE, CLS_HEAVY).astype(jnp.int32)
@@ -146,17 +213,32 @@ def assign_class(
     return jax.random.randint(k_tenant, bucket.shape, 0, k, jnp.int32)
 
 
-def generate(key: jax.Array, cfg: WorkloadConfig) -> tuple[RequestBatch, jnp.ndarray]:
-    """Returns (batch, jitter) — jitter is the provider-side noise vector."""
+def generate(
+    key: jax.Array,
+    cfg: WorkloadConfig,
+    sched: ArrivalSchedule | None = None,
+) -> tuple[RequestBatch, jnp.ndarray]:
+    """Returns (batch, jitter) — jitter is the provider-side noise vector.
+
+    `sched` shapes the arrival process (and optionally the bucket mix)
+    nonstationarily; None is the stationary path.  The trivial schedule
+    produces bit-identical batches to None (see module docstring).
+    """
     n = cfg.n_requests
     k_arr, k_bkt, k_tok, k_prior, k_noise, k_jit = jax.random.split(key, 6)
 
     rate = arrival_rate(cfg.mix, cfg.congestion) * cfg.arrival_scale
     gaps_ms = jax.random.exponential(k_arr, (n,)) * (1000.0 / rate)
-    arrival = jnp.cumsum(gaps_ms)
+    work = jnp.cumsum(gaps_ms)
+    arrival = work if sched is None else warp_arrivals(work, sched)
 
     mix = MIXES[cfg.mix]
-    bucket = jax.random.choice(k_bkt, 4, (n,), p=mix).astype(jnp.int32)
+    if sched is not None and sched.mix_varies:
+        bucket = _sample_bucket_per_request(
+            k_bkt, sched.mix_w[phase_index(sched, arrival)]
+        )
+    else:
+        bucket = jax.random.choice(k_bkt, 4, (n,), p=mix).astype(jnp.int32)
 
     lo = BUCKET_TOKENS[bucket, 0]
     hi = BUCKET_TOKENS[bucket, 1]

@@ -122,6 +122,7 @@ class TestB1BitExact:
         if name != "direct_naive":
             assert live > 5
 
+    @pytest.mark.slow
     def test_engine_k_slots_1_matches_sequential_reference(self):
         """Full-horizon engine equivalence: the batched tick at
         k_slots=1 equals the former sequential `_dispatch_one` loop,
@@ -323,6 +324,7 @@ class TestMultiGrant:
         assert (acts[acts != IDLE] == olc.DEFER).all()
         assert len(set(live.tolist())) == len(live)
 
+    @pytest.mark.slow
     def test_engine_b4_terminates_and_conserves(self):
         """Full sim at k_slots=4 (one batched pass per tick): every
         request reaches a terminal state."""
@@ -339,6 +341,7 @@ class TestMultiGrant:
 # rr_turn stays in range across long FQ runs (satellite bugfix)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 class TestRrTurnRange:
     @pytest.mark.parametrize("k", [2, 3, 8])
     def test_allocate_pointer_wraps(self, k):

@@ -189,6 +189,7 @@ def _mixed_batch(n=24, seed=0):
     return mk_batch(n, arrival=arrival, bucket=bucket, p50=np.float32(p50))
 
 
+@pytest.mark.slow
 class TestSeedBitExact:
     @pytest.mark.parametrize("name", [
         "final_adrr_olc", "adaptive_drr", "fair_queuing", "short_priority",
@@ -301,6 +302,7 @@ class TestDeficitConservationK8:
         return cfg, batch, state
 
     @pytest.mark.parametrize("reject", [False, True])
+    @pytest.mark.slow
     def test_refund_restores_charged_deficit(self, reject):
         cfg, batch, state = self._k8_setup(reject)
         d = schedule_slot(cfg, batch, state)
@@ -414,6 +416,7 @@ class TestLaneSchemes:
         with pytest.raises(ValueError):
             n_classes_of("tenant0")
 
+    @pytest.mark.slow
     def test_tenant_assignment_preserves_base_streams(self):
         """tenant<K> draws from a folded key: every other field must stay
         bit-identical to the paper2 (seed) generator."""
@@ -445,6 +448,7 @@ class TestLaneSchemes:
         assert n_classes(cfg) == 4
         assert cfg.class_cap.shape == (4,)
 
+    @pytest.mark.slow
     def test_k8_full_sim_terminates_and_accounts(self):
         """Every request reaches a terminal state at K=8 and per-class
         counts partition the batch."""

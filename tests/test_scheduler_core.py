@@ -237,6 +237,9 @@ class TestAllocation:
         c = drr.allocate(cfg, **alloc_args())
         assert bool(c.ignore_class) and bool(c.send_ok)
 
+    # the slow mark sits *above* @given: the hypothesis fallback shim's
+    # wrapper does not propagate pytestmark from the wrapped function
+    @pytest.mark.slow
     @given(
         b0=st.integers(0, 3), b1=st.integers(0, 3),
         sev=st.floats(0, 1.5), d0=st.floats(0, 3000), d1=st.floats(0, 3000),

@@ -95,6 +95,7 @@ class TestWorkload:
 
 
 class TestEngine:
+    @pytest.mark.slow
     def test_conservation(self):
         """Every request ends in exactly one terminal/annotated state."""
         b, final = run_one()
@@ -104,6 +105,7 @@ class TestEngine:
         # after drain, nothing is left pending or inflight
         assert ((s == COMPLETED) | (s == REJECTED) | (s == ABANDONED)).all()
 
+    @pytest.mark.slow
     def test_light_load_all_complete_in_time(self):
         wl = WorkloadConfig(n_requests=12, congestion="medium")
         b, final = run_one(wl=wl)
@@ -121,6 +123,7 @@ class TestEngine:
         assert (sub >= arr - 25.0 - 1e-3).all()  # within one tick quantum
         assert (fin > sub).all()
 
+    @pytest.mark.slow
     def test_shorts_never_rejected_final_olc(self):
         wl = WorkloadConfig(n_requests=96, mix="heavy", congestion="high")
         b, final = run_one(wl=wl, sim_cfg=SimConfig(n_ticks=4000))
@@ -128,6 +131,7 @@ class TestEngine:
         shorts = np.asarray(b.bucket) == SHORT
         assert (s[shorts] != REJECTED).all()
 
+    @pytest.mark.slow
     def test_rejections_concentrate_on_expensive(self):
         """Paper Fig 5: xlong bears the majority of rejections."""
         wl = WorkloadConfig(n_requests=128, mix="heavy", congestion="high")
@@ -139,12 +143,14 @@ class TestEngine:
             assert bkt[rej].min() >= 2  # only long/xlong under the ladder
             assert (bkt[rej] == 3).sum() >= (bkt[rej] == 2).sum()
 
+    @pytest.mark.slow
     def test_naive_admits_everything_instantly(self):
         b, final = run_one("direct_naive")
         done = np.asarray(final.req.status) == COMPLETED
         wait = np.asarray(final.req.submit_ms) - np.asarray(b.arrival_ms)
         assert (wait[done] <= 50.0 + 1e-3).all()  # within 2 ticks
 
+    @pytest.mark.slow
     def test_deterministic_given_seed(self):
         b1, f1 = run_one(seed=7)
         b2, f2 = run_one(seed=7)
@@ -168,6 +174,7 @@ class TestMetrics:
         out = masked_percentile(jnp.arange(4.0), jnp.zeros(4, bool), 0.95)
         assert np.isnan(float(out))
 
+    @pytest.mark.slow
     def test_metrics_cr_excludes_rejects(self):
         wl = WorkloadConfig(n_requests=128, mix="heavy", congestion="high")
         b, final = run_one(wl=wl, sim_cfg=SimConfig(n_ticks=4000))
@@ -178,6 +185,7 @@ class TestMetrics:
         assert float(m.completion_rate) == pytest.approx(n_done / (128 - n_rej), rel=1e-5)
         assert int(m.n_rejects) == n_rej
 
+    @pytest.mark.slow
     def test_goodput_counts_only_met(self):
         b, final = run_one()
         m = compute_metrics(b, final)
@@ -189,6 +197,7 @@ class TestMetrics:
 
 
 class TestRunner:
+    @pytest.mark.slow
     def test_run_cell_shapes_and_seed_variation(self):
         wl = WorkloadConfig(n_requests=48)
         m = run_cell(strategy("final_adrr_olc"), wl, seeds=3, sim_cfg=SMALL)
@@ -196,6 +205,7 @@ class TestRunner:
         s = summarize(m)
         assert "short_p95_ms" in s and np.isfinite(s["short_p95_ms"][0])
 
+    @pytest.mark.slow
     def test_policy_vmap_over_stacked_configs(self):
         """Stacked PolicyConfigs vmap into one compiled sweep."""
         import jax
