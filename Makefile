@@ -2,8 +2,8 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test test-fast bench bench-smoke bench-sched bench-scenarios \
-	check-bench check-clean ci
+.PHONY: test test-fast bench bench-smoke bench-sched bench-scale \
+	bench-scenarios check-bench check-clean ci
 
 # Tier-1: full test suite (ROADMAP.md)
 test:
@@ -29,10 +29,18 @@ bench-smoke:
 	$(PY) benchmarks/scenario_sweep.py --smoke
 
 # scheduler-throughput microbenchmark -> BENCH_scheduler.json
-# (slots/sec at K=2 vs K=8 plus the batch-dispatch B x N sweep; the perf
-# trajectory future PRs compare against)
+# (slots/sec at K=2 vs K=8, the batch-dispatch B x N sweep, and the
+# active-window N x W sweep; the perf trajectory future PRs compare
+# against).  Committed N=1e6 windowed rows are carried forward — only
+# bench-scale re-measures them.
 bench-sched:
 	$(PY) benchmarks/multi_class.py --sched-only
+
+# the N=1e6 scale run (active-window cells the dense path can't touch);
+# excluded from bench-smoke/CI like the `slow` pytest marker — run
+# locally when the windowed engine changes
+bench-scale:
+	$(PY) benchmarks/multi_class.py --sched-only --scale
 
 # full nonstationary scenario grid -> BENCH_scenarios.json
 bench-scenarios:
@@ -43,12 +51,21 @@ bench-scenarios:
 check-bench:
 	$(PY) benchmarks/check_regression.py
 
-# repo hygiene: no bytecode may ever be tracked
+# repo hygiene: no bytecode may ever be tracked — and none may be
+# *trackable*: if .gitignore stops covering __pycache__ (tests/ included),
+# `git status` starts offering the files and a stray `git add -A` commits
+# them, so the gate also fails on any unignored bytecode in the tree
 check-clean:
 	@bad=$$(git ls-files | grep -E '(^|/)__pycache__/|\.pyc$$' || true); \
 	if [ -n "$$bad" ]; then \
 		echo "ERROR: tracked bytecode files:"; echo "$$bad"; exit 1; \
-	fi; echo "check-clean: no tracked __pycache__/*.pyc"
+	fi; \
+	loose=$$(git ls-files -o --exclude-standard | \
+		grep -E '(^|/)__pycache__/|\.pyc$$' || true); \
+	if [ -n "$$loose" ]; then \
+		echo "ERROR: bytecode not covered by .gitignore:"; \
+		echo "$$loose"; exit 1; \
+	fi; echo "check-clean: no tracked or unignored __pycache__/*.pyc"
 
 # CI entry point (.github/workflows/ci.yml runs exactly this): hygiene
 # check, tier-1 tests, CI-sized bench smoke, bench-regression gate

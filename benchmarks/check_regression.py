@@ -2,9 +2,10 @@
 baseline.
 
 Re-runs the batched-dispatch microbenchmark (`schedule_batch` at B=16,
-the production drain width) at each committed queue depth and fails if
-the fresh slot rate regresses more than the tolerance band below the
-committed `BENCH_scheduler.json` baseline.  Two checks:
+the production drain width) at each committed queue depth, plus the
+active-window dispatch step (DESIGN.md §6) at the committed large-N
+cells, and fails if a fresh rate regresses more than the tolerance band
+below the committed `BENCH_scheduler.json` baseline.  Checks:
 
   * **absolute**: fresh B=16 slots/sec >= (1 - tolerance) x baseline.
     Cross-machine noise is real — the tolerance default (30%) is wide,
@@ -13,6 +14,17 @@ committed `BENCH_scheduler.json` baseline.  Two checks:
   * **structural** (machine-independent): fresh B=16 must still beat
     fresh B=1 by the repo's >=2x batched-dispatch bar.  A refactor that
     quietly serializes the batch fails here even on a faster machine.
+  * **windowed absolute**: fresh windowed B=1 dispatch at each
+    committed (N=1e5, W) cell vs its baseline row, same tolerance
+    scheme — the tentpole's O(live queue) win stays locked in.  The
+    N=1e6 scale rows are informational only (`make bench-scale`): at
+    that population the per-call cost is dominated by cache-sensitive
+    gathers and swings ~2x run to run, too noisy for a CI gate.
+  * **windowed structural**: fresh windowed B=1 at the deepest gated
+    (N, W) must beat the fresh *dense* B=1 rate at the same N by >=4x
+    (the committed artifact shows 19-31x; the bar leaves room for
+    runner noise).  A change that quietly reintroduces O(N) work into
+    the windowed tick fails here on any machine.
 
 Wired into `make ci` as `make check-bench`.  The baseline is read from
 git (`HEAD:BENCH_scheduler.json`) so a local `make bench-sched` that
@@ -30,12 +42,17 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."
 
 import numpy as np  # noqa: E402
 
-from benchmarks.multi_class import batch_dispatch_bench  # noqa: E402
+from benchmarks.multi_class import (  # noqa: E402
+    batch_dispatch_bench,
+    windowed_dispatch_bench,
+)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE = os.path.join(REPO, "BENCH_scheduler.json")
 DEFAULT_TOLERANCE = 0.30  # fail on >30% regression at B=16
 MIN_B16_VS_B1 = 2.0       # the repo's batched-dispatch acceptance bar
+MIN_WIN_VS_DENSE = 4.0    # windowed-vs-dense dispatch bar at large N
+GATE_N = 100_000          # windowed cells at this depth are gated
 
 
 def load_baseline() -> dict:
@@ -92,6 +109,41 @@ def main(argv: list[str]) -> int:
             failures.append(
                 f"N={n_req}: B=16 only {ratio:.2f}x B=1 "
                 f"(bar: >={MIN_B16_VS_B1}x)")
+
+    # --- active-window gate: the large-N windowed dispatch rate -------
+    win_rows = [
+        r for r in baseline.get("windowed_dispatch", [])
+        if r.get("max_grants") == 1 and r.get("n_requests") == GATE_N
+    ]
+    if not win_rows:
+        print("FAIL: committed BENCH_scheduler.json has no large-N windowed "
+              "B=1 rows to gate against")
+        return 1
+    deepest = max(win_rows, key=lambda r: (r["n_requests"], r["window"]))
+    for r in sorted(win_rows, key=lambda r: (r["n_requests"], r["window"])):
+        n_req, w, base_rate = r["n_requests"], r["window"], r["slots_per_sec"]
+        fresh = windowed_dispatch_bench(1, n_req, w, iters=100)
+        rate = fresh["slots_per_sec"]
+        floor = (1.0 - tolerance) * base_rate
+        ok_abs = np.isfinite(rate) and rate >= floor
+        line = (f"  windowed N={n_req:7d} W={w:5d}: fresh {rate:10.0f} "
+                f"slots/s vs baseline {base_rate:10.0f} "
+                f"(floor {floor:10.0f}) [{'ok' if ok_abs else 'REGRESSION'}]")
+        if not ok_abs:
+            failures.append(
+                f"windowed N={n_req} W={w}: B=1 rate {rate:.0f} < floor "
+                f"{floor:.0f} ({rate / base_rate - 1.0:+.0%} vs baseline)")
+        if r is deepest:
+            dense1 = batch_dispatch_bench(1, n_req, iters=20)
+            ratio = rate / dense1["slots_per_sec"]
+            ok_ratio = np.isfinite(ratio) and ratio >= MIN_WIN_VS_DENSE
+            line += (f"  win/dense {ratio:5.1f}x "
+                     f"[{'ok' if ok_ratio else 'FAIL'}]")
+            if not ok_ratio:
+                failures.append(
+                    f"windowed N={n_req} W={w}: only {ratio:.2f}x the dense "
+                    f"B=1 rate (bar: >={MIN_WIN_VS_DENSE}x)")
+        print(line)
 
     if failures:
         print("FAIL: scheduler throughput regression:")

@@ -1,4 +1,6 @@
-"""Shared benchmark harness utilities: cell execution, CSV emission."""
+"""Shared benchmark harness utilities: cell execution, CSV emission,
+and the persistent JAX compilation cache every benchmark driver enables
+on import."""
 from __future__ import annotations
 
 import csv
@@ -11,6 +13,36 @@ from repro.core.policy import PolicyConfig
 from repro.sim import SimConfig, WorkloadConfig, run_cell, summarize
 
 TABLE_DIR = os.path.join(os.path.dirname(__file__), "..", "paper_results", "tables")
+
+
+def enable_compilation_cache() -> str:
+    """Turn on JAX's persistent compilation cache for benchmark runs.
+
+    The scheduler microbenchmarks pay ~1-4 s of XLA compile per (K, B,
+    N, W) cell (BENCH_scheduler.json `compile_seconds`), and the sweep
+    grid keeps growing — a warm cache turns repeat local runs and CI
+    re-runs into pure execution.  Honors `JAX_COMPILATION_CACHE_DIR`
+    (the CI cache points it at a restored directory); defaults to a
+    gitignored `.jax_cache/` at the repo root.  Thresholds drop to zero
+    so the many small-but-numerous scheduler programs are cached too.
+    Returns the cache directory.
+    """
+    import jax
+
+    cache_dir = os.environ.get(
+        "JAX_COMPILATION_CACHE_DIR",
+        os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                     ".jax_cache")))
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    return cache_dir
+
+
+# every benchmark driver imports this module first, so enabling here
+# covers the whole suite (harmless under pytest, which doesn't)
+enable_compilation_cache()
 
 SIM = SimConfig(n_ticks=14000)
 N_REQ = 160

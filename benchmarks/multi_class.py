@@ -14,7 +14,14 @@ and reports:
     amortizes the O(K·N) layer-2 work over B grants, so slots/sec must
     scale super-linearly vs B sequential single-slot traces (the
     acceptance bar is ≥2× at B=16 vs B=1 at equal tick budgets);
-  * a `BENCH_scheduler.json` microbenchmark artifact (both sweeps) so
+  * active-window dispatch throughput (DESIGN.md §6): the windowed
+    per-tick policy path at N ∈ {1e3, 1e5[, 1e6 with --scale]} × W ∈
+    {1024, 4096} plus end-to-end windowed engine ticks/sec — per-tick
+    cost is O(W), so the rate must be ~flat in N where the dense rows
+    collapse ~30× (the acceptance bar is ≥10× the dense B=1 N=1e5
+    rate), and the N=1e6 engine row is the population the dense scan
+    cannot run at all;
+  * a `BENCH_scheduler.json` microbenchmark artifact (all sweeps) so
     future PRs have a perf trajectory to compare against.
 
 The K=2 cell runs the paper's `paper2` lane scheme with the seed policy
@@ -31,20 +38,42 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
 
+import functools  # noqa: E402
+
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+import repro.sim.engine as eng  # noqa: E402
 from repro.core.policy import base_policy, kclass_policy, n_classes  # noqa: E402
 from repro.core.scheduler import schedule_batch, schedule_slot  # noqa: E402
-from repro.core.types import RequestBatch, init_sim_state  # noqa: E402
-from repro.sim import SimConfig, WorkloadConfig, run_cell, summarize  # noqa: E402
+from repro.core.types import (  # noqa: E402
+    RequestBatch,
+    WindowCarry,
+    init_sim_state,
+)
+from repro.sim import (  # noqa: E402
+    SimConfig,
+    WorkloadConfig,
+    default_physics,
+    run_cell,
+    run_sim,
+    summarize,
+)
 
 from benchmarks.common import TABLE_DIR, Timer, write_csv  # noqa: E402
 
 K_SWEEP = (2, 4, 8)
 B_SWEEP = (1, 4, 16)           # grants per batched dispatch pass
 N_SWEEP = (1_000, 100_000)     # queue depths (requests resident)
+# active-window sweep (DESIGN.md §6): horizon population x window
+# capacity.  N_SCALE only runs under --scale (`make bench-scale`) —
+# the dense path cannot touch it at all, the windowed rows prove it
+# runs; rows for skipped Ns are preserved from the committed artifact.
+W_SWEEP = (1_024, 4_096)
+N_SWEEP_WIN = (1_000, 100_000)
+N_SCALE = 1_000_000
+WB_SWEEP = (1, 16)             # grants per windowed dispatch pass
 REGIMES = [("balanced", "medium"), ("heavy", "high")]
 MAX_K = max(K_SWEEP)
 BENCH_JSON = os.path.join(
@@ -164,6 +193,166 @@ def batch_dispatch_bench(b: int, n_req: int, iters: int = 100) -> dict:
     }
 
 
+def _full_window(n_req: int, w: int):
+    """Worst-case live queue: a full window of arrived pending work over
+    an N-deep horizon population.  Slot i holds request i (the window is
+    request-id sorted by construction, matching the engine invariant)."""
+    policy = base_policy()
+    wl = _workload_for(2, "heavy", "high", n_req)
+    from repro.sim.workload import generate
+
+    batch, jitter = generate(jax.random.PRNGKey(0), wl)
+    state = init_sim_state(batch.n, n_classes(policy))._replace(
+        now_ms=jnp.float32(1e7))
+    win = WindowCarry(
+        slot_req=jnp.arange(w, dtype=jnp.int32),
+        arr_ptr=jnp.int32(w),
+        n_live=jnp.int32(w),
+    )
+    return policy, batch, jitter, state, win
+
+
+def windowed_dispatch_bench(b: int, n_req: int, w: int,
+                            iters: int = 100) -> dict:
+    """Wall-clock of one windowed dispatch step — the active-window
+    engine's per-tick policy path: gather the (W,) window view, run
+    `schedule_batch` over (K, W), translate slot decisions to global
+    request ids.  Cost is O(W) by construction; `n_req` only sets the
+    population the view gathers from, so the rate should be ~flat in N
+    at fixed W — the tentpole property the dense rows above collapse on.
+    """
+    assert w <= n_req
+    policy, batch, _, state, win = _full_window(n_req, w)
+
+    @functools.partial(jax.jit, static_argnames=("max_grants",))
+    def step(state, win, max_grants):
+        wb, wr, _ = eng._window_view(batch, state.req, win.slot_req)
+        d = schedule_batch(policy, wb, state._replace(req=wr),
+                           max_grants=max_grants)
+        return d._replace(req_idx=win.slot_req[jnp.clip(d.req_idx, 0, w - 1)])
+
+    t0 = time.perf_counter()
+    d = step(state, win, max_grants=b)
+    jax.block_until_ready(d)
+    compile_s = time.perf_counter() - t0
+
+    run_s = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            d = step(state, win, max_grants=b)
+        jax.block_until_ready(d)
+        run_s = min(run_s, time.perf_counter() - t0)
+    return {
+        "max_grants": b,
+        "n_requests": n_req,
+        "window": w,
+        "compile_seconds": round(compile_s, 4),
+        "call_us": round(run_s / iters * 1e6, 2),
+        "slots_per_sec": round(b * iters / run_s, 1),
+    }
+
+
+def windowed_engine_bench(n_req: int, w: int, n_ticks: int = 400,
+                          k_slots: int = 16) -> dict:
+    """End-to-end windowed `run_sim` throughput (ticks/sec) at horizon
+    population N — admission, compaction, retirement scatters and the
+    dispatch pass included.  The N=1e6 row is the feasibility proof: the
+    dense engine's per-tick O(K*N) scan cannot run that population at
+    all (extrapolated ~3 slots/s from the committed N=1e5 collapse)."""
+    policy = base_policy()
+    wl = _workload_for(2, "heavy", "high", n_req)
+    from repro.sim.workload import generate
+
+    batch, jitter = generate(jax.random.PRNGKey(0), wl)
+    phys = default_physics()
+    cfg = SimConfig(n_ticks=n_ticks, k_slots=k_slots, window=w)
+
+    run = jax.jit(lambda: run_sim(policy, batch, jitter, phys, cfg))
+    t0 = time.perf_counter()
+    jax.block_until_ready(run())
+    compile_and_first_s = time.perf_counter() - t0
+
+    run_s = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        run_s = min(run_s, time.perf_counter() - t0)
+    return {
+        "n_requests": n_req,
+        "window": w,
+        "n_ticks": n_ticks,
+        "k_slots": k_slots,
+        "first_run_seconds": round(compile_and_first_s, 3),
+        "ticks_per_sec": round(n_ticks / run_s, 1),
+        "grant_opps_per_sec": round(k_slots * n_ticks / run_s, 1),
+    }
+
+
+def _merge_rows(fresh: list[dict], old: list[dict], keys: tuple) -> list[dict]:
+    """Fresh rows win; committed rows for cells not re-measured (e.g.
+    the --scale-only N=1e6 cells in a regular run) are preserved so a
+    default `make bench-sched` cannot silently drop them."""
+    measured = {tuple(r[k] for k in keys) for r in fresh}
+    kept = [r for r in old if tuple(r.get(k) for k in keys) not in measured]
+    return fresh + kept
+
+
+def write_windowed_bench(bench: dict, prev: dict, scale: bool = False,
+                         verbose: bool = True) -> None:
+    """Active-window N x W sweep appended into the BENCH artifact."""
+    n_sweep = N_SWEEP_WIN + ((N_SCALE,) if scale else ())
+    rows = []
+    for n_req in n_sweep:
+        # a window cannot exceed the population; small-N cells fall back
+        # to W=N (the window covers everything — the dense-equivalent)
+        ws = [w for w in W_SWEEP if w <= n_req] or [n_req]
+        for w in ws:
+            for b in WB_SWEEP:
+                r = windowed_dispatch_bench(b, n_req, w, iters=100)
+                rows.append(r)
+                if verbose:
+                    print(f"  windowed    B={b:2d} N={n_req:7d} W={w:5d}: "
+                          f"{r['call_us']:9.1f}us/call "
+                          f"({r['slots_per_sec']:.0f} slots/s)")
+    bench["windowed_dispatch"] = _merge_rows(
+        rows, prev.get("windowed_dispatch", []),
+        ("max_grants", "n_requests", "window"))
+
+    erows = []
+    for n_req in n_sweep:
+        er = windowed_engine_bench(n_req, w=min(4096, n_req))
+        erows.append(er)
+        if verbose:
+            print(f"  engine(win) N={n_req:7d} W={er['window']:5d}: "
+                  f"{er['ticks_per_sec']:.0f} ticks/s "
+                  f"({er['grant_opps_per_sec']:.0f} grant-opps/s)")
+    bench["windowed_engine"] = _merge_rows(
+        erows, prev.get("windowed_engine", []), ("n_requests",))
+
+    # headline ratios: windowed vs dense dispatch at the deep queue —
+    # the tentpole acceptance bar is >=10x the dense B=1 N=1e5 rate at
+    # a production-sized window (per-W keys: the W=1024 cell is the
+    # live-queue-sized operating point, W=4096 the worst case)
+    dense = {(r["max_grants"], r["n_requests"]): r["slots_per_sec"]
+             for r in bench.get("batch_dispatch", [])}
+    win = {(r["max_grants"], r["n_requests"], r["window"]): r["slots_per_sec"]
+           for r in bench["windowed_dispatch"]}
+    base = dense.get((1, 100_000))
+    best = 0.0
+    for w in W_SWEEP:
+        fresh = win.get((1, 100_000, w))
+        if base and fresh:
+            ratio = fresh / base
+            best = max(best, ratio)
+            bench[f"win_vs_dense_b1_rate_n100000_w{w}"] = round(ratio, 3)
+    if best:
+        ok = best >= 10.0
+        print(f"  [{'PASS' if ok else 'WARN'}] windowed B=1 N=1e5 dispatch "
+              f"up to {best:.1f}x the dense rate "
+              f"({'meets' if ok else 'MISSES'} the >=10x bar)")
+
+
 def write_batch_bench(bench: dict, verbose: bool = True) -> None:
     """B × N batch-dispatch sweep appended into the BENCH artifact."""
     rows = []
@@ -266,10 +455,19 @@ def run(verbose: bool = True, n_ticks: int | None = None, n_req: int = 160,
     return path, BENCH_JSON
 
 
-def write_sched_bench(verbose: bool = True, iters: int = 300) -> str:
-    """Scheduler-throughput microbenchmark: slots/sec per K plus the
-    batch-dispatch B × N sweep, written to BENCH_scheduler.json so
-    future PRs have a perf trajectory."""
+def write_sched_bench(verbose: bool = True, iters: int = 300,
+                      scale: bool = False) -> str:
+    """Scheduler-throughput microbenchmark: slots/sec per K, the
+    batch-dispatch B × N sweep, and the active-window N × W sweep,
+    written to BENCH_scheduler.json so future PRs have a perf
+    trajectory.  `scale` adds the N=1e6 cells (`make bench-scale`);
+    without it the committed N=1e6 rows are carried forward."""
+    prev = {}
+    try:
+        with open(BENCH_JSON) as f:
+            prev = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        pass
     bench = {"benchmark": "schedule_slot", "steps": []}
     base_rate = None
     for k in K_SWEEP:
@@ -295,12 +493,15 @@ def write_sched_bench(verbose: bool = True, iters: int = 300) -> str:
     write_batch_bench(bench, verbose=verbose)
     with open(BENCH_JSON, "w") as f:
         json.dump(bench, f, indent=2)
+    write_windowed_bench(bench, prev, scale=scale, verbose=verbose)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(bench, f, indent=2)
     return BENCH_JSON
 
 
 if __name__ == "__main__":
     if "--sched-only" in sys.argv:
-        write_sched_bench()
+        write_sched_bench(scale="--scale" in sys.argv)
     else:
         smoke = "--smoke" in sys.argv
         try:

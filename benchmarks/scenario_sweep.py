@@ -27,6 +27,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."
 
 import numpy as np  # noqa: E402
 
+from benchmarks import common as _common  # noqa: E402,F401 (enables the
+                                          # persistent compilation cache)
 from repro.core.policy import fair_queuing, final_adrr_olc  # noqa: E402
 from repro.sim import (  # noqa: E402
     SimConfig,

@@ -1,0 +1,45 @@
+"""Cross-program float determinism helpers.
+
+The windowed engine (DESIGN.md §6) re-evaluates the *same* scalar and
+per-request arithmetic the dense engine runs, but inside a
+differently-shaped program — (W,)-wide views instead of (N,)-wide
+arrays.  XLA:CPU's instruction selection is context-dependent: a
+mul+add may FMA-contract in one fusion but not the other, and a
+division may lower to an exact `div` or a refined reciprocal depending
+on the surrounding loop.  Any 1-ulp drift in a value that feeds a
+scheduling decision (severity, ordering scores, the tail EMA)
+eventually flips a threshold comparison and breaks the engines'
+bit-exact contract.
+
+`pinned(x)` wraps `lax.optimization_barrier`: it cuts the value out of
+the surrounding fusion so the arithmetic between two pins compiles as
+the same isolated subgraph in both programs and rounds identically.
+The barrier is the identity on values — it only constrains the
+compiler — so it is free at the numerics level and ~free at runtime
+(it forces materialization of a handful of small buffers).
+
+Wrapped via `custom_batching.custom_vmap` because
+`optimization_barrier` ships without a batching rule: under `vmap`
+(e.g. the runner's seed axis) the barrier simply applies to the
+stacked value, which preserves the isolation property — all seeds
+share one program.
+"""
+from __future__ import annotations
+
+import jax
+from jax.custom_batching import custom_vmap
+
+
+@custom_vmap
+def pinned(x):
+    """Identity that pins the rounding of the computation producing `x`
+    (and of consumers that would otherwise fuse through it)."""
+    return jax.lax.optimization_barrier(x)
+
+
+@pinned.def_vmap
+def _pinned_vmap(axis_size, in_batched, x):
+    del axis_size
+    # in_batched is a single-element list (one positional arg); the
+    # output batching spec must mirror the output pytree, i.e. x's
+    return jax.lax.optimization_barrier(x), in_batched[0]

@@ -34,6 +34,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.numerics import pinned
 from repro.core.policy import PolicyConfig
 from repro.core.types import RequestBatch
 
@@ -65,14 +66,22 @@ def _wait_and_urgency(batch: RequestBatch, now_ms):
 
 
 def order_scores(batch: RequestBatch, now_ms, cfg: PolicyConfig):
-    """Paper scoring rule over every request (mask applied by caller)."""
+    """Paper scoring rule over every request (mask applied by caller).
+
+    The barrier pins each term's rounding before the sum: scores decide
+    the top-B ranking, and the windowed engine evaluates this chain over
+    (W,)-shaped views of the same requests the dense engine sees as
+    (N,) — without the barrier XLA may FMA-contract one program but not
+    the other, and a 1-ulp score drift can reorder near-ties.
+    """
     wait, urgency = _wait_and_urgency(batch, now_ms)
     cost = jnp.maximum(batch.p50, 1.0)
-    return (
-        cfg.ord_w_wait * (wait / cost)
-        - cfg.ord_w_size * (cost / cfg.ord_ref_tokens)
-        + cfg.ord_w_urg * urgency
-    )
+    terms = pinned((
+        cfg.ord_w_wait * (wait / cost),
+        cfg.ord_w_size * (cost / cfg.ord_ref_tokens),
+        cfg.ord_w_urg * urgency,
+    ))
+    return (terms[0] - terms[1]) + terms[2]
 
 
 def select_fifo(batch: RequestBatch, mask):
@@ -127,29 +136,48 @@ def select_per_class(
     return idx[:, 0], cls_mask.any(axis=1)
 
 
-def rank_fifo(batch: RequestBatch, mask, b: int):
+def rank_fifo(batch: RequestBatch, mask, b: int, backend: str = "jnp"):
     """Global FIFO ranked list: the first `b` eligible requests by
     arrival (earliest first).  Returns ((L,) int32 indices, () int32
     eligible count), L = min(b, N).  Feeds the naive (ignore-class)
-    lane of the batch dispatcher."""
+    lane of the batch dispatcher.
+
+    The pallas backend routes through the fused top-B kernel with the
+    FIFO weight row: score == -arrival_ms exactly, so the ranking (and
+    its first-occurrence tie-breaking) matches `lax.top_k(-key)` —
+    masked lanes carry NEG on the kernel vs -inf here, but both rank
+    after every eligible lane in the same index order.
+    """
     b = min(int(b), batch.n)
+    n_elig = mask.sum().astype(jnp.int32)
+    if backend == "pallas":
+        from repro.kernels.sched_score.ops import sched_score_topb
+
+        w_fifo = jnp.asarray([1.0, 0.0, 0.0, 1.0], jnp.float32)
+        idx, _ = sched_score_topb(
+            -batch.arrival_ms, jnp.ones_like(batch.arrival_ms),
+            jnp.zeros_like(batch.arrival_ms), mask, w_fifo, b)
+        return idx, n_elig
+    if backend != "jnp":
+        raise ValueError(f"unknown ordering backend: {backend!r}")
     key = jnp.where(mask, batch.arrival_ms, jnp.inf)
     _, idx = jax.lax.top_k(-key, b)
-    return idx.astype(jnp.int32), mask.sum().astype(jnp.int32)
+    return idx.astype(jnp.int32), n_elig
 
 
 def _select_top_b_pallas(batch, cls_mask, now_ms, cfg, b: int):
-    """Ranked (K, B) candidates via B successive fused-argmax passes per
-    class: release the argmax, mask it out, repeat.  B and K are small
-    and static.  Note this is K*B fused streams over N (each avoiding
-    the HBM score materialization), not a single pass — a true fused
-    top-B kernel is the follow-on if B grows past tens."""
-    from repro.kernels.sched_score.ops import sched_score_argmax
+    """Ranked (K, B) candidates via the fused score+top-B kernel: one
+    tiled pass per class computes scores and the blockwise partial top-B
+    reduction in VMEM (kernels/sched_score), never materializing the
+    (K, N) score matrix in HBM.  K is small and static, so the Python
+    class loop costs K kernel launches, each streaming the queue once —
+    versus the former B successive fused-argmax passes (B streams per
+    class)."""
+    from repro.kernels.sched_score.ops import sched_score_topb
 
     k = cls_mask.shape[0]
     wait, fifo_key, cost, urgency, w_scored, w_fifo = _kernel_inputs(
         batch, now_ms, cfg)
-    n = batch.n
     rows = []
     for c in range(k):
         use_score = cfg.ord_scored[c] > 0
@@ -157,14 +185,8 @@ def _select_top_b_pallas(batch, cls_mask, now_ms, cfg, b: int):
         wait_c = jnp.where(use_score, wait, fifo_key)
         cost_c = jnp.where(use_score, cost, 1.0)
         urg_c = jnp.where(use_score, urgency, 0.0)
-        mask = cls_mask[c]
-        picks = []
-        for _ in range(b):
-            i, _ = sched_score_argmax(wait_c, cost_c, urg_c, mask, w)
-            i = jnp.maximum(i, 0).astype(jnp.int32)
-            picks.append(i)
-            mask = mask & (jnp.arange(n, dtype=jnp.int32) != i)
-        rows.append(jnp.stack(picks))
+        idx, _ = sched_score_topb(wait_c, cost_c, urg_c, cls_mask[c], w, b)
+        rows.append(idx)
     return jnp.stack(rows)
 
 

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.numerics import pinned
 from repro.core.policy import PolicyConfig
 
 ADMIT, DEFER, REJECT = 0, 1, 2
@@ -32,12 +33,17 @@ def severity_score(
     provider_load = jnp.asarray(inflight_total, jnp.float32) / jnp.maximum(cfg.load_ref, 1.0)
     queue_pressure = jnp.asarray(n_pending, jnp.float32) / jnp.maximum(cfg.queue_ref, 1.0)
     tail_ratio = (jnp.maximum(ema_latency_ratio, 1.0) - 1.0) / jnp.maximum(cfg.tail_ref - 1.0, 1e-3)
-    s = (
-        cfg.olc_w_load * jnp.minimum(provider_load, 2.0)
-        + cfg.olc_w_queue * jnp.minimum(queue_pressure, 2.0)
-        + cfg.olc_w_tail * jnp.minimum(tail_ratio, 2.0)
-    )
-    return jnp.maximum(s, 0.0)
+    # barrier before the sum: severity drives every admission threshold,
+    # and the windowed engine (DESIGN.md §6) compiles this identical
+    # scalar subgraph inside a differently-shaped program — without the
+    # barrier XLA may contract a mul into an FMA on one side only, and a
+    # 1-ulp severity drift breaks the engines' bit-exact contract
+    terms = pinned((
+        cfg.olc_w_load * jnp.minimum(provider_load, 2.0),
+        cfg.olc_w_queue * jnp.minimum(queue_pressure, 2.0),
+        cfg.olc_w_tail * jnp.minimum(tail_ratio, 2.0),
+    ))
+    return jnp.maximum((terms[0] + terms[1]) + terms[2], 0.0)
 
 
 def admission_action(

@@ -212,7 +212,8 @@ def schedule_batch(
     rank_idx, n_elig_cls = ordering.select_top_b(
         batch, elig_kn, now, cfg, bmax, backend=backend
     )
-    glob_idx, n_elig_tot = ordering.rank_fifo(batch, elig, bmax)
+    glob_idx, n_elig_tot = ordering.rank_fifo(batch, elig, bmax,
+                                              backend=backend)
     # grantable candidates this batch can actually see per lane
     visible_cls = jnp.minimum(n_elig_cls, bmax)
     visible_glob = jnp.minimum(n_elig_tot, bmax)

@@ -110,6 +110,34 @@ class SimState(NamedTuple):
     provider: ProviderState
 
 
+class WindowCarry(NamedTuple):
+    """Compacted active-window slot pool (engine scan carry, DESIGN.md §6).
+
+    The window holds every *live* request (PENDING or INFLIGHT, i.e.
+    arrived and not yet terminal) in a fixed-capacity `(W,)` slot pool so
+    the per-tick policy cost is O(W) instead of O(N).  Invariants the
+    engine maintains every tick:
+
+      * occupied slots are the compacted prefix `[0, n_live)`; the free
+        region is the tail — reclamation is a stable compaction, not a
+        positional free list, so that...
+      * ...occupied slots are sorted by request id.  Arrivals are
+        admitted in arrival order (ids are assigned arrival-sorted by the
+        workload generator) and compaction preserves relative order, so
+        slot order == request-id order.  This is what makes the ordering
+        layer's first-occurrence tie-breaking over the window bit-exact
+        with the dense `(N,)` path.
+      * `slot_req[i] == n` marks slot i empty (out-of-range sentinel:
+        gathers clamp, scatters drop).
+    """
+
+    slot_req: jnp.ndarray  # (W,) int32 request id per slot; n = empty
+    arr_ptr: jnp.ndarray   # () int32 arrivals admitted so far (the batch's
+                           #   arrival-sorted prefix [0, arr_ptr) is in or
+                           #   through the window)
+    n_live: jnp.ndarray    # () int32 occupied slot count (prefix length)
+
+
 def init_request_state(n: int) -> RequestState:
     return RequestState(
         status=jnp.zeros((n,), jnp.int32),
@@ -138,6 +166,14 @@ def init_provider_state(n_classes: int = N_CLASSES) -> ProviderState:
         inflight_tokens=jnp.zeros((), jnp.float32),
         tb_tokens=jnp.zeros((n_classes,), jnp.float32),
         n_throttled=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_window_carry(w: int, n: int) -> WindowCarry:
+    return WindowCarry(
+        slot_req=jnp.full((w,), n, jnp.int32),
+        arr_ptr=jnp.zeros((), jnp.int32),
+        n_live=jnp.zeros((), jnp.int32),
     )
 
 

@@ -10,17 +10,17 @@ import jax.numpy as jnp
 
 from repro.kernels import interpret_mode
 from repro.kernels.sched_score.sched_score import (
-    sched_score_argmax as _kernel_call,
+    sched_score_argmax as _argmax_kernel,
+    sched_score_topb as _topb_kernel,
 )
 
 _LANE = 128  # TPU lane width: block shapes must stay a multiple of this
 
 
-def sched_score_argmax(wait, cost, urgency, mask, weights, *, blk: int = 2048):
-    """wait/cost/urgency: (n,) f32; mask: (n,) bool; weights: (4,)
-    [w_wait, w_size, w_urg, ref_tokens]. Returns (best_idx i32, best_score).
-    Any n is accepted — the queue is padded internally to a lane-aligned
-    block multiple with mask=False lanes."""
+def _pad_queue(wait, cost, urgency, mask, blk: int):
+    """Pad the queue axis to a block multiple with inert lanes
+    (mask=False, unit cost).  Padding is shape-static, so jit
+    specializes once per (n, blk)."""
     n = wait.shape[0]
     # shrink the block for short queues without losing lane alignment
     blk = min(blk, max(_LANE, -(-n // _LANE) * _LANE))
@@ -31,5 +31,32 @@ def sched_score_argmax(wait, cost, urgency, mask, weights, *, blk: int = 2048):
         cost = jnp.concatenate([cost, jnp.ones((pad,), cost.dtype)])
         urgency = jnp.concatenate([urgency, zf])
         mask = jnp.concatenate([mask, jnp.zeros((pad,), bool)])
-    return _kernel_call(wait, cost, urgency, mask, weights, blk=blk,
+    return wait, cost, urgency, mask, blk
+
+
+def sched_score_argmax(wait, cost, urgency, mask, weights, *, blk: int = 2048):
+    """wait/cost/urgency: (n,) f32; mask: (n,) bool; weights: (4,)
+    [w_wait, w_size, w_urg, ref_tokens]. Returns (best_idx i32, best_score).
+    Any n is accepted — the queue is padded internally to a lane-aligned
+    block multiple with mask=False lanes."""
+    wait, cost, urgency, mask, blk = _pad_queue(wait, cost, urgency, mask, blk)
+    return _argmax_kernel(wait, cost, urgency, mask, weights, blk=blk,
+                          interpret=interpret_mode())
+
+
+def sched_score_topb(wait, cost, urgency, mask, weights, b: int, *,
+                     blk: int = 2048):
+    """Fused score + partial top-B over a queue of any length n >= b.
+
+    Returns (idx (b,) i32, score (b,) f32) in release order, matching
+    `lax.top_k` over the masked scores including first-occurrence
+    tie-breaking.  Padding lanes are mask=False: their NEG scores rank
+    after every real lane's (real masked lanes share the NEG value but
+    precede the padding in index order), so with b <= n a padded index
+    can never reach the output.
+    """
+    n = wait.shape[0]
+    b = min(int(b), n)
+    wait, cost, urgency, mask, blk = _pad_queue(wait, cost, urgency, mask, blk)
+    return _topb_kernel(wait, cost, urgency, mask, weights, b=b, blk=blk,
                         interpret=interpret_mode())

@@ -1,13 +1,26 @@
-"""Pure-jnp oracle for the fused scheduler scoring kernel."""
+"""Pure-jnp oracles for the fused scheduler scoring kernels."""
+import jax
 import jax.numpy as jnp
 
 NEG = -1e30
 
 
-def sched_score_argmax_ref(wait, cost, urgency, mask, weights):
+def _scores(wait, cost, urgency, mask, weights):
     w1, w2, w3, ref_tok = weights
     c = jnp.maximum(cost, 1.0)
     score = w1 * (wait / c) - w2 * (c / ref_tok) + w3 * urgency
-    score = jnp.where(mask, score, NEG)
+    return jnp.where(mask, score, NEG)
+
+
+def sched_score_argmax_ref(wait, cost, urgency, mask, weights):
+    score = _scores(wait, cost, urgency, mask, weights)
     i = jnp.argmax(score)
     return i.astype(jnp.int32), score[i]
+
+
+def sched_score_topb_ref(wait, cost, urgency, mask, weights, b: int):
+    """Full-width ranking oracle: `lax.top_k` over the masked scores
+    (first-occurrence tie-breaking).  Returns (idx (b,), score (b,))."""
+    score = _scores(wait, cost, urgency, mask, weights)
+    vals, idx = jax.lax.top_k(score, b)
+    return idx.astype(jnp.int32), vals

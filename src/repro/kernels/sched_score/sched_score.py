@@ -1,7 +1,7 @@
-"""Ordering-layer scoring kernel (the paper's §3.1.2 hot spot at
+"""Ordering-layer scoring kernels (the paper's §3.1.2 hot spot at
 production queue depths).
 
-Fuses the feasible-set score
+`sched_score_argmax` fuses the feasible-set score
 
     score = w1 * (wait / cost) - w2 * (cost / ref) + w3 * urgency
 
@@ -10,6 +10,18 @@ at 10^5+ pending requests the jnp version materializes the score vector
 in HBM and reads it back for the argmax; the fused kernel streams each
 block once.  Grid = (num_blocks,) with the running (best_score, best_idx)
 pair in scratch, written out on the last block.
+
+`sched_score_topb` generalizes it to a fused partial top-B: one tiled
+pass computes each block's scores in VMEM, extracts the block's local
+top-B by B successive masked argmaxes, and tree-combines into a running
+best-B scratch set (a strict replace-worst merge).  The combine is
+associative with the blocks processed in index order, and the strict
+(`>` only) eviction rule makes ties resolve to the earliest index —
+bit-identical to `lax.top_k`'s first-occurrence semantics, which the
+windowed scheduler's bit-exact contract relies on.  The final block
+selection-sorts the scratch set into (idx, score) rows, best first.
+Compared with `lax.top_k` over the full (K, N) score matrix this
+streams each element once and keeps only O(B) state.
 """
 from __future__ import annotations
 
@@ -89,3 +101,119 @@ def sched_score_argmax(wait, cost, urgency, mask, weights, *,
         interpret=interpret,
     )(arr, w)
     return idx[0], score[0]
+
+
+# ---------------------------------------------------------------------------
+# Fused partial top-B
+# ---------------------------------------------------------------------------
+
+_BPAD = 128  # scratch lane width; entries >= b are inert (+inf/-inf guards)
+
+
+def _topb_kernel(arr_ref, w_ref, out_idx_ref, out_score_ref,
+                 best_s_ref, best_i_ref, *, blk: int, nb: int, b: int):
+    bi = pl.program_id(0)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, _BPAD), 1)
+    in_set = lane < b
+
+    @pl.when(bi == 0)
+    def _init():
+        # -inf sentinels rank below every candidate (masked lanes carry
+        # the finite NEG), so real entries always displace them first
+        best_s_ref[...] = jnp.full((1, _BPAD), -jnp.inf, jnp.float32)
+        best_i_ref[...] = jnp.full((1, _BPAD), -1, jnp.int32)
+
+    wait = arr_ref[0, :]
+    cost = arr_ref[1, :]
+    urg = arr_ref[2, :]
+    mask = arr_ref[3, :]
+    w1, w2, w3, ref_tok = w_ref[0, 0], w_ref[0, 1], w_ref[0, 2], w_ref[0, 3]
+
+    c = jnp.maximum(cost, 1.0)
+    score = w1 * (wait / c) - w2 * (c / ref_tok) + w3 * urg
+    score = jnp.where(mask > 0, score, NEG)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, blk), 1)[0]
+
+    # local top-B by successive masked argmax (first occurrence), merged
+    # into the running set one candidate at a time.  Candidates arrive in
+    # (score desc, idx asc) order and blocks run in index order, so a
+    # candidate that merely *ties* the running worst is always the later
+    # index — the strict `>` eviction below is exactly top_k's
+    # first-occurrence tie-breaking.
+    for _ in range(b):
+        s = jnp.max(score)
+        jj = jnp.argmax(score).astype(jnp.int32)
+        gidx = bi * blk + jj
+        score = jnp.where(iota == jj, -jnp.inf, score)
+
+        cur = jnp.where(in_set, best_s_ref[...], jnp.inf)
+        worst = jnp.min(cur)
+        # evict the worst entry; among equal-score entries the one with
+        # the LARGEST index (it ranks last under first-occurrence order).
+        # Resolve to a single lane: -1 sentinels are not unique, so an
+        # index match alone could hit several lanes at once.
+        evict_i = jnp.max(jnp.where(cur == worst, best_i_ref[...], -2))
+        cand = in_set & (cur == worst) & (best_i_ref[...] == evict_i)
+        hit = lane == jnp.max(jnp.where(cand, lane, -1))
+        take = s > worst
+        best_s_ref[...] = jnp.where(hit & take, s, best_s_ref[...])
+        best_i_ref[...] = jnp.where(hit & take, gidx, best_i_ref[...])
+
+    @pl.when(bi == nb - 1)
+    def _finish():
+        # selection-sort the set into release order: score desc, ties by
+        # ascending index (first occurrence) — lax.top_k's output order
+        rem_s = best_s_ref[...]
+        rem_i = best_i_ref[...]
+        big = jnp.int32(2**31 - 1)
+        for j in range(b):
+            cur = jnp.where(in_set, rem_s, -jnp.inf)
+            m = jnp.max(cur)
+            sel = jnp.min(jnp.where(cur == m, rem_i, big))
+            out_idx_ref[j] = sel
+            out_score_ref[j] = m
+            used = (cur == m) & (rem_i == sel)
+            rem_s = jnp.where(used, -jnp.inf, rem_s)
+
+
+@functools.partial(jax.jit, static_argnames=("b", "blk", "interpret"))
+def sched_score_topb(wait, cost, urgency, mask, weights, *,
+                     b: int, blk: int = 2048, interpret: bool = False):
+    """Fused score + partial top-B.  wait/cost/urgency: (n,) f32; mask:
+    (n,) bool; weights: (4,) [w_wait, w_size, w_urg, ref_tokens].
+    Returns (idx (b,) i32, score (b,) f32) in release order (best
+    first), matching `lax.top_k` over the masked score vector including
+    first-occurrence tie-breaking.  n must be a multiple of blk (callers
+    pad with mask=False); requires b <= min(blk, _BPAD) and b <= n so
+    sentinels can never reach the output."""
+    n = wait.shape[0]
+    blk = min(blk, n)
+    assert n % blk == 0, "pad the queue to a block multiple"
+    assert 0 < b <= min(blk, _BPAD) and b <= n, (b, blk, n)
+    nb = n // blk
+    arr = jnp.stack([wait, cost, urgency, mask.astype(jnp.float32)])  # (4, n)
+    w = weights.astype(jnp.float32)[None, :]                          # (1, 4)
+
+    kernel = functools.partial(_topb_kernel, blk=blk, nb=nb, b=b)
+    idx, score = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((4, blk), lambda g: (0, g)),
+            pl.BlockSpec((1, 4), lambda g: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b,), lambda g: (0,)),
+            pl.BlockSpec((b,), lambda g: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, _BPAD), jnp.float32),
+            pltpu.VMEM((1, _BPAD), jnp.int32),
+        ],
+        interpret=interpret,
+    )(arr, w)
+    return idx, score

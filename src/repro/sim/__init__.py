@@ -15,6 +15,7 @@ from repro.sim.runner import (  # noqa: F401
     run_cell,
     run_scenario_cell,
     summarize,
+    window_for,
 )
 from repro.sim.scenarios import (  # noqa: F401
     SCENARIOS,

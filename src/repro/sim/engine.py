@@ -28,15 +28,29 @@ retry-after.  Presence of each mechanism is pytree structure (None =
 off), so scenario complexity costs nothing at trace time: the whole
 horizon stays one `lax.scan` with no Python per-tick branching, and
 `dynamics=None` compiles the exact stationary program.
+
+Active window (DESIGN.md §6): with `SimConfig.window = W` the scan
+carries a compacted `(W,)` slot pool (`WindowCarry`) holding exactly the
+live queue — arrived, non-terminal requests.  Each tick retires
+completed/rejected/abandoned slots (scattering their terminal outcome
+into the dense `(N,)` result arrays, which stay in the carry and are
+updated in place), compacts the survivors, admits newly-arrived
+requests off the arrival-sorted stream with one O(log N) bisect, and
+runs the *same* `schedule_batch` on the `(K, W)` window view.  Per-tick
+policy cost is O(W), independent of the horizon population N; with
+W >= the peak live queue the decision stream and final request arrays
+are bit-exact with the dense engine (the pinned contract —
+tests/test_window_engine.py).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import overload as olc
+from repro.core.numerics import pinned
 from repro.core.policy import ALLOC_ADRR, PolicyConfig, n_classes
 from repro.core.scheduler import BatchDecision, schedule_batch
 from repro.core.types import (
@@ -46,8 +60,11 @@ from repro.core.types import (
     PENDING,
     REJECTED,
     RequestBatch,
+    RequestState,
     SimState,
+    WindowCarry,
     init_sim_state,
+    init_window_carry,
 )
 from repro.sim.provider import (
     ProviderDynamics,
@@ -58,12 +75,59 @@ from repro.sim.provider import (
 
 EMA_ALPHA = 0.15
 
+# Canonical width of the per-tick EMA completion sample (see
+# `_completed_ratio_sum`).  Far above per-tick completion counts any
+# regime produces; both engine representations truncate identically.
+EMA_SAMPLE_CAP = 128
+
 
 class SimConfig(NamedTuple):
     dt_ms: float = 25.0
     n_ticks: int = 6000
     k_slots: int = 4  # max grants per tick (batch dispatch width B)
     ordering_backend: str = "jnp"  # "jnp" | "pallas" (large-N path)
+    window: Optional[int] = None  # active-window capacity W; None = dense
+                                  # O(N) scan (requires arrival-sorted
+                                  # batches when set — the generator's
+                                  # native order)
+
+
+def _completed_ratio_sum(
+    phys: ProviderPhysics,
+    done_now: jnp.ndarray,
+    finish_ms: jnp.ndarray,
+    arrival_ms: jnp.ndarray,
+    tokens: jnp.ndarray,
+):
+    """Shape-canonical tail-EMA contribution of this tick's completions.
+
+    The windowed and dense engines hold the completions in
+    different-width arrays ((W,) vs (N,)), and both XLA's reduction tree
+    and its instruction selection for fused elementwise chains (FMA
+    contraction, reciprocal-based division) depend on the surrounding
+    program — so computing `sum(e2e / expected)` over the wide arrays
+    rounds differently in the two engines and breaks their bit-exact
+    contract.  Both engines therefore extract the completing entries
+    into fixed `(EMA_SAMPLE_CAP,)` buffers in index order (request-id
+    order in both: the window is compaction-sorted by request id) and
+    run the *entire* ratio arithmetic on those — the optimization
+    barrier cuts fusion with the differently-shaped producers, so the
+    subgraph between gather and sum is the same program in both engines
+    and rounds identically by construction.  Past the cap both
+    representations truncate to the same first `EMA_SAMPLE_CAP`
+    completions (the cap is far above per-tick completion counts any
+    regime produces).  Returns (ratio_sum, count).
+    """
+    c = EMA_SAMPLE_CAP
+    idx, = jnp.nonzero(done_now, size=c, fill_value=0)
+    k = done_now.sum()
+    fin, arr, tok, live = pinned((
+        finish_ms[idx], arrival_ms[idx], tokens[idx], jnp.arange(c) < k,
+    ))
+    e2e = fin - arr
+    expected = unloaded_latency_ms(phys, tok)
+    ratio = jnp.where(live, e2e / jnp.maximum(expected, 1.0), 0.0)
+    return ratio.sum(), k
 
 
 def _complete_and_timeout(
@@ -87,14 +151,23 @@ def _complete_and_timeout(
     status = jnp.where(done_now, COMPLETED, jnp.where(timed_out, ABANDONED, req.status))
 
     # tail signal: observed end-to-end latency vs unloaded expectation
-    expected = unloaded_latency_ms(phys, batch.true_tokens)
-    ratio = jnp.where(done_now, e2e / jnp.maximum(expected, 1.0), 0.0)
-    k = done_now.sum()
-    mean_ratio = jnp.where(k > 0, ratio.sum() / jnp.maximum(k, 1), 0.0)
+    ratio_sum, k = _completed_ratio_sum(
+        phys, done_now, req.finish_ms, batch.arrival_ms, batch.true_tokens)
+    # divide by the SAMPLE size: past the cap ratio_sum covers only the
+    # first EMA_SAMPLE_CAP completions, and dividing by the full k would
+    # bias the tail signal toward 0 (the drain tick routinely lands
+    # hundreds of completions at once)
+    k_sample = jnp.minimum(k, EMA_SAMPLE_CAP)
+    mean_ratio = jnp.where(k > 0, ratio_sum / jnp.maximum(k_sample, 1), 0.0)
+    # the barrier pins the EMA's scalar rounding: without it XLA is free
+    # to contract the mul+add into an FMA in one compilation and not the
+    # other (the windowed and dense engines compile differently-shaped
+    # programs around this identical scalar subgraph), and a 1-ulp EMA
+    # drift eventually shifts severity — breaking the bit-exact contract
+    delta = pinned(EMA_ALPHA * (mean_ratio - state.sched.ema_latency_ratio))
     ema = jnp.where(
         k > 0,
-        state.sched.ema_latency_ratio
-        + EMA_ALPHA * (mean_ratio - state.sched.ema_latency_ratio),
+        state.sched.ema_latency_ratio + delta,
         state.sched.ema_latency_ratio,
     )
 
@@ -234,6 +307,108 @@ def _apply_batch(
     )
 
 
+def _window_view(
+    batch: RequestBatch, req: RequestState, slot_req: jnp.ndarray
+) -> tuple[RequestBatch, RequestState, jnp.ndarray]:
+    """Gather the window's (W,)-shaped view of the batch and request
+    state.  Empty slots (sentinel id n) clamp their gathers to a real
+    row but are neutralized: valid=False (never eligible), terminal
+    status (never counted live), finish=inf (never landing).  Returns
+    (win_batch, win_req, occupied)."""
+    n = batch.n
+    occ = slot_req < n
+    safe = jnp.minimum(slot_req, n - 1)
+    win_batch = RequestBatch(
+        arrival_ms=batch.arrival_ms[safe],
+        bucket=batch.bucket[safe],
+        cls=batch.cls[safe],
+        true_tokens=batch.true_tokens[safe],
+        p50=batch.p50[safe],
+        p90=batch.p90[safe],
+        deadline_budget_ms=batch.deadline_budget_ms[safe],
+        valid=batch.valid[safe] & occ,
+    )
+    win_req = RequestState(
+        status=jnp.where(occ, req.status[safe], jnp.int32(REJECTED)),
+        submit_ms=req.submit_ms[safe],
+        finish_ms=jnp.where(occ, req.finish_ms[safe], jnp.inf),
+        defer_until=req.defer_until[safe],
+        n_defers=req.n_defers[safe],
+        n_throttles=req.n_throttles[safe],
+    )
+    return win_batch, win_req, occ
+
+
+def _retire_window(
+    cfg: PolicyConfig,
+    phys: ProviderPhysics,
+    batch: RequestBatch,
+    state: SimState,
+    win: WindowCarry,
+) -> tuple[SimState, jnp.ndarray]:
+    """Windowed completion/timeout/stale pass: run the *dense* transition
+    on the (W,) window view — one code path, so the formulas cannot
+    drift — then scatter the updated statuses into the dense result
+    arrays.  The EMA update inside is bit-exact with the dense engine
+    because `_completed_ratio_sum` reduces a canonical fixed-width
+    buffer in request-id order (the window's compaction invariant).
+    Returns (state, alive) where alive marks slots still live (PENDING
+    or INFLIGHT) after retirement."""
+    n = batch.n
+    win_batch, win_req, occ = _window_view(batch, state.req, win.slot_req)
+    win_state = state._replace(req=win_req)
+    win_state = _complete_and_timeout(cfg, phys, win_batch, win_state)
+    status_w = win_state.req.status
+    sidx = jnp.where(occ, win.slot_req, n)
+    status = state.req.status.at[sidx].set(status_w, mode="drop")
+    state = state._replace(
+        req=state.req._replace(status=status),
+        sched=win_state.sched,
+        # inflight is an exact recount (every INFLIGHT request lives in
+        # the window); inflight_tokens is a diagnostics-only float whose
+        # reduction width differs from the dense engine's (not pinned)
+        provider=win_state.provider,
+    )
+    alive = occ & ((status_w == PENDING) | (status_w == INFLIGHT))
+    return state, alive
+
+
+def _compact_and_admit(
+    batch: RequestBatch, win: WindowCarry, alive: jnp.ndarray, now
+) -> WindowCarry:
+    """Reclaim retired slots and admit newly-arrived requests.
+
+    Reclamation is a stable compaction (cumsum scatter): survivors keep
+    their relative order, so the window stays sorted by request id and
+    the free region is the tail.  Admission pops the arrival-sorted
+    stream — `searchsorted` finds how many requests have arrived by
+    `now` in O(log N), and the first `free` of the not-yet-admitted
+    prefix append behind the survivors.  When the live queue exceeds W
+    the overflow waits (FIFO by arrival) — correct but no longer
+    bit-exact with the dense engine, which has no admission gate."""
+    n = batch.n
+    w = win.slot_req.shape[0]
+    iota = jnp.arange(w, dtype=jnp.int32)
+    pos = jnp.cumsum(alive.astype(jnp.int32)) - 1
+    target = jnp.where(alive, pos, w)
+    slot_req = jnp.full((w,), n, jnp.int32).at[target].set(
+        win.slot_req, mode="drop")
+    n_live = alive.sum().astype(jnp.int32)
+
+    n_arrived = jnp.searchsorted(
+        batch.arrival_ms, now, side="right").astype(jnp.int32)
+    avail = jnp.maximum(n_arrived - win.arr_ptr, 0)
+    n_admit = jnp.minimum(avail, w - n_live)
+    new_req = win.arr_ptr + iota - n_live
+    admit_here = (iota >= n_live) & (iota < n_live + n_admit)
+    slot_req = jnp.where(admit_here, new_req, slot_req)
+    return WindowCarry(
+        slot_req=slot_req,
+        arr_ptr=win.arr_ptr + n_admit,
+        n_live=n_live + n_admit,
+    )
+
+
 def run_sim(
     policy: PolicyConfig,
     batch: RequestBatch,
@@ -241,7 +416,8 @@ def run_sim(
     phys: ProviderPhysics,
     sim_cfg: SimConfig = SimConfig(),
     dynamics: ProviderDynamics | None = None,
-) -> SimState:
+    collect_decisions: bool = False,
+) -> SimState | tuple[SimState, tuple]:
     """Run the full horizon; returns the final SimState (jit-friendly).
 
     `dynamics` threads time-varying provider schedules through the scan
@@ -249,8 +425,21 @@ def run_sim(
     structure — `dynamics=None` (or all-None fields) traces exactly the
     stationary program, and schedule *content* never changes trace size:
     scenario complexity is O(1) at compile time.
+
+    `sim_cfg.window = W` switches the scan to the active-window engine
+    (DESIGN.md §6): per-tick cost O(W) instead of O(N·K), bit-exact with
+    the dense path whenever W covers the peak live queue.  Windowed mode
+    requires `batch.arrival_ms` sorted ascending (the workload
+    generator's native order).
+
+    `collect_decisions=True` (static) additionally returns the per-tick
+    decision trace `(actions (T,B), req_idx (T,B), severity (T,))` with
+    req_idx in *global* request ids on both engines — the hook the
+    per-decision bit-exactness pins compare.
     """
-    state0 = init_sim_state(batch.n, n_classes(policy))
+    n = batch.n
+    windowed = sim_cfg.window is not None
+    state0 = init_sim_state(n, n_classes(policy))
     has_brownout = dynamics is not None and dynamics.comfort_scale is not None
     has_limiter = dynamics is not None and dynamics.tb_refill is not None
     if has_limiter:
@@ -259,11 +448,22 @@ def run_sim(
             provider=state0.provider._replace(tb_tokens=dynamics.tb_capacity)
         )
 
-    def tick(state: SimState, xs):
+    def dispatch_inputs(state, win):
+        if not windowed:
+            return batch, state
+        win_batch, win_req, _ = _window_view(batch, state.req, win.slot_req)
+        return win_batch, state._replace(req=win_req)
+
+    def tick(carry, xs):
+        state, win = carry
         t_idx, comfort_t, refill_t = xs
         now = (t_idx + 1).astype(jnp.float32) * sim_cfg.dt_ms
         state = state._replace(now_ms=now)
-        state = _complete_and_timeout(policy, phys, batch, state)
+        if windowed:
+            state, alive = _retire_window(policy, phys, batch, state, win)
+            win = _compact_and_admit(batch, win, alive, now)
+        else:
+            state = _complete_and_timeout(policy, phys, batch, state)
         if has_limiter:
             state = state._replace(
                 provider=state.provider._replace(
@@ -273,25 +473,47 @@ def run_sim(
                     )
                 )
             )
+        d_batch, d_state = dispatch_inputs(state, win)
         d = schedule_batch(
-            policy, batch, state,
+            policy, d_batch, d_state,
             max_grants=sim_cfg.k_slots,
             backend=sim_cfg.ordering_backend,
         )
+        if windowed:
+            # slot-local decision -> global request ids; empty slots
+            # translate to the out-of-range n and fall into the scatter
+            # drop path (IDLE rows never carry a release anyway)
+            w = win.slot_req.shape[0]
+            d = d._replace(
+                req_idx=win.slot_req[jnp.clip(d.req_idx, 0, w - 1)])
         state = _apply_batch(
             policy, phys, batch, jitter, state, d,
             comfort_scale=comfort_t,
             limiter=dynamics if has_limiter else None,
         )
-        return state, None
+        ys = (d.actions, d.req_idx, d.severity) if collect_decisions else None
+        return (state, win), ys
 
+    win0 = init_window_carry(sim_cfg.window, n) if windowed else None
     xs = (
         jnp.arange(sim_cfg.n_ticks),
         dynamics.comfort_scale if has_brownout else None,
         dynamics.tb_refill if has_limiter else None,
     )
-    final, _ = jax.lax.scan(tick, state0, xs)
+    (final, win), trace = jax.lax.scan(tick, (state0, win0), xs)
     # drain bookkeeping: completions that land exactly at/after the horizon
     final = final._replace(now_ms=final.now_ms + 1e9)
+    if windowed:
+        # retire through the window first (completions land here; the
+        # canonical EMA sample stays bit-exact with the dense drain),
+        # then run the full dense transition once: after _retire_window
+        # nothing anywhere is INFLIGHT, so it reduces to exactly the
+        # stale-abandonment pass — reaching requests the window never
+        # admitted (arrived past the horizon, or overflow still queued)
+        # with the one and only definition of the timeout rule.  O(N),
+        # but once per run, not per tick.
+        final, _ = _retire_window(policy, phys, batch, final, win)
     final = _complete_and_timeout(policy, phys, batch, final)
+    if collect_decisions:
+        return final, trace
     return final

@@ -41,6 +41,8 @@ from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 
+from repro.core.numerics import pinned
+
 
 class ProviderPhysics(NamedTuple):
     base_ms: jnp.ndarray          # () f32 fixed per-request overhead
@@ -90,7 +92,12 @@ def load_multiplier(
 
 
 def unloaded_latency_ms(phys: ProviderPhysics, tokens) -> jnp.ndarray:
-    return phys.base_ms + phys.ms_per_token * jnp.asarray(tokens, jnp.float32)
+    # the pin keeps this mul+add from FMA-contracting in only one of the
+    # two engine programs that evaluate it over the same requests at
+    # different widths — it feeds the tail-EMA ratio, part of the
+    # engines' bit-exact contract (core/numerics.py, DESIGN.md §6)
+    return phys.base_ms + pinned(
+        phys.ms_per_token * jnp.asarray(tokens, jnp.float32))
 
 
 def service_time_ms(
@@ -164,11 +171,46 @@ def token_bucket_schedule(
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Per-class refill schedule: `(T, K)` grants/tick and `(K,)` burst
     capacity for a limiter of `rate_rps[k]` sustained grants per second.
-    Constant over time today, but shaped (T, K) so a future scenario can
-    tighten limits mid-run without touching the engine contract."""
+    Constant over time; `token_bucket_windows` layers piecewise rate
+    changes on top.  The `(T, K)` shape is the engine contract either
+    way — the scan consumes refill rows as xs without caring which
+    builder produced them."""
     rate = jnp.asarray(rate_rps, jnp.float32)  # (K,)
     refill = jnp.broadcast_to(
         rate * (dt_ms / 1000.0), (n_ticks, rate.shape[0])
     )
     capacity = jnp.full((rate.shape[0],), jnp.float32(burst))
     return refill, capacity
+
+
+def token_bucket_windows(
+    n_ticks: int,
+    dt_ms: float,
+    rate_rps: tuple[float, ...],
+    burst: float,
+    windows: tuple[tuple[float, float, float], ...],
+    span_ms: float,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Time-varying refill: the constant per-class schedule scaled by
+    piecewise windows — real providers tighten rate limits mid-incident
+    and restore them later, which is exactly the regime where
+    client-side retry policy starts to matter.
+
+    Windows are `(start_frac, end_frac, rate_mult)` as fractions of
+    `span_ms` (the scenario's arrival span, like brownouts, so windows
+    land on the traffic).  Overlapping windows compound by taking the
+    minimum multiplier — a crunch inside a crunch keeps the tighter
+    limit.  `rate_mult` may be 0 (a full refill freeze: only the burst
+    capacity remains until the window lifts).  Burst capacity is not
+    rescaled: the paper's 429 contract is about sustained rate, and a
+    capacity cut mid-run could strand already-held tokens above the cap.
+    """
+    refill, capacity = token_bucket_schedule(n_ticks, dt_ms, rate_rps, burst)
+    t_ms = (jnp.arange(n_ticks, dtype=jnp.float32) + 1.0) * dt_ms
+    scale = jnp.ones((n_ticks,), jnp.float32)
+    for start_frac, end_frac, m in windows:
+        if m < 0:
+            raise ValueError(f"rate_mult must be >= 0, got {m}")
+        inside = (t_ms >= start_frac * span_ms) & (t_ms < end_frac * span_ms)
+        scale = jnp.where(inside, jnp.minimum(scale, jnp.float32(m)), scale)
+    return refill * scale[:, None], capacity

@@ -6,6 +6,15 @@ single jit'd vmap — the unit every benchmark is built from.
 scenario) cell, with the static `Scenario` spec materialized into
 schedule arrays inside the jit boundary and per-phase windowed metrics
 returned alongside the aggregates.
+
+Both cells accept the active-window engine transparently: pass
+`sim_cfg=SimConfig(..., window=W)` and every seed's scan runs the O(W)
+per-tick path (DESIGN.md §6) instead of the dense O(N) one, with
+identical results whenever W covers the peak live queue — the window is
+an execution strategy, not a modeling change, so metrics and phase
+tables read the same.  `window_for` picks a W with headroom for a
+target population when callers don't want to reason about live-queue
+peaks.
 """
 from __future__ import annotations
 
@@ -45,6 +54,21 @@ def _run_seeds(
         return compute_metrics(batch, final, n_classes(policy))
 
     return jax.vmap(one)(keys)
+
+
+def window_for(n_requests: int, *, fraction: float = 0.25,
+               floor: int = 256, cap: int = 4096) -> int:
+    """Heuristic active-window capacity for a population of N.
+
+    The bit-exactness condition is W >= the peak live queue, which the
+    overload layer keeps far below N under any policy that sheds —
+    a quarter of the population, clamped to [floor, cap], has held
+    comfortable headroom across every regime in the scenario registry.
+    Callers that drive sustained overload with shedding disabled should
+    size W explicitly (an undersized window stays correct but queues
+    admissions FIFO, which is no longer the dense engine's behavior).
+    """
+    return int(min(max(floor, fraction * n_requests), cap))
 
 
 def run_cell(

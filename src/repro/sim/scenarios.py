@@ -12,7 +12,9 @@ arrivals are where prediction-aware policies earn their keep.  A
     flash crowds, heavy-dominated phase shifts;
   * **provider dynamics** — brownout windows (comfort-concurrency drops
     mid-run) and per-class token-bucket rate limits with 429-style
-    bounces (sim/provider.ProviderDynamics).
+    bounces (sim/provider.ProviderDynamics), optionally with
+    time-varying refill (`tb_windows`: the sustained rate itself
+    tightens and recovers mid-run).
 
 Because the spec is hashable (tuples of floats/strings) it rides jit as
 a static argument; `build()` materializes the `(T,)`-shaped schedule
@@ -42,6 +44,7 @@ from repro.sim.provider import (
     ProviderDynamics,
     brownout_schedule,
     token_bucket_schedule,
+    token_bucket_windows,
 )
 from repro.sim.workload import (
     MIXES,
@@ -76,6 +79,10 @@ class Scenario(NamedTuple):
     tb_rate_rps: Optional[float | tuple[float, ...]] = None
     tb_burst: float = 6.0
     retry_after_ms: float = 1500.0
+    # time-varying refill: (start_frac, end_frac, rate_mult) windows over
+    # the arrival span scaling the sustained rate (0 = refill freeze);
+    # overlaps compound by minimum — see provider.token_bucket_windows
+    tb_windows: tuple[tuple[float, float, float], ...] = ()
 
     @property
     def has_dynamics(self) -> bool:
@@ -149,8 +156,12 @@ def build_dynamics(
             raise ValueError(
                 f"scenario {sc.name!r}: tb_rate_rps has {len(rate_k)} "
                 f"classes but the run carries {k}")
-        refill, capacity = token_bucket_schedule(
-            n_ticks, dt_ms, rate_k, sc.tb_burst)
+        if sc.tb_windows:
+            refill, capacity = token_bucket_windows(
+                n_ticks, dt_ms, rate_k, sc.tb_burst, sc.tb_windows, span)
+        else:
+            refill, capacity = token_bucket_schedule(
+                n_ticks, dt_ms, rate_k, sc.tb_burst)
         retry = jnp.float32(sc.retry_after_ms)
     return ProviderDynamics(
         comfort_scale=comfort,
@@ -251,6 +262,20 @@ SCENARIOS: dict[str, Scenario] = {
                 Phase(0.25, _QUIET), Phase(0.25, _BURST)),
         tb_rate_rps=0.5,
         tb_burst=6.0,
+    ),
+    # rate crunch: steady traffic into a limiter whose *sustained* rate
+    # collapses to 10% for the middle third of the run (ROADMAP's
+    # time-varying token-bucket item) — unlike `rate_limited`, where the
+    # clients outrun a fixed budget, here the provider moves the budget:
+    # the bucket drains on the old rhythm, 429s spike, and recovery
+    # behavior after the window lifts is what separates retry policies
+    "rate_crunch": Scenario(
+        "rate_crunch",
+        congestion="high",
+        phases=(Phase(1 / 3), Phase(1 / 3), Phase(1 / 3)),
+        tb_rate_rps=1.2,
+        tb_burst=6.0,
+        tb_windows=((1 / 3, 2 / 3, 0.1),),
     ),
     # the perfect storm: flash crowd into a browned-out, rate-limited
     # provider — every mechanism at once

@@ -14,8 +14,11 @@ from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
-from repro.kernels.sched_score.ops import sched_score_argmax
-from repro.kernels.sched_score.ref import sched_score_argmax_ref
+from repro.kernels.sched_score.ops import sched_score_argmax, sched_score_topb
+from repro.kernels.sched_score.ref import (
+    sched_score_argmax_ref,
+    sched_score_topb_ref,
+)
 from repro.kernels.ssd_scan.ops import ssd_intra
 from repro.kernels.ssd_scan.ref import ssd_intra_ref
 
@@ -158,3 +161,83 @@ class TestSchedScore:
         w = jnp.asarray([1.0, 0.6, 0.8, 512.0])
         i, s = sched_score_argmax(z, z + 100, z, jnp.zeros((n,), bool), w)
         assert float(s) <= -1e29
+
+
+class TestSchedScoreTopB:
+    """Fused partial top-B vs the `lax.top_k` oracle: exact index AND
+    exact score equality, including first-occurrence tie-breaking — the
+    property the windowed scheduler's bit-exact contract rests on."""
+
+    W = jnp.asarray([1.0, 0.8, 0.5, 650.0], jnp.float32)
+
+    def _features(self, n, seed, density=0.7):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        wait = jax.random.uniform(ks[0], (n,)) * 5e3
+        cost = jax.random.uniform(ks[1], (n,)) * 3000 + 0.5
+        urg = jax.random.uniform(ks[2], (n,)) * 2
+        mask = jax.random.bernoulli(ks[3], density, (n,))
+        return wait, cost, urg, mask
+
+    def _check(self, n, b, blk=2048, seed=0, density=0.7):
+        wait, cost, urg, mask = self._features(n, seed, density)
+        ik, sk = sched_score_topb(wait, cost, urg, mask, self.W, b, blk=blk)
+        ir, sr = sched_score_topb_ref(wait, cost, urg, mask, self.W,
+                                      min(b, n))
+        np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
+        np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+
+    @given(seed=st.integers(0, 1000), nb=st.sampled_from([1, 2, 5]),
+           b=st.sampled_from([1, 4, 16]), density=st.floats(0.0, 1.0))
+    @settings(max_examples=20, deadline=None)
+    def test_property_matches_topk(self, seed, nb, b, density):
+        self._check(512 * nb, b, blk=512, seed=seed, density=density)
+
+    @pytest.mark.parametrize("n", [7, 96, 130, 1000, 5000])
+    def test_non_lane_aligned_lengths(self, n):
+        """Queue lengths that are not multiples of the TPU lane width or
+        the block size exercise the mask=False padding in ops.py."""
+        self._check(n, min(8, n), blk=512, seed=3)
+
+    def test_window_sized_queues(self):
+        """Window capacities the engine actually uses, aligned or not."""
+        for w in (96, 128, 192, 4096):
+            self._check(w, 16, blk=1024, seed=4)
+
+    def test_tie_breaking_first_occurrence(self):
+        """Duplicate feature rows produce exact score ties; the kernel
+        must rank equal scores by ascending index like lax.top_k."""
+        n, half = 512, 256
+        wait, cost, urg, _ = self._features(n, seed=9, density=1.0)
+        wait = wait.at[half:].set(wait[:half])
+        cost = cost.at[half:].set(cost[:half])
+        urg = urg.at[half:].set(urg[:half])
+        mask = jnp.ones((n,), bool)
+        ik, sk = sched_score_topb(wait, cost, urg, mask, self.W, 32, blk=128)
+        ir, sr = sched_score_topb_ref(wait, cost, urg, mask, self.W, 32)
+        np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
+        np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+
+    def test_b_exceeds_eligible(self):
+        """b far above the eligible count: the exhausted region must
+        still mirror top_k (first-occurrence over masked sentinels)."""
+        self._check(64, 32, blk=128, seed=5, density=0.05)
+        self._check(100, 16, seed=6, density=0.0)  # nothing eligible
+
+    def test_b_equals_n(self):
+        self._check(16, 16, seed=7)
+
+    def test_fifo_weight_row_matches_topk_on_arrival(self):
+        """The FIFO emulation (weights [1,0,0,1], -arrival in the wait
+        slot) must reproduce lax.top_k(-arrival) exactly — this is the
+        rank_fifo pallas path."""
+        n, b = 300, 8
+        arrival = jax.random.uniform(jax.random.PRNGKey(8), (n,)) * 1e5
+        mask = jax.random.bernoulli(jax.random.PRNGKey(9), 0.5, (n,))
+        w_fifo = jnp.asarray([1.0, 0.0, 0.0, 1.0], jnp.float32)
+        ones, zeros = jnp.ones((n,)), jnp.zeros((n,))
+        ik, _ = sched_score_topb(-arrival, ones, zeros, mask, w_fifo, b)
+        key = jnp.where(mask, arrival, jnp.inf)
+        _, ir = jax.lax.top_k(-key, b)
+        live = np.asarray(mask.sum())
+        np.testing.assert_array_equal(
+            np.asarray(ik)[:live], np.asarray(ir)[:live])

@@ -27,6 +27,7 @@ from repro.sim.provider import (
     load_multiplier,
     service_time_ms,
     token_bucket_schedule,
+    token_bucket_windows,
 )
 from repro.sim.scenarios import (
     Phase,
@@ -319,6 +320,67 @@ class TestProviderDynamicsEngine:
         assert refill.shape == (50, 2) and cap.shape == (2,)
         assert np.allclose(np.asarray(refill)[0], [0.05, 0.025])
         assert np.allclose(np.asarray(cap), 6.0)
+
+    def test_token_bucket_windows_scales_refill(self):
+        """Piecewise refill: inside the window the sustained rate drops
+        by the multiplier, outside it matches the constant builder;
+        overlapping windows compound by minimum."""
+        span = 50 * 25.0
+        refill, cap = token_bucket_windows(
+            50, 25.0, (2.0, 1.0), 6.0,
+            ((0.2, 0.6, 0.5), (0.4, 0.8, 0.25)), span)
+        base, _ = token_bucket_schedule(50, 25.0, (2.0, 1.0), 6.0)
+        refill, base = np.asarray(refill), np.asarray(base)
+        assert refill.shape == (50, 2)
+        t_frac = (np.arange(50) + 1.0) / 50.0
+        outside = (t_frac < 0.2) | (t_frac >= 0.8)
+        assert np.array_equal(refill[outside], base[outside])
+        only_first = (t_frac >= 0.2) & (t_frac < 0.4)
+        assert np.allclose(refill[only_first], 0.5 * base[only_first])
+        overlap = (t_frac >= 0.4) & (t_frac < 0.6)
+        assert np.allclose(refill[overlap], 0.25 * base[overlap])
+        assert np.allclose(np.asarray(cap), 6.0)  # burst untouched
+
+    def test_token_bucket_windows_rejects_negative_mult(self):
+        with pytest.raises(ValueError, match="rate_mult"):
+            token_bucket_windows(10, 25.0, (1.0,), 2.0,
+                                 ((0.0, 1.0, -0.5),), 250.0)
+
+    def test_time_varying_refill_conserves_grants(self):
+        """Conservation under a mid-run refill freeze: admitted sends
+        never exceed burst + the *windowed* refill integral (strictly
+        below the constant-rate budget), and the crunch window shows up
+        as a throttle spike."""
+        sc = Scenario(
+            "crunch_test",
+            congestion="high",
+            phases=(Phase(0.5, 1.0), Phase(0.5, 1.0)),
+            tb_rate_rps=0.8,
+            tb_burst=3.0,
+            tb_windows=((0.25, 0.75, 0.0),),  # refill freeze mid-run
+            retry_after_ms=600.0,
+        )
+        sim_cfg = SimConfig(n_ticks=2000)
+        wl_cfg, sched, dynamics, _ = build(
+            sc, 64, sim_cfg.n_ticks, sim_cfg.dt_ms)
+        batch, jitter = generate(jax.random.PRNGKey(2), wl_cfg, sched)
+        final = run_sim(base_policy(), batch, jitter, default_physics(),
+                        sim_cfg, dynamics)
+        refill = np.asarray(dynamics.tb_refill)
+        n_admitted = np.isfinite(np.asarray(final.req.submit_ms)).sum()
+        k = refill.shape[1]
+        windowed_budget = k * (3.0 + float(refill.sum(0)[0]))
+        constant_budget = k * (3.0 + 0.8 * (25.0 / 1000.0) * 2000)
+        assert windowed_budget < constant_budget  # the freeze bites
+        assert n_admitted <= windowed_budget + 1e-6
+        assert int(final.provider.n_throttled) > 0
+
+    def test_rate_crunch_scenario_runs(self):
+        """The registry scenario exercising tb_windows end to end."""
+        m, _ = run_scenario_cell(
+            base_policy(), "rate_crunch", seeds=1, n_requests=48,
+            sim_cfg=SimConfig(n_ticks=1200))
+        assert np.isfinite(np.asarray(m.completion_rate)).all()
 
     def test_limiter_sized_by_policy_classes(self):
         """A policy carrying more classes than the lane scheme must run
