@@ -3,7 +3,7 @@ PY := python
 export PYTHONPATH := src
 
 .PHONY: test test-fast bench bench-smoke bench-sched bench-scale \
-	bench-scenarios check-bench check-clean ci
+	bench-scenarios bench-client serve-smoke check-bench check-clean ci
 
 # Tier-1: full test suite (ROADMAP.md)
 test:
@@ -46,6 +46,17 @@ bench-scale:
 bench-scenarios:
 	$(PY) benchmarks/scenario_sweep.py
 
+# streaming client-session throughput (requests/s over MockProvider at
+# N in {1e3,1e5}) -> client_session rows in BENCH_scheduler.json; the
+# N-independence of the per-request rate is the windowed-client bar
+bench-client:
+	$(PY) benchmarks/client_bench.py
+
+# serving-path smoke: ClientSession drains a mock workload to 100% and
+# the deprecated ScheduledClient shim still serves a closed list
+serve-smoke:
+	$(PY) benchmarks/client_bench.py --smoke
+
 # bench-regression gate: fresh B=16 dispatch rate vs the committed
 # BENCH_scheduler.json baseline (>30% drop fails; BENCH_TOLERANCE widens)
 check-bench:
@@ -68,5 +79,6 @@ check-clean:
 	fi; echo "check-clean: no tracked or unignored __pycache__/*.pyc"
 
 # CI entry point (.github/workflows/ci.yml runs exactly this): hygiene
-# check, tier-1 tests, CI-sized bench smoke, bench-regression gate
-ci: check-clean test bench-smoke check-bench
+# check, tier-1 tests, CI-sized bench smoke, serving smoke,
+# bench-regression gate
+ci: check-clean test bench-smoke serve-smoke check-bench

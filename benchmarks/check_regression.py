@@ -25,6 +25,12 @@ below the committed `BENCH_scheduler.json` baseline.  Checks:
     (the committed artifact shows 19-31x; the bar leaves room for
     runner noise).  A change that quietly reintroduces O(N) work into
     the windowed tick fails here on any machine.
+  * **client session** (DESIGN.md §7): fresh end-to-end `ClientSession`
+    throughput over MockProvider at each committed (N, W, B) cell vs
+    its baseline row, same tolerance — plus the machine-independent
+    N-independence bar: the N=1e5 per-request rate must stay within 2x
+    of N=1e3 (per-poll cost is O(W); a refactor that sneaks O(total N)
+    work into the poll loop fails here on any machine).
 
 Wired into `make ci` as `make check-bench`.  The baseline is read from
 git (`HEAD:BENCH_scheduler.json`) so a local `make bench-sched` that
@@ -42,6 +48,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."
 
 import numpy as np  # noqa: E402
 
+from benchmarks.client_bench import client_session_bench  # noqa: E402
 from benchmarks.multi_class import (  # noqa: E402
     batch_dispatch_bench,
     windowed_dispatch_bench,
@@ -53,6 +60,10 @@ DEFAULT_TOLERANCE = 0.30  # fail on >30% regression at B=16
 MIN_B16_VS_B1 = 2.0       # the repo's batched-dispatch acceptance bar
 MIN_WIN_VS_DENSE = 4.0    # windowed-vs-dense dispatch bar at large N
 GATE_N = 100_000          # windowed cells at this depth are gated
+# client-session N-independence: the per-request rate at N=1e5 must be
+# within 2x of the N=1e3 rate (per-poll cost is O(W), not O(N) — the
+# acceptance bar of the streaming client API, DESIGN.md §7)
+MIN_CLIENT_N_RATIO = 0.5
 
 
 def load_baseline() -> dict:
@@ -144,6 +155,40 @@ def main(argv: list[str]) -> int:
                     f"windowed N={n_req} W={w}: only {ratio:.2f}x the dense "
                     f"B=1 rate (bar: >={MIN_WIN_VS_DENSE}x)")
         print(line)
+
+    # --- client-session gate: streaming API throughput + N-independence
+    crows = [r for r in baseline.get("client_session", [])]
+    if not crows:
+        print("FAIL: committed BENCH_scheduler.json has no client_session "
+              "rows to gate against")
+        return 1
+    fresh_by_n = {}
+    for r in sorted(crows, key=lambda r: r["n_requests"]):
+        n_req, w, b = r["n_requests"], r["window"], r["max_grants"]
+        fresh = client_session_bench(n_req, window=w, grants=b)
+        rate, base_rate = fresh["requests_per_sec"], r["requests_per_sec"]
+        fresh_by_n[n_req] = rate
+        floor = (1.0 - tolerance) * base_rate
+        ok_abs = np.isfinite(rate) and rate >= floor
+        print(f"  client    N={n_req:7d} W={w:5d} B={b:2d}: fresh "
+              f"{rate:10.0f} req/s vs baseline {base_rate:10.0f} "
+              f"(floor {floor:10.0f}) [{'ok' if ok_abs else 'REGRESSION'}]")
+        if not ok_abs:
+            failures.append(
+                f"client_session N={n_req}: rate {rate:.0f} < floor "
+                f"{floor:.0f} ({rate / base_rate - 1.0:+.0%} vs baseline)")
+    if len(fresh_by_n) >= 2:
+        ns = sorted(fresh_by_n)
+        ratio = fresh_by_n[ns[-1]] / fresh_by_n[ns[0]]
+        ok_ratio = np.isfinite(ratio) and ratio >= MIN_CLIENT_N_RATIO
+        print(f"  client    N-independence: N={ns[-1]} per-request rate "
+              f"{ratio:.2f}x the N={ns[0]} rate "
+              f"[{'ok' if ok_ratio else 'FAIL'}]")
+        if not ok_ratio:
+            failures.append(
+                f"client_session: N={ns[-1]} rate only {ratio:.2f}x the "
+                f"N={ns[0]} rate (bar: >={MIN_CLIENT_N_RATIO}x — per-poll "
+                f"cost must stay O(W), not O(N))")
 
     if failures:
         print("FAIL: scheduler throughput regression:")

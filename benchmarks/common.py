@@ -48,6 +48,17 @@ SIM = SimConfig(n_ticks=14000)
 N_REQ = 160
 SEEDS = 5
 
+
+def merge_rows(fresh: list[dict], old: list[dict], keys: tuple) -> list[dict]:
+    """Merge bench artifact rows: fresh rows win; committed rows for
+    cells not re-measured (e.g. the --scale-only N=1e6 cells in a
+    regular run) are preserved so a default bench run cannot silently
+    drop them.  Shared by every driver that writes keyed row lists into
+    BENCH_scheduler.json."""
+    measured = {tuple(r[k] for k in keys) for r in fresh}
+    kept = [r for r in old if tuple(r.get(k) for k in keys) not in measured]
+    return fresh + kept
+
 METRIC_COLS = [
     "short_p95_ms", "short_p90_ms", "long_p90_ms", "global_p95_ms",
     "global_std_ms", "completion_rate", "satisfaction", "goodput_rps",

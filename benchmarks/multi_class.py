@@ -61,7 +61,12 @@ from repro.sim import (  # noqa: E402
     summarize,
 )
 
-from benchmarks.common import TABLE_DIR, Timer, write_csv  # noqa: E402
+from benchmarks.common import (  # noqa: E402
+    TABLE_DIR,
+    Timer,
+    merge_rows,
+    write_csv,
+)
 
 K_SWEEP = (2, 4, 8)
 B_SWEEP = (1, 4, 16)           # grants per batched dispatch pass
@@ -289,15 +294,6 @@ def windowed_engine_bench(n_req: int, w: int, n_ticks: int = 400,
     }
 
 
-def _merge_rows(fresh: list[dict], old: list[dict], keys: tuple) -> list[dict]:
-    """Fresh rows win; committed rows for cells not re-measured (e.g.
-    the --scale-only N=1e6 cells in a regular run) are preserved so a
-    default `make bench-sched` cannot silently drop them."""
-    measured = {tuple(r[k] for k in keys) for r in fresh}
-    kept = [r for r in old if tuple(r.get(k) for k in keys) not in measured]
-    return fresh + kept
-
-
 def write_windowed_bench(bench: dict, prev: dict, scale: bool = False,
                          verbose: bool = True) -> None:
     """Active-window N x W sweep appended into the BENCH artifact."""
@@ -315,7 +311,7 @@ def write_windowed_bench(bench: dict, prev: dict, scale: bool = False,
                     print(f"  windowed    B={b:2d} N={n_req:7d} W={w:5d}: "
                           f"{r['call_us']:9.1f}us/call "
                           f"({r['slots_per_sec']:.0f} slots/s)")
-    bench["windowed_dispatch"] = _merge_rows(
+    bench["windowed_dispatch"] = merge_rows(
         rows, prev.get("windowed_dispatch", []),
         ("max_grants", "n_requests", "window"))
 
@@ -327,7 +323,7 @@ def write_windowed_bench(bench: dict, prev: dict, scale: bool = False,
             print(f"  engine(win) N={n_req:7d} W={er['window']:5d}: "
                   f"{er['ticks_per_sec']:.0f} ticks/s "
                   f"({er['grant_opps_per_sec']:.0f} grant-opps/s)")
-    bench["windowed_engine"] = _merge_rows(
+    bench["windowed_engine"] = merge_rows(
         erows, prev.get("windowed_engine", []), ("n_requests",))
 
     # headline ratios: windowed vs dense dispatch at the deep queue —

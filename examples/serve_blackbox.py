@@ -1,16 +1,25 @@
 """End-to-end driver (the paper's deployment shape): a REAL JAX model
-served behind an opaque submit() API, with the three-layer client
-scheduler deciding order and admission.
+served behind an opaque async submit() API, with the three-layer client
+scheduler deciding order and admission through the streaming
+`ClientSession` (DESIGN.md §7).
 
-This is the same batched `schedule_batch` the simulator exercises, driven
-by wall clock (one vectorized pass drains up to `max_grants` sends per
-poll) — proving the policy stack is not simulator-bound. The model is a
-reduced same-family variant of an assigned architecture (CPU-friendly);
-on TPU hardware the provider would wrap the pjit-sharded engine from
-repro/launch/serve.py instead.
+This is the same batched `schedule_batch` the simulator exercises,
+driven by wall clock: each poll makes one vectorized decision over the
+windowed slot pool and submits up to `max_grants` requests to the
+provider *without blocking* — several generations ride in flight on the
+provider's thread pool, idle waits sleep until the next actionable
+instant, and an optional `--max-inflight` turns the boundary into a
+429-emitting rate limit that exercises the session's Retry-After
+backoff.  The model is a reduced same-family variant of an assigned
+architecture (CPU-friendly); on TPU hardware the provider would wrap
+the pjit-sharded engine from repro/launch/serve.py instead.
+
+(The old `ScheduledClient.run(list)` surface still works as a
+deprecated shim over this session.)
 
 Usage:  PYTHONPATH=src python examples/serve_blackbox.py \
-            [--arch stablelm-1.6b] [--requests 16] [--policy final_adrr_olc]
+            [--arch stablelm-1.6b] [--requests 16] [--policy final_adrr_olc] \
+            [--max-inflight 4]
 """
 from __future__ import annotations
 
@@ -18,14 +27,20 @@ import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.client import (
+    AsyncBlackBoxProvider,
+    ClientSession,
+    SessionConfig,
+)
 from repro.config import ServeConfig
 from repro.configs import ARCHS, get_smoke
 from repro.core.policy import STRATEGIES, strategy
 from repro.launch.serve import make_requests
 from repro.models import init_model
-from repro.serving import BlackBoxProvider, ScheduledClient
+from repro.serving import BlackBoxProvider
 
 
 def main():
@@ -34,26 +49,51 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--policy", choices=list(STRATEGIES),
                     default="final_adrr_olc")
+    ap.add_argument("--max-inflight", type=int, default=None,
+                    help="provider-side concurrency cap; exceeding it "
+                         "429s with a Retry-After the session honors")
+    ap.add_argument("--time-scale", type=float, default=2.0,
+                    help="session seconds per wall second")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch)
     print(f"init reduced {cfg.name} (d_model={cfg.d_model}, "
           f"layers={cfg.n_layers}) ...")
     model = init_model(jax.random.PRNGKey(0), cfg)
-    provider = BlackBoxProvider(model.params, cfg,
-                                ServeConfig(max_seq=128, temperature=0.0))
-    client = ScheduledClient(provider, strategy(args.policy))
+    engine = BlackBoxProvider(model.params, cfg,
+                              ServeConfig(max_seq=128, temperature=0.0))
+    provider = AsyncBlackBoxProvider(
+        engine, max_workers=4, max_inflight=args.max_inflight)
+    # the reduced CPU model is orders of magnitude slower per token than
+    # the provider physics the deadline budgets assume — relax the
+    # timeout multiple so the demo exercises scheduling, not wholesale
+    # client-side abandonment (the session, unlike the old blocking
+    # client, really enforces the paper's timeout rule)
+    policy = strategy(args.policy)._replace(
+        timeout_mult=jnp.full((4,), 30.0, jnp.float32))
+    session = ClientSession(
+        provider,
+        policy,
+        SessionConfig(window=max(32, args.requests), max_grants=4,
+                      time_scale=args.time_scale),
+        clock="wall",
+    )
 
-    reqs = make_requests(args.requests, seed=0)
     t0 = time.time()
-    out = client.run(reqs, time_scale=50.0)
+    for r in make_requests(args.requests, seed=0):
+        session.submit(r)
+    out = session.drain()
     wall = time.time() - t0
+    provider.shutdown()
 
     done = [r for r in out if r.status == "completed"]
     rej = [r for r in out if r.status == "rejected"]
     lat = np.asarray([r.finish_s - r.arrival_s for r in done])
+    s = session.stats
     print(f"\n{len(done)}/{len(out)} completed, {len(rej)} rejected, "
           f"{wall:.1f}s wall")
+    print(f"polls={s.n_polls} idle_sleeps={s.n_idle_sleeps} "
+          f"throttled={s.n_throttled} peak_inflight={s.peak_inflight}")
     if len(lat):
         print(f"latency mean {lat.mean():.2f}s  p95 "
               f"{np.percentile(lat, 95):.2f}s")

@@ -1,0 +1,23 @@
+"""Transport-agnostic streaming client API (DESIGN.md §7).
+
+`ClientSession` runs the paper's three-layer scheduler as an open-ended
+submit/poll/drain session over the `AsyncProvider` boundary;
+`MockProvider` replays the simulator's provider dynamics against it and
+`AsyncBlackBoxProvider` adapts the real JAX engine.
+"""
+from repro.client.blackbox import AsyncBlackBoxProvider  # noqa: F401
+from repro.client.provider import (  # noqa: F401
+    AsyncProvider,
+    Completion,
+    MockProvider,
+    SubmitResult,
+)
+from repro.client.request import Request, default_p90  # noqa: F401
+from repro.client.session import (  # noqa: F401
+    ClientSession,
+    PollResult,
+    SessionConfig,
+    SessionStats,
+    expo_retry,
+    honor_retry_after,
+)

@@ -1,0 +1,268 @@
+"""The async provider boundary: what the client sees of the black box.
+
+`AsyncProvider` is the transport contract `ClientSession` schedules
+against — deliberately tiny, matching the paper's black-box premise:
+
+  * `submit(req, now_ms, ...)` is NON-blocking: it either accepts the
+    request (work proceeds out of band; completion arrives via `poll`)
+    or bounces it 429-style with a client-visible `retry_after_ms`.
+    Nothing about service time is revealed at submission.
+  * `poll(now_ms)` drains completions that have landed by `now_ms`.
+  * `inflight()` is the provider's actual outstanding count — the
+    session's concurrency accounting reflects this real number instead
+    of bracketing a blocking call one request at a time.
+  * `next_event_ms(now_ms)` is an optional scheduling hint (earliest
+    time anything can change) so an idle session can sleep instead of
+    spinning; transports that cannot know return None.
+
+Two implementations live here / in `repro.client.blackbox`:
+
+  * `MockProvider` — the simulator's provider physics and nonstationary
+    dynamics (sim/provider.py) behind the async API: load-dependent
+    service times, brownout comfort windows, and the per-class
+    token-bucket rate limiter with 429 bounces.  Its arithmetic
+    deliberately mirrors the engine's float-for-float (np.float32,
+    same operation order) so a `ClientSession` replaying a generated
+    trace in virtual time reproduces the windowed sim engine's decision
+    sequence (tests/test_serving_client.py pins this).
+  * `AsyncBlackBoxProvider` (repro.client.blackbox) — the real JAX
+    serving engine behind the same protocol via a thread pool.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, NamedTuple, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.sim.provider import ProviderPhysics, default_physics
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.client.request import Request
+
+
+class SubmitResult(NamedTuple):
+    """Outcome of a non-blocking submit."""
+
+    accepted: bool
+    retry_after_ms: float = 0.0   # 429 Retry-After hint when not accepted
+    ticket: int = -1              # provider-scoped handle when accepted
+
+
+class Completion(NamedTuple):
+    """One landed request, reported by `poll`."""
+
+    ticket: int
+    finish_ms: float              # session-clock completion time
+    output: Optional[np.ndarray] = None
+
+
+@runtime_checkable
+class AsyncProvider(Protocol):
+    """Transport contract the session schedules against (see module
+    docstring).  `inflight_hint` is the client's own concurrency view at
+    decision time; transports may ignore it."""
+
+    def submit(self, req: "Request", now_ms: float,
+               inflight_hint: int | None = None) -> SubmitResult: ...
+
+    def poll(self, now_ms: float) -> list[Completion]: ...
+
+    def inflight(self) -> int: ...
+
+    def next_event_ms(self, now_ms: float) -> Optional[float]: ...
+
+
+def _f32(x) -> np.float32:
+    return np.float32(x)
+
+
+def _fma32(a: np.float32, b: np.float32, c: np.float32) -> np.float32:
+    """Single-rounded a*b + c in float32 — the fused multiply-add
+    XLA:CPU emits for the engine's trailing `service * jitter + now`.
+    Emulated exactly via float64: the f32 product a*b is exact in f64
+    (48 significand bits), and rounding the f64 sum to f32 matches the
+    hardware FMA except on double-rounding boundary cases ~2^-29 wide —
+    none of which the pinned parity traces cross."""
+    return np.float32(np.float64(a) * np.float64(b) + np.float64(c))
+
+
+class MockProvider:
+    """Sim-dynamics provider behind the async boundary.
+
+    Service physics, brownout schedule, and the token-bucket limiter are
+    exactly `sim/provider.py`'s, evaluated in strict per-op float32 so
+    results are bit-identical to the engine's vectorized evaluation
+    (both are IEEE f32 with the same operation order; the engine pins
+    the contractible chains — `unloaded_latency_ms`, the EMA — behind
+    `core.numerics.pinned`, so XLA cannot re-associate them either).
+
+    Tick alignment: schedules are `(T,)`/`(T, K)` per-tick rows like the
+    engine's scan xs.  A poll/submit at `now_ms` first applies every
+    refill row r with (r + 1) * dt_ms <= now_ms (the engine applies row
+    t before dispatching at now = (t+1) dt), and the brownout row for
+    the current tick scales the comfort knee of admissions inside it.
+
+    Token-bucket semantics match `_apply_batch`: grants within one
+    decision epoch (one distinct `now_ms`) are ranked per class against
+    the bucket level at epoch start, accepted grants consume one token,
+    bounces consume nothing and carry `retry_after_ms`.
+    """
+
+    def __init__(
+        self,
+        phys: ProviderPhysics | None = None,
+        *,
+        dt_ms: float = 25.0,
+        comfort_scale: Optional[np.ndarray] = None,   # (T,) brownout rows
+        tb_refill: Optional[np.ndarray] = None,       # (T, K) grants/tick
+        tb_capacity: Optional[np.ndarray] = None,     # (K,) burst size
+        retry_after_ms: float = 1500.0,
+    ):
+        phys = phys if phys is not None else default_physics()
+        self.phys = phys
+        self._base = _f32(np.asarray(phys.base_ms))
+        self._ms_per_token = _f32(np.asarray(phys.ms_per_token))
+        self._comfort = _f32(np.asarray(phys.comfort_concurrency))
+        self._slope = _f32(np.asarray(phys.slowdown_slope))
+        self._quad = _f32(np.asarray(phys.slowdown_quad))
+        self.dt_ms = float(dt_ms)
+        self._comfort_rows = (
+            None if comfort_scale is None
+            else np.asarray(comfort_scale, np.float32))
+        self._refill_rows = (
+            None if tb_refill is None else np.asarray(tb_refill, np.float32))
+        if (self._refill_rows is None) != (tb_capacity is None):
+            raise ValueError("tb_refill and tb_capacity go together")
+        self._capacity = (
+            None if tb_capacity is None
+            else np.asarray(tb_capacity, np.float32))
+        self.retry_after_ms = float(retry_after_ms)
+        # bucket starts full: burst capacity available at t=0 (engine
+        # seeds tb_tokens the same way in run_sim)
+        self._tb = None if self._capacity is None else self._capacity.copy()
+        self._rows_applied = 0
+        self._epoch_now = -np.inf   # decision epoch = one distinct now_ms
+        self._epoch_tokens0 = (
+            None if self._tb is None else self._tb.copy())
+        self._epoch_rank = (
+            None if self._tb is None
+            else np.zeros(self._capacity.shape[0], np.int64))
+        self._outstanding: dict[int, tuple[np.float32, "Request"]] = {}
+        self._next_ticket = 0
+        self.n_throttled = 0
+        self.n_accepted = 0
+
+    @classmethod
+    def from_scenario(cls, scenario, n_requests: int, n_ticks: int,
+                      dt_ms: float, k: int,
+                      phys: ProviderPhysics | None = None) -> "MockProvider":
+        """Build the provider side of a registry `Scenario` — the same
+        schedules `run_sim` threads through its scan, so nonstationary
+        regimes (brownouts, rate_crunch) replay against the live path."""
+        from repro.sim.scenarios import build_dynamics
+        dyn = build_dynamics(scenario, n_ticks, dt_ms, n_requests, k)
+        if dyn is None:
+            return cls(phys, dt_ms=dt_ms)
+        retry = (float(np.asarray(dyn.retry_after_ms))
+                 if dyn.retry_after_ms is not None else 1500.0)
+        return cls(
+            phys,
+            dt_ms=dt_ms,
+            comfort_scale=(None if dyn.comfort_scale is None
+                           else np.asarray(dyn.comfort_scale)),
+            tb_refill=(None if dyn.tb_refill is None
+                       else np.asarray(dyn.tb_refill)),
+            tb_capacity=(None if dyn.tb_capacity is None
+                         else np.asarray(dyn.tb_capacity)),
+            retry_after_ms=retry,
+        )
+
+    # --- time ---------------------------------------------------------
+    def _advance(self, now_ms: float) -> None:
+        """Apply refill rows due by `now_ms`; open a new decision epoch
+        when the clock moved."""
+        if self._refill_rows is not None:
+            target = int(np.floor(now_ms / self.dt_ms + 1e-6))
+            target = min(target, self._refill_rows.shape[0])
+            while self._rows_applied < target:
+                self._tb = np.minimum(
+                    self._tb + self._refill_rows[self._rows_applied],
+                    self._capacity)
+                self._rows_applied += 1
+        if now_ms != self._epoch_now:
+            self._epoch_now = now_ms
+            if self._tb is not None:
+                self._epoch_tokens0 = self._tb.copy()
+                self._epoch_rank[:] = 0
+
+    def _tick_index(self, now_ms: float, n_rows: int) -> int:
+        t = int(np.floor(now_ms / self.dt_ms + 1e-6)) - 1
+        return min(max(t, 0), n_rows - 1)
+
+    # --- physics ------------------------------------------------------
+    def _finish_ms(self, tokens: float, inflight: int, jitter: float,
+                   now_ms: float) -> np.float32:
+        """`now + sim/provider.service_time_ms(...)` with the engine's
+        realized rounding: strict per-op float32 through the slowdown
+        chain, then the trailing `* jitter + now` as one fused
+        multiply-add (see `_fma32` — XLA:CPU contracts exactly that pair
+        inside the engine's apply fusion)."""
+        comfort = self._comfort
+        if self._comfort_rows is not None:
+            row = self._tick_index(now_ms, self._comfort_rows.shape[0])
+            comfort = comfort * self._comfort_rows[row]
+        unloaded = self._base + self._ms_per_token * _f32(tokens)
+        excess = np.maximum(_f32(inflight) - comfort, _f32(0.0)) \
+            / np.maximum(comfort, _f32(1.0))
+        mult = _f32(1.0) + self._slope * excess + self._quad * (excess * excess)
+        return _fma32(unloaded * mult, _f32(jitter), _f32(now_ms))
+
+    # --- AsyncProvider ------------------------------------------------
+    def submit(self, req: "Request", now_ms: float,
+               inflight_hint: int | None = None) -> SubmitResult:
+        self._advance(now_ms)
+        if self._tb is not None:
+            k = self._capacity.shape[0]
+            c = min(max(req.resolved_cls(), 0), k - 1)
+            self._epoch_rank[c] += 1
+            allowed = (np.float32(self._epoch_rank[c])
+                       <= self._epoch_tokens0[c] + np.float32(1e-6))
+            if not allowed:
+                self.n_throttled += 1
+                return SubmitResult(False, self.retry_after_ms)
+            self._tb[c] = self._tb[c] - np.float32(1.0)
+        # service physics at the client's optimistic concurrency view
+        # when provided: the engine prices grant g at the inflight count
+        # the *decision* saw (every prior ADMIT in the epoch, including
+        # ones a rate limit later bounced), which is what a real async
+        # client racing its own limit observes.  Fall back to the true
+        # outstanding count for hint-less transports.
+        inflight = (inflight_hint if inflight_hint is not None
+                    else len(self._outstanding))
+        finish = self._finish_ms(req.max_new, inflight, req.jitter, now_ms)
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._outstanding[ticket] = (finish, req)
+        self.n_accepted += 1
+        return SubmitResult(True, 0.0, ticket=ticket)
+
+    def poll(self, now_ms: float) -> list[Completion]:
+        self._advance(now_ms)
+        done = sorted(
+            t for t, (f, _) in self._outstanding.items() if f <= now_ms)
+        out = []
+        for t in done:
+            finish, _req = self._outstanding.pop(t)
+            out.append(Completion(t, float(finish), None))
+        return out
+
+    def inflight(self) -> int:
+        return len(self._outstanding)
+
+    def next_event_ms(self, now_ms: float) -> Optional[float]:
+        cands = [float(f) for f, _ in self._outstanding.values()]
+        if self._refill_rows is not None \
+                and self._rows_applied < self._refill_rows.shape[0]:
+            # next refill row lands at (rows_applied + 1) * dt
+            cands.append((self._rows_applied + 1) * self.dt_ms)
+        return min(cands) if cands else None

@@ -1,0 +1,78 @@
+"""Client-facing request record for the streaming session API.
+
+One `Request` is one unit of work a user hands to `ClientSession.submit`.
+It carries exactly what the paper's client-side stack is allowed to see
+at the black-box boundary: the payload, the coarse priors (p50/p90), the
+bucket/class tags the policy routes on, and the lifecycle fields the
+session fills in as the request moves through admit/defer/429/complete.
+
+Historically this type lived in `repro.serving.blackbox` with a
+hardcoded `p90 = p50 * 1.8` applied inside the client — wrong whenever
+the caller's information level isn't the coarse predictor (the neutral
+no-info prior is 700/300 ≈ 2.33, not 1.8), and silently divergent from
+the simulator's information-ladder semantics.  `p90` is now a real
+field; when the caller doesn't have a tail prior, `default_p90` derives
+one from the workload generator's *actual* per-bucket token
+distribution (log-uniform within the bucket, so p90/p50 =
+(hi/lo)^0.4 — see `repro.sim.workload.P90_OVER_P50`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.sim.workload import P90_OVER_P50_NP
+
+
+def default_p90(p50: float, bucket: int) -> float:
+    """Tail prior implied by the bucket's realized token distribution.
+
+    The workload generator draws tokens log-uniformly within each
+    bucket's [lo, hi] range, for which quantile ratios are exact:
+    p90/p50 = (hi/lo)^0.4.  Using the generator's own ratio keeps the
+    live client's information-ladder semantics aligned with the
+    simulator instead of the old hardcoded 1.8.
+    """
+    return float(p50) * float(P90_OVER_P50_NP[int(bucket)])
+
+
+@dataclasses.dataclass
+class Request:
+    """One client request.  Caller-provided fields first; the session
+    owns the lifecycle fields below the fold."""
+
+    rid: int                    # caller-scoped id (session reassigns its own)
+    prompt: Optional[np.ndarray]  # (S_p,) int32 payload; None for mock runs
+    max_new: float              # realized/requested output tokens (true cost)
+    p50: float                  # coarse prior available at submission
+    bucket: int                 # token bucket in [0, 4)
+    p90: Optional[float] = None  # tail prior; None = default_p90(p50, bucket)
+    cls: Optional[int] = None   # service class; None = paper 2-lane bucket
+                                # split (K-class policies expect the caller
+                                # to tag tenant/lane ids)
+    arrival_s: float = 0.0      # arrival time (session clock, seconds);
+                                # wall-clock sessions default it to submit time
+    jitter: float = 1.0         # provider-side noise multiplier (the mock
+                                # provider applies it; replays pass the
+                                # workload generator's jitter stream)
+
+    # --- lifecycle (session-owned) ------------------------------------
+    submit_s: float = 0.0       # time handed to the provider
+    finish_s: float = 0.0       # provider completion time
+    status: str = "pending"     # pending|inflight|completed|rejected|abandoned
+    n_defers: int = 0
+    n_throttles: int = 0        # 429-style bounces this request saw
+    output: Optional[np.ndarray] = None
+
+    def resolved_p90(self) -> float:
+        return self.p90 if self.p90 is not None else default_p90(
+            self.p50, self.bucket)
+
+    def resolved_cls(self) -> int:
+        """Service class with the paper's 2-lane default (interactive =
+        short bucket, heavy = everything else) — the single definition
+        the session's window staging and the providers' token-bucket
+        class routing both use (mirrors `sim.workload.bucket_to_class`)."""
+        return int(self.cls) if self.cls is not None else int(self.bucket != 0)

@@ -1,0 +1,617 @@
+"""`ClientSession` — the transport-agnostic streaming client API.
+
+The paper's stack is a *client-side* scheduler at a black-box API
+boundary, so the client surface is the product: requests arrive over
+time (`submit`), the session makes batched admit/defer/reject decisions
+(`poll`), and work flows through an `AsyncProvider` that may 429 it.
+Unlike the old `ScheduledClient.run(requests)` — a closed upfront list,
+dense O(N) state per poll, one blocking request in flight — the session
+is open-ended and windowed:
+
+  * **State is a compacted (W,) slot pool**, the live-client mirror of
+    the sim engine's `WindowCarry` (DESIGN.md §6): every live request
+    (admitted to the window, not yet terminal) holds one slot, occupied
+    slots form a request-id-sorted prefix, and each poll's cost is
+    O(W + B) regardless of how many requests the session has ever seen.
+    Submissions beyond the window queue FIFO and admit as slots free.
+  * **Decisions come from the same `schedule_batch`** the simulator
+    runs, on the same `(K, W)` view; retirement (completion/timeout
+    classification, the tail-latency EMA) is literally the engine's
+    `_complete_and_timeout` on the (W,) state.  The policy logic and
+    the decision-feeding float chains are written once, which is what
+    makes sim↔live parity a theorem rather than a hope: driven in
+    virtual time over `MockProvider`, the session reproduces the
+    windowed sim engine's decision sequence bit-for-bit
+    (tests/test_serving_client.py pins this on the `balanced` scenario).
+  * **The provider boundary is async**: submits are non-blocking, many
+    requests ride in flight at once, and the session's concurrency
+    accounting is the real INFLIGHT recount (== the provider's actual
+    outstanding count), not a bracket around a blocking call.  A 429
+    bounce parks the request until `now + retry_after` through the
+    session's `retry_policy` hook — the place Retry-After-aware backoff
+    strategies plug in (the `rate_crunch` regime is where they
+    separate).
+  * **Two clocks.**  `clock="virtual"` advances `dt_ms` per poll (or an
+    explicit `now_ms`) — deterministic replays, tests, benchmarks.
+    `clock="wall"` reads the monotonic clock scaled by `time_scale`,
+    and `drain()` sleeps until the next actionable instant (next queued
+    arrival, earliest defer/Retry-After expiry, the provider's next
+    event hint) instead of spinning at a fixed cadence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.client.provider import AsyncProvider
+from repro.client.request import Request
+from repro.core import overload as olc
+from repro.core.policy import ALLOC_ADRR, PolicyConfig, n_classes
+from repro.core.scheduler import IDLE, schedule_batch
+from repro.core.types import (
+    ABANDONED,
+    COMPLETED,
+    INFLIGHT,
+    PENDING,
+    REJECTED,
+    RequestBatch,
+    SimState,
+    empty_window_batch,
+    empty_window_request_state,
+    init_sim_state,
+)
+from repro.sim.engine import _complete_and_timeout
+from repro.sim.provider import ProviderPhysics, default_physics
+from repro.sim.workload import DEADLINE_BUDGET_MS
+
+_DEADLINE_NP = np.asarray(DEADLINE_BUDGET_MS)
+
+
+# ---------------------------------------------------------------------------
+# Configuration and result records
+# ---------------------------------------------------------------------------
+
+
+class SessionConfig(NamedTuple):
+    window: int = 256          # slot-pool capacity W (per-poll cost is O(W))
+    max_grants: int = 4        # batch dispatch width B per poll
+    dt_ms: float = 25.0        # virtual tick / decision-epoch granularity
+    backend: str = "jnp"       # ordering backend ("jnp" | "pallas")
+    time_scale: float = 1.0    # wall mode: session ms per wall ms
+    max_idle_sleep_ms: float = 250.0  # wall mode: cap on one idle sleep
+                                      # (session clock ms)
+
+
+class PollResult(NamedTuple):
+    """One decision epoch's outcome (all rids are session-scoped)."""
+
+    now_ms: float
+    actions: np.ndarray        # (B,) int32 decision per grant row
+    req_rids: np.ndarray       # (B,) session rid per grant row (-1 = idle)
+    severity: np.float32       # overload severity this epoch's ladder used
+    completed: list[int]
+    abandoned: list[int]
+    rejected: list[int]
+    admitted: list[int]
+    deferred: list[int]
+    throttled: list[int]       # 429-bounced this epoch
+    n_live: int                # occupied window slots after admission
+    progressed: bool           # anything moved (else the caller may sleep)
+
+
+@dataclasses.dataclass
+class SessionStats:
+    n_polls: int = 0
+    n_admitted: int = 0
+    n_completed: int = 0
+    n_rejected: int = 0
+    n_abandoned: int = 0
+    n_deferred: int = 0
+    n_throttled: int = 0
+    n_idle_sleeps: int = 0
+    peak_inflight: int = 0
+
+
+# --- Retry-After policies (the 429 backoff hook) ---------------------------
+
+RetryPolicy = Callable[[float, int], float]
+
+
+def honor_retry_after(retry_after_ms: float, n_throttles: int) -> float:
+    """Default: wait exactly what the provider asked."""
+    return retry_after_ms
+
+
+def expo_retry(mult: float = 1.0, growth: float = 2.0,
+               cap_ms: float = 60_000.0) -> RetryPolicy:
+    """Retry-After-seeded exponential backoff: the provider's hint is the
+    base, repeated bounces of the same request grow it geometrically."""
+    def policy(retry_after_ms: float, n_throttles: int) -> float:
+        return min(retry_after_ms * mult * growth ** max(n_throttles - 1, 0),
+                   cap_ms)
+    return policy
+
+
+# ---------------------------------------------------------------------------
+# Jitted steps (module-level so compilations are shared across sessions)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _ingest_and_retire(policy: PolicyConfig, phys: ProviderPhysics,
+                       batch: RequestBatch, state: SimState,
+                       comp_slot, comp_fin, now):
+    """Scatter provider completions into finish_ms, then run the
+    engine's retirement pass (completion vs timeout classification,
+    stale-abandonment, tail EMA, inflight recount) on the (W,) state.
+    Returns (state, alive) — alive marks slots still PENDING/INFLIGHT."""
+    finish = state.req.finish_ms.at[comp_slot].set(comp_fin, mode="drop")
+    state = state._replace(
+        now_ms=now, req=state.req._replace(finish_ms=finish))
+    state = _complete_and_timeout(policy, phys, batch, state)
+    alive = (state.req.status == PENDING) | (state.req.status == INFLIGHT)
+    return state, alive
+
+
+@jax.jit
+def _compact_and_admit(batch: RequestBatch, req, alive, staged: RequestBatch,
+                       n_stage):
+    """Stable-compact live slots to the prefix (preserving request-id
+    order — the ordering layer's tie-break invariant) and append up to
+    `n_stage` newly admitted requests behind them.  Staged request
+    state is fresh (PENDING, finish=inf); vacated slots are neutralized
+    exactly like the engine's empty-slot view (invalid, terminal,
+    never landing)."""
+    w = alive.shape[0]
+    iota = jnp.arange(w, dtype=jnp.int32)
+    idx, = jnp.nonzero(alive, size=w, fill_value=0)
+    n_live = alive.sum().astype(jnp.int32)
+    live_here = iota < n_live
+    stage_here = (iota >= n_live) & (iota < n_live + n_stage)
+    spos = jnp.clip(iota - n_live, 0, w - 1)
+
+    def mix(old, st, fill=None):
+        v = jnp.where(stage_here, st[spos], old[idx])
+        if fill is not None:
+            v = jnp.where(live_here | stage_here, v, fill)
+        return v
+
+    new_batch = RequestBatch(
+        arrival_ms=mix(batch.arrival_ms, staged.arrival_ms),
+        bucket=mix(batch.bucket, staged.bucket),
+        cls=mix(batch.cls, staged.cls),
+        true_tokens=mix(batch.true_tokens, staged.true_tokens),
+        p50=mix(batch.p50, staged.p50),
+        p90=mix(batch.p90, staged.p90),
+        deadline_budget_ms=mix(batch.deadline_budget_ms,
+                               staged.deadline_budget_ms),
+        valid=mix(batch.valid, staged.valid, fill=False),
+    )
+    fresh_i = jnp.zeros((w,), jnp.int32)
+    fresh_f = jnp.zeros((w,), jnp.float32)
+    inf_f = jnp.full((w,), jnp.inf, jnp.float32)
+    new_req = req._replace(
+        status=mix(req.status, fresh_i, fill=jnp.int32(REJECTED)),
+        submit_ms=mix(req.submit_ms, inf_f),
+        finish_ms=mix(req.finish_ms, inf_f, fill=jnp.inf),
+        defer_until=mix(req.defer_until, fresh_f),
+        n_defers=mix(req.n_defers, fresh_i),
+        n_throttles=mix(req.n_throttles, fresh_i),
+    )
+    return new_batch, new_req, n_live + n_stage
+
+
+_dispatch = jax.jit(schedule_batch, static_argnames=("max_grants", "backend"))
+
+
+@jax.jit
+def _apply_decisions(policy: PolicyConfig, batch: RequestBatch,
+                     state: SimState, d, accepted, delay_ms):
+    """Post-dispatch state transition on the (W,) pool — the live-path
+    sibling of the engine's `_apply_batch`, with two deliberate
+    differences: admits get finish_ms = inf (the transport decides when
+    work lands; completion arrives via the provider poll), and the
+    throttle verdict comes from the provider's actual submit responses
+    (`accepted`) with the session's retry policy supplying `delay_ms`,
+    instead of an engine-owned token bucket.  Deficit conservation on a
+    bounce matches the engine: the allocation charge is refunded
+    (ADRR-gated) because the 429 blocked the release."""
+    w = batch.n
+    req = state.req
+    admit = (d.actions == olc.ADMIT) & accepted
+    throttled = (d.actions == olc.ADMIT) & ~accepted
+    defer = d.actions == olc.DEFER
+    reject = d.actions == olc.REJECT
+    idx = d.req_idx
+    drop = jnp.int32(w)
+    adm_i = jnp.where(admit, idx, drop)
+    def_i = jnp.where(defer, idx, drop)
+    rej_i = jnp.where(reject, idx, drop)
+    thr_i = jnp.where(throttled, idx, drop)
+
+    backoff = olc.defer_backoff(policy, d.severity, req.n_defers[idx])
+
+    status = req.status.at[adm_i].set(INFLIGHT, mode="drop")
+    status = status.at[rej_i].set(REJECTED, mode="drop")
+    submit = req.submit_ms.at[adm_i].set(state.now_ms, mode="drop")
+    defer_until = req.defer_until.at[def_i].set(
+        state.now_ms + backoff, mode="drop")
+    defer_until = defer_until.at[thr_i].set(
+        state.now_ms + delay_ms, mode="drop")
+    n_defers = req.n_defers.at[def_i].add(1, mode="drop")
+    n_throttles = req.n_throttles.at[thr_i].add(1, mode="drop")
+
+    deficit = d.deficit
+    k = deficit.shape[0]
+    gcls = jnp.clip(batch.cls[idx], 0, k - 1)
+    refund = (
+        jax.nn.one_hot(gcls, k)
+        * batch.p50[idx][:, None]
+        * throttled[:, None]
+    ).sum(axis=0) * (policy.alloc_mode == ALLOC_ADRR)
+    # gate on an actual bounce so the no-throttle path returns d.deficit
+    # bit-unchanged (x + 0.0 is not an f32 identity at -0.0)
+    deficit = jnp.where(
+        throttled.any() & jnp.isfinite(deficit + refund).all(),
+        deficit + refund, deficit)
+
+    inflight = state.provider.inflight + admit.sum().astype(jnp.int32)
+    inflight_tokens = state.provider.inflight_tokens + jnp.where(
+        admit, batch.p50[idx], 0.0).sum()
+    return state._replace(
+        req=req._replace(
+            status=status,
+            submit_ms=submit,
+            defer_until=defer_until,
+            n_defers=n_defers,
+            n_throttles=n_throttles,
+        ),
+        sched=state.sched._replace(deficit=deficit, rr_turn=d.rr_turn),
+        provider=state.provider._replace(
+            inflight=inflight,
+            inflight_tokens=inflight_tokens,
+            n_throttled=state.provider.n_throttled
+            + throttled.sum().astype(jnp.int32),
+        ),
+    )
+
+
+@jax.jit
+def _next_defer_ms(state: SimState):
+    """Earliest defer/Retry-After expiry among pending slots (inf if
+    none) — one of the idle-sleep wakeup candidates."""
+    pend = state.req.status == PENDING
+    parked = pend & (state.req.defer_until > state.now_ms)
+    return jnp.where(parked, state.req.defer_until, jnp.inf).min()
+
+
+# ---------------------------------------------------------------------------
+# The session
+# ---------------------------------------------------------------------------
+
+
+_TERMINAL = {"completed", "rejected", "abandoned"}
+
+
+class ClientSession:
+    """Streaming three-layer client over an `AsyncProvider`.
+
+    Lifecycle: `submit()` any number of requests over time (admission
+    into the window is FIFO by submission order; keep arrivals
+    nondecreasing when replaying a trace), `poll()` one decision epoch,
+    `drain()` until everything submitted is terminal.  See the module
+    docstring for the architecture.
+
+    `phys` is the *client's* latency model — the unloaded-latency
+    expectation the tail EMA normalizes observed completions against
+    (client-observable signals only, per the paper; the benchmarks
+    calibrate it against the real engine).
+    """
+
+    def __init__(
+        self,
+        provider: AsyncProvider,
+        policy: PolicyConfig,
+        cfg: SessionConfig = SessionConfig(),
+        *,
+        clock: str = "wall",
+        phys: ProviderPhysics | None = None,
+        retry_policy: RetryPolicy | None = None,
+    ):
+        if clock not in ("wall", "virtual"):
+            raise ValueError(f"clock must be 'wall' or 'virtual', got {clock!r}")
+        self.provider = provider
+        self.policy = policy
+        self.cfg = cfg
+        self.clock = clock
+        self.phys = phys if phys is not None else default_physics()
+        self.retry_policy = retry_policy or honor_retry_after
+        self.stats = SessionStats()
+
+        w = cfg.window
+        self._k = n_classes(policy)
+        self._win_batch = empty_window_batch(w)
+        self._state = init_sim_state(w, self._k)._replace(
+            req=empty_window_request_state(w))
+        # host mirrors (kept in lockstep with the device pool)
+        self._reqs: list[Request] = []
+        self._arrival_ms: list[float] = []
+        self._queue: deque[int] = deque()
+        self._slot_rid = np.full(w, -1, np.int64)
+        self._slot_live = np.zeros(w, bool)
+        self._n_live = 0
+        self._tickets: dict[int, int] = {}
+        self._unfinished = 0
+        self._t = 0
+        self._t0: Optional[float] = None
+        self._warmup()
+
+    def _warmup(self) -> None:
+        """Compile the session's jitted steps against the (W, B, K)
+        shapes before the clock starts: XLA compilation takes seconds,
+        and a wall-clock session that compiles inside its first poll
+        would burn that as session time — at time_scale >> 1 enough to
+        blow every deadline before the first decision lands."""
+        w = self.cfg.window
+        comp_slot = np.full(w, w, np.int32)
+        comp_fin = np.full(w, np.inf, np.float32)
+        state, alive = _ingest_and_retire(
+            self.policy, self.phys, self._win_batch, self._state,
+            comp_slot, comp_fin, jnp.float32(0.0))
+        _, staged = self._stage_admissions(-1.0, 0)
+        batch, req, _ = _compact_and_admit(
+            self._win_batch, state.req, alive, staged, jnp.int32(0))
+        d = _dispatch(self.policy, batch, state._replace(req=req),
+                      max_grants=self.cfg.max_grants,
+                      backend=self.cfg.backend)
+        bm = int(d.actions.shape[0])
+        out = _apply_decisions(
+            self.policy, batch, state._replace(req=req), d,
+            np.ones(bm, bool), np.zeros(bm, np.float32))
+        _next_defer_ms(out)
+        jax.block_until_ready(out.req.status)
+
+    # --- clock --------------------------------------------------------
+    def _wall_now_ms(self) -> float:
+        if self._t0 is None:
+            self._t0 = time.monotonic()
+        return (time.monotonic() - self._t0) * 1e3 * self.cfg.time_scale
+
+    def now_ms(self) -> float:
+        if self.clock == "virtual":
+            return float(np.float32(self._t) * np.float32(self.cfg.dt_ms))
+        return self._wall_now_ms()
+
+    # --- lifecycle ----------------------------------------------------
+    def submit(self, req: Request) -> int:
+        """Register a request; returns its session rid.  `arrival_s` is
+        honored as given (0.0 = arrived at session start); wall-clock
+        callers typically leave it 0 or stamp it with `now_ms()/1e3`."""
+        rid = len(self._reqs)
+        self._reqs.append(req)
+        self._arrival_ms.append(float(np.float32(req.arrival_s * 1000.0)))
+        self._queue.append(rid)
+        self._unfinished += 1
+        return rid
+
+    @property
+    def unfinished(self) -> int:
+        return self._unfinished
+
+    def requests(self) -> list[Request]:
+        return list(self._reqs)
+
+    def _stage_admissions(self, now_ms: float, free: int):
+        """Pop arrived requests off the FIFO queue into a (W,)-padded
+        staging batch (the window-admission rule the engine's
+        `_compact_and_admit` applies to its arrival stream)."""
+        w = self.cfg.window
+        rids = []
+        while self._queue and len(rids) < free \
+                and self._arrival_ms[self._queue[0]] <= now_ms:
+            rids.append(self._queue.popleft())
+        arr = np.zeros(w, np.float32)
+        bucket = np.zeros(w, np.int32)
+        cls = np.zeros(w, np.int32)
+        tok = np.ones(w, np.float32)
+        p50 = np.ones(w, np.float32)
+        p90 = np.ones(w, np.float32)
+        ddl = np.full(w, 1e9, np.float32)
+        valid = np.zeros(w, bool)
+        for i, rid in enumerate(rids):
+            r = self._reqs[rid]
+            arr[i] = self._arrival_ms[rid]
+            bucket[i] = int(r.bucket)
+            cls[i] = r.resolved_cls()
+            tok[i] = float(r.max_new)
+            p50[i] = float(r.p50)
+            p90[i] = float(r.resolved_p90())
+            ddl[i] = _DEADLINE_NP[int(r.bucket)]
+            valid[i] = True
+        staged = RequestBatch(
+            arrival_ms=arr, bucket=bucket, cls=cls, true_tokens=tok,
+            p50=p50, p90=p90, deadline_budget_ms=ddl, valid=valid)
+        return rids, staged
+
+    def poll(self, now_ms: Optional[float] = None) -> PollResult:
+        """One decision epoch: ingest completions, retire, compact +
+        admit, dispatch `schedule_batch` over the (K, W) view, submit
+        grants to the provider, apply.  O(W + B) regardless of session
+        history length."""
+        self._t += 1
+        if now_ms is None:
+            now_ms = self.now_ms() if self.clock == "wall" else float(
+                np.float32(np.float32(self._t) * np.float32(self.cfg.dt_ms)))
+        w, b = self.cfg.window, self.cfg.max_grants
+        self.stats.n_polls += 1
+
+        # 1. provider completions -> slot scatter
+        comps = self.provider.poll(now_ms)
+        comp_slot = np.full(w, w, np.int32)
+        comp_fin = np.full(w, np.inf, np.float32)
+        comp_by_rid: dict[int, object] = {}
+        if comps:
+            for c in comps:
+                comp_by_rid[self._tickets.pop(c.ticket)] = c
+            rids = np.fromiter(sorted(comp_by_rid), np.int64)
+            slots = np.searchsorted(self._slot_rid[:self._n_live], rids)
+            comp_slot[:len(rids)] = slots
+            comp_fin[:len(rids)] = [
+                np.float32(comp_by_rid[r].finish_ms) for r in rids]
+
+        # 2. retire (engine's completion/timeout/EMA pass)
+        state, alive_dev = _ingest_and_retire(
+            self.policy, self.phys, self._win_batch, self._state,
+            comp_slot, comp_fin, jnp.float32(now_ms))
+        status_np = np.asarray(state.req.status)
+        alive = np.asarray(alive_dev)
+
+        completed, abandoned = [], []
+        newly_term = self._slot_live & ~alive
+        for slot in np.nonzero(newly_term)[0]:
+            rid = int(self._slot_rid[slot])
+            r = self._reqs[rid]
+            if status_np[slot] == COMPLETED:
+                c = comp_by_rid.get(rid)
+                r.status = "completed"
+                r.finish_s = float(np.asarray(state.req.finish_ms[slot])) / 1e3 \
+                    if c is None else float(c.finish_ms) / 1e3
+                if c is not None:
+                    r.output = c.output
+                completed.append(rid)
+                self.stats.n_completed += 1
+            else:
+                assert status_np[slot] == ABANDONED
+                # stale pending, or landed past the timeout multiple
+                r.status = "abandoned"
+                abandoned.append(rid)
+                self.stats.n_abandoned += 1
+            self._unfinished -= 1
+
+        # 3. stage arrivals + 4. compact/admit
+        n_alive = int(alive.sum())
+        staged_rids, staged = self._stage_admissions(now_ms, w - n_alive)
+        self._win_batch, new_req, _ = _compact_and_admit(
+            self._win_batch, state.req, alive_dev, staged,
+            jnp.int32(len(staged_rids)))
+        state = state._replace(req=new_req)
+        self._slot_rid = np.concatenate([
+            self._slot_rid[alive],
+            np.asarray(staged_rids, np.int64),
+            np.full(w - n_alive - len(staged_rids), -1, np.int64)])
+        self._n_live = n_alive + len(staged_rids)
+        for rid in staged_rids:
+            self._reqs[rid].status = "pending"
+
+        # 5. dispatch — one batched decision over the (K, W) view
+        d = _dispatch(self.policy, self._win_batch, state,
+                      max_grants=b, backend=self.cfg.backend)
+        actions = np.asarray(d.actions)
+        idxs = np.asarray(d.req_idx)
+        infl_at = np.asarray(d.inflight_at)
+        severity = np.float32(np.asarray(d.severity))
+
+        # 6. submit grants (decision order); collect 429 verdicts
+        bm = actions.shape[0]
+        accepted = np.ones(bm, bool)
+        delay_ms = np.zeros(bm, np.float32)
+        req_rids = np.full(bm, -1, np.int64)
+        admitted, deferred, rejected, throttled = [], [], [], []
+        for g in range(bm):
+            a = actions[g]
+            if a == IDLE:
+                continue
+            rid = int(self._slot_rid[idxs[g]])
+            req_rids[g] = rid
+            r = self._reqs[rid]
+            if a == olc.ADMIT:
+                res = self.provider.submit(
+                    r, now_ms, inflight_hint=int(infl_at[g]))
+                if res.accepted:
+                    self._tickets[res.ticket] = rid
+                    r.status = "inflight"
+                    r.submit_s = now_ms / 1e3
+                    admitted.append(rid)
+                    self.stats.n_admitted += 1
+                else:
+                    accepted[g] = False
+                    r.n_throttles += 1
+                    delay_ms[g] = np.float32(self.retry_policy(
+                        res.retry_after_ms, r.n_throttles))
+                    throttled.append(rid)
+                    self.stats.n_throttled += 1
+            elif a == olc.DEFER:
+                r.n_defers += 1
+                deferred.append(rid)
+                self.stats.n_deferred += 1
+            else:  # REJECT
+                r.status = "rejected"
+                rejected.append(rid)
+                self.stats.n_rejected += 1
+                self._unfinished -= 1
+
+        # 7. apply the transition on the (W,) pool
+        self._state = _apply_decisions(
+            self.policy, self._win_batch, state, d, accepted, delay_ms)
+        self._slot_live = np.asarray(
+            (self._state.req.status == PENDING)
+            | (self._state.req.status == INFLIGHT))
+        self.stats.peak_inflight = max(
+            self.stats.peak_inflight, self.provider.inflight())
+
+        progressed = bool(
+            completed or abandoned or rejected or admitted or deferred
+            or throttled or staged_rids)
+        return PollResult(
+            now_ms=now_ms, actions=actions, req_rids=req_rids,
+            severity=severity, completed=completed, abandoned=abandoned,
+            rejected=rejected, admitted=admitted, deferred=deferred,
+            throttled=throttled, n_live=self._n_live, progressed=progressed)
+
+    # --- drain --------------------------------------------------------
+    def _idle_sleep(self, now_ms: float) -> None:
+        """Sleep until the next actionable instant instead of spinning:
+        the next queued arrival, the earliest defer/Retry-After expiry,
+        or the provider's next-event hint — capped so an unhintable
+        transport still gets re-polled."""
+        cands = []
+        if self._queue:
+            cands.append(self._arrival_ms[self._queue[0]])
+        nd = float(np.asarray(_next_defer_ms(self._state)))
+        if np.isfinite(nd):
+            cands.append(nd)
+        pe = self.provider.next_event_ms(now_ms)
+        if pe is not None:
+            cands.append(pe)
+        # a candidate already due (e.g. a queued arrival stuck behind a
+        # full window) is not a wakeup signal — keeping it would clamp
+        # the sleep to zero and busy-spin until the blocker clears
+        cands = [c for c in cands if c > now_ms]
+        target = min(cands) if cands else now_ms + self.cfg.max_idle_sleep_ms
+        target = min(target, now_ms + self.cfg.max_idle_sleep_ms)
+        sleep_s = (target - now_ms) / 1e3 / self.cfg.time_scale
+        if sleep_s > 0:
+            self.stats.n_idle_sleeps += 1
+            time.sleep(sleep_s)
+
+    def drain(self, max_polls: Optional[int] = None) -> list[Request]:
+        """Poll until every submitted request is terminal.  Wall-clock
+        sessions sleep through idle epochs; virtual sessions advance one
+        tick per poll.  Returns the session's requests."""
+        n = 0
+        while self._unfinished:
+            r = self.poll()
+            n += 1
+            if self._unfinished and max_polls is not None and n >= max_polls:
+                raise RuntimeError(
+                    f"drain: {self._unfinished} request(s) still live "
+                    f"after {n} polls")
+            if self.clock == "wall" and not r.progressed:
+                self._idle_sleep(r.now_ms)
+        return list(self._reqs)

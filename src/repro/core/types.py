@@ -169,6 +169,39 @@ def init_provider_state(n_classes: int = N_CLASSES) -> ProviderState:
     )
 
 
+def empty_window_batch(w: int) -> RequestBatch:
+    """A (W,)-shaped all-empty batch view — the starting slot pool of a
+    streaming `ClientSession` (repro.client.session).  Empty slots carry
+    the same neutralization the engine's `_window_view` applies to
+    unoccupied slots: valid=False (never eligible); field values are
+    don't-cares masked out of every decision path."""
+    return RequestBatch(
+        arrival_ms=jnp.zeros((w,), jnp.float32),
+        bucket=jnp.zeros((w,), jnp.int32),
+        cls=jnp.zeros((w,), jnp.int32),
+        true_tokens=jnp.ones((w,), jnp.float32),
+        p50=jnp.ones((w,), jnp.float32),
+        p90=jnp.ones((w,), jnp.float32),
+        deadline_budget_ms=jnp.full((w,), 1e9, jnp.float32),
+        valid=jnp.zeros((w,), bool),
+    )
+
+
+def empty_window_request_state(w: int) -> RequestState:
+    """Matching (W,)-shaped request state for `empty_window_batch`:
+    empty slots are terminal (REJECTED, like the engine view's sentinel)
+    and never land (finish=inf), so they are invisible to retirement,
+    eligibility, and the inflight recount."""
+    return RequestState(
+        status=jnp.full((w,), REJECTED, jnp.int32),
+        submit_ms=jnp.full((w,), jnp.inf, jnp.float32),
+        finish_ms=jnp.full((w,), jnp.inf, jnp.float32),
+        defer_until=jnp.zeros((w,), jnp.float32),
+        n_defers=jnp.zeros((w,), jnp.int32),
+        n_throttles=jnp.zeros((w,), jnp.int32),
+    )
+
+
 def init_window_carry(w: int, n: int) -> WindowCarry:
     return WindowCarry(
         slot_req=jnp.full((w,), n, jnp.int32),

@@ -1,2 +1,11 @@
 from repro.serving.engine import generate, prefill_step, serve_step  # noqa: F401
-from repro.serving.blackbox import BlackBoxProvider, Request, ScheduledClient  # noqa: F401
+from repro.serving.blackbox import BlackBoxProvider, ScheduledClient  # noqa: F401
+# the client surface proper lives in repro.client; Request is re-exported
+# here for compatibility with the pre-§7 import path
+from repro.client import (  # noqa: F401
+    AsyncBlackBoxProvider,
+    ClientSession,
+    MockProvider,
+    Request,
+    SessionConfig,
+)

@@ -2,55 +2,36 @@
 
 `BlackBoxProvider` wraps the real JAX serving engine behind exactly the
 API surface the paper assumes the client sees: submit(request) ->
-completion with latency; no internals exposed.  `ScheduledClient` runs
-the paper's three-layer stack (repro.core) in front of it — the same
-batched `schedule_batch` decision function the simulator uses, driven by
-wall clock instead of ticks: each poll runs ONE vectorized pass and
-drains up to `max_grants` sends, instead of re-tracing the full policy
-per request.  This is the end-to-end deployment path
-(examples/serve_blackbox.py) proving the scheduler is not simulator-bound.
+completion with latency; no internals exposed.
+
+The scheduling client itself moved to `repro.client` (DESIGN.md §7):
+`ClientSession` is the transport-agnostic streaming API — open-ended
+submit/poll/drain over an `AsyncProvider`, windowed O(W) state, several
+requests in flight, 429/Retry-After handling — and
+`repro.client.blackbox.AsyncBlackBoxProvider` adapts this provider
+behind that protocol.
+
+`ScheduledClient` remains as a thin compatibility shim over
+`ClientSession` for the old closed-list `run(requests)` call shape.  It
+is DEPRECATED: new code should drive a `ClientSession` directly
+(examples/serve_blackbox.py shows the ported flow).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import time
-from typing import Optional
+import warnings
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig, ServeConfig
-from repro.core import overload as olc
-from repro.core.policy import PolicyConfig, n_classes
-from repro.core.scheduler import IDLE, schedule_batch
-from repro.core.types import (
-    COMPLETED,
-    INFLIGHT,
-    REJECTED,
-    RequestBatch,
-    init_sim_state,
+from repro.client import (
+    AsyncBlackBoxProvider,
+    ClientSession,
+    Request,
+    SessionConfig,
 )
+from repro.config import ModelConfig, ServeConfig
+from repro.core.policy import PolicyConfig
 from repro.serving.engine import generate
-from repro.sim.workload import DEADLINE_BUDGET_MS, bucket_to_class
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray          # (S_p,) int32
-    max_new: int                # realized output tokens (the "true" cost)
-    p50: float                  # coarse prior available at submission
-    bucket: int
-    cls: Optional[int] = None   # service class; None = paper 2-lane
-                                # bucket split (K-class policies expect
-                                # the caller to tag tenant/lane ids)
-    arrival_s: float = 0.0
-    submit_s: float = 0.0
-    finish_s: float = 0.0
-    status: str = "pending"
-    output: Optional[np.ndarray] = None
 
 
 class BlackBoxProvider:
@@ -66,98 +47,51 @@ class BlackBoxProvider:
 
 
 class ScheduledClient:
-    """Three-layer client (allocation/ordering/overload) in front of a
-    BlackBoxProvider, reusing the exact same `schedule_batch` the
-    simulator exercises — the policy logic is written once (DESIGN.md
-    §2).  Each wall-clock poll makes one batched decision and drains up
-    to `max_grants` releases."""
+    """DEPRECATED closed-list shim over `ClientSession`.
 
-    def __init__(self, provider: BlackBoxProvider, policy: PolicyConfig,
-                 max_grants: int = 4):
+    Runs the same three-layer stack (one batched `schedule_batch`
+    decision per poll, up to `max_grants` releases) but through the new
+    streaming session: the provider is adapted to the async boundary,
+    so multiple requests ride in flight and idle waits sleep to the
+    next actionable instant instead of spinning.  Use `ClientSession`
+    directly for open-ended submission, Retry-After policies, and
+    windowed state sizing.
+    """
+
+    def __init__(self, provider, policy: PolicyConfig,
+                 max_grants: int = 4, max_workers: int = 4):
+        warnings.warn(
+            "ScheduledClient is deprecated: drive repro.client."
+            "ClientSession over an AsyncProvider instead "
+            "(see examples/serve_blackbox.py and DESIGN.md §7)",
+            DeprecationWarning, stacklevel=2)
         self.provider = provider
         self.policy = policy
-        self.requests: list[Request] = []
-        # max_grants is baked into the jitted partial (it must be static);
-        # build a new client to change the drain width
-        self._batch = jax.jit(
-            functools.partial(schedule_batch, max_grants=max_grants))
+        self.max_grants = max_grants
+        self.max_workers = max_workers
 
-    def run(self, requests: list[Request], time_scale: float = 1.0) -> list[Request]:
-        """Executes the full request list; arrival times honored in scaled
-        wall clock. Synchronous single-threaded submission (the engine is
-        compute-bound on CPU); the scheduler still controls ORDER and
-        admit/defer/reject, which is what the paper's layers own."""
-        n = len(requests)
-        buckets = jnp.asarray([r.bucket for r in requests], jnp.int32)
-        default_cls = np.asarray(bucket_to_class(buckets))  # one device pull
-        cls = jnp.asarray(
-            [r.cls if r.cls is not None else default_cls[i]
-             for i, r in enumerate(requests)], jnp.int32)
-        batch = RequestBatch(
-            arrival_ms=jnp.asarray([r.arrival_s * 1e3 for r in requests], jnp.float32),
-            bucket=buckets,
-            cls=cls,
-            true_tokens=jnp.asarray([r.max_new for r in requests], jnp.float32),
-            p50=jnp.asarray([r.p50 for r in requests], jnp.float32),
-            p90=jnp.asarray([r.p50 * 1.8 for r in requests], jnp.float32),
-            deadline_budget_ms=DEADLINE_BUDGET_MS[buckets],
-            valid=jnp.ones((n,), bool),
+    def run(self, requests: list[Request],
+            time_scale: float = 1.0) -> list[Request]:
+        """Executes the full request list; arrival times honored in
+        scaled wall clock.  The window is sized to the list so the shim
+        never queues behind its own slot pool (the closed-list
+        contract); requests are mutated in place like the old client."""
+        async_provider = AsyncBlackBoxProvider(
+            self.provider, max_workers=self.max_workers)
+        session = ClientSession(
+            async_provider,
+            self.policy,
+            SessionConfig(
+                window=max(32, len(requests)),
+                max_grants=self.max_grants,
+                time_scale=time_scale,
+            ),
+            clock="wall",
         )
-        state = init_sim_state(n, n_classes(self.policy))
-        t0 = time.monotonic()
-
-        done = 0
-        while done < n:
-            now_ms = (time.monotonic() - t0) * 1e3 * time_scale
-            state = state._replace(now_ms=jnp.float32(now_ms))
-            d = self._batch(self.policy, batch, state)
-            state = state._replace(sched=state.sched._replace(
-                deficit=d.deficit, rr_turn=d.rr_turn))
-            actions = np.asarray(d.actions)
-            req_idx = np.asarray(d.req_idx)
-            if (actions == IDLE).all():
-                # nothing eligible yet: advance to next arrival
-                pend = [r for r in requests if r.status == "pending"]
-                if not pend:
-                    break
-                time.sleep(0.005)
-                continue
-            # drain every grant of the batch in decision order
-            for a, i in zip(actions.tolist(), req_idx.tolist()):
-                if a == IDLE:
-                    continue
-                req = requests[i]
-                if a == olc.REJECT:
-                    req.status = "rejected"
-                    state = _set_status(state, i, REJECTED)
-                    done += 1
-                elif a == olc.DEFER:
-                    back = olc.defer_backoff(
-                        self.policy, d.severity, state.req.n_defers[i])
-                    # backoff starts at apply time, not decision time:
-                    # synchronous admits earlier in this batch consumed
-                    # real wall clock, and the pacing window must not
-                    # silently expire under them
-                    cur_ms = (time.monotonic() - t0) * 1e3 * time_scale
-                    state = state._replace(req=state.req._replace(
-                        defer_until=state.req.defer_until.at[i].set(
-                            cur_ms + float(back)),
-                        n_defers=state.req.n_defers.at[i].add(1)))
-                else:  # admit -> call the black box (synchronous)
-                    req.submit_s = time.monotonic() - t0
-                    state = _set_status(state, i, INFLIGHT)
-                    state = state._replace(provider=state.provider._replace(
-                        inflight=state.provider.inflight + 1))
-                    req.output = self.provider.submit(req.prompt, req.max_new)
-                    req.finish_s = time.monotonic() - t0
-                    req.status = "completed"
-                    state = _set_status(state, i, COMPLETED)
-                    state = state._replace(provider=state.provider._replace(
-                        inflight=state.provider.inflight - 1))
-                    done += 1
+        for r in requests:
+            session.submit(r)
+        try:
+            session.drain()
+        finally:
+            async_provider.shutdown()
         return requests
-
-
-def _set_status(state, i, code):
-    return state._replace(req=state.req._replace(
-        status=state.req.status.at[i].set(code)))

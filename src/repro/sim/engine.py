@@ -242,7 +242,12 @@ def _apply_batch(
         admit = admit & allowed
 
     # per-grant service physics at the inflight level the grant saw —
-    # identical floats to the sequential one-admit-at-a-time path
+    # identical floats to the sequential one-admit-at-a-time path.
+    # NOTE: XLA:CPU contracts the trailing `service * jitter + now` into
+    # an FMA here (a barrier does not stop LLVM-level contraction inside
+    # one fusion); the live client's MockProvider reproduces that
+    # rounding explicitly (repro.client.provider._fma32) to keep
+    # session-vs-engine finish floats bit-identical.
     service = service_time_ms(
         phys, batch.true_tokens[idx], d.inflight_at, jitter[idx], comfort_scale
     )

@@ -38,6 +38,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import (
     CLS_HEAVY,
@@ -60,6 +61,14 @@ BUCKET_TOKENS = jnp.asarray(
 # the bucket's p90 token count under the default provider physics
 # (90ms + 6.5ms/token; multiples shrink with bucket size like real SLOs)
 DEADLINE_BUDGET_MS = jnp.asarray([3600.0, 11000.0, 35000.0, 100000.0], jnp.float32)
+
+# Exact per-bucket p90/p50 quantile ratio of the realized token
+# distribution: tokens are log-uniform within [lo, hi], whose quantile
+# function is lo * (hi/lo)^q, so p90/p50 = (hi/lo)^0.4.  This is the
+# generator-truth tail ratio the live client's `default_p90` uses in
+# place of the old hardcoded 1.8 (repro.client.request).
+P90_OVER_P50 = (BUCKET_TOKENS[:, 1] / BUCKET_TOKENS[:, 0]) ** 0.4
+P90_OVER_P50_NP = np.asarray(P90_OVER_P50)
 
 MIXES = {
     "balanced": jnp.asarray([0.50, 0.25, 0.15, 0.10], jnp.float32),
