@@ -36,11 +36,13 @@ bench-smoke:
 bench-sched:
 	$(PY) benchmarks/multi_class.py --sched-only
 
-# the N=1e6 scale run (active-window cells the dense path can't touch);
-# excluded from bench-smoke/CI like the `slow` pytest marker — run
-# locally when the windowed engine changes
+# the N=1e6 scale runs (active-window cells the dense path can't touch,
+# plus the full scenario grid at a million requests -> `scale_1e6` in
+# BENCH_scenarios.json); excluded from bench-smoke/CI like the `slow`
+# pytest marker — run locally when the windowed engine changes
 bench-scale:
 	$(PY) benchmarks/multi_class.py --sched-only --scale
+	$(PY) benchmarks/scenario_sweep.py --scale
 
 # full nonstationary scenario grid -> BENCH_scenarios.json
 bench-scenarios:
@@ -48,7 +50,9 @@ bench-scenarios:
 
 # streaming client-session throughput (requests/s over MockProvider at
 # N in {1e3,1e5}) -> client_session rows in BENCH_scheduler.json; the
-# N-independence of the per-request rate is the windowed-client bar
+# N-independence of the per-request rate is the windowed-client bar.
+# check-bench gates these rows in CI (30% tolerance) plus the >=10x
+# fused-tick speedup vs the frozen client_session_pr5 snapshot
 bench-client:
 	$(PY) benchmarks/client_bench.py
 
@@ -57,8 +61,10 @@ bench-client:
 serve-smoke:
 	$(PY) benchmarks/client_bench.py --smoke
 
-# bench-regression gate: fresh B=16 dispatch rate vs the committed
-# BENCH_scheduler.json baseline (>30% drop fails; BENCH_TOLERANCE widens)
+# bench-regression gate: fresh B=16 dispatch, windowed dispatch, and
+# client-session rates vs the committed BENCH_scheduler.json baseline
+# (>30% drop fails; BENCH_TOLERANCE widens), plus the structural bars
+# (B16/B1, win/dense, client N-independence, fused-tick >=10x)
 check-bench:
 	$(PY) benchmarks/check_regression.py
 

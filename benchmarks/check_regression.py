@@ -31,6 +31,11 @@ below the committed `BENCH_scheduler.json` baseline.  Checks:
     N-independence bar: the N=1e5 per-request rate must stay within 2x
     of N=1e3 (per-poll cost is O(W); a refactor that sneaks O(total N)
     work into the poll loop fails here on any machine).
+  * **fused-tick speedup** (DESIGN.md §8): fresh per-poll latency vs
+    the frozen pre-fusion rows (`client_session_pr5` — the four-
+    dispatch, per-poll-status-pull design) must hold the >=10x bar the
+    fused device tick was accepted on.  The pr5 rows are a historical
+    snapshot and are never regenerated.
 
 Wired into `make ci` as `make check-bench`.  The baseline is read from
 git (`HEAD:BENCH_scheduler.json`) so a local `make bench-sched` that
@@ -64,6 +69,9 @@ GATE_N = 100_000          # windowed cells at this depth are gated
 # within 2x of the N=1e3 rate (per-poll cost is O(W), not O(N) — the
 # acceptance bar of the streaming client API, DESIGN.md §7)
 MIN_CLIENT_N_RATIO = 0.5
+# fused-tick acceptance bar: per-poll latency vs the frozen pre-fusion
+# client_session_pr5 snapshot (DESIGN.md §8)
+MIN_FUSED_SPEEDUP = 10.0
 
 
 def load_baseline() -> dict:
@@ -162,12 +170,32 @@ def main(argv: list[str]) -> int:
         print("FAIL: committed BENCH_scheduler.json has no client_session "
               "rows to gate against")
         return 1
+    pr5_by_n = {
+        r["n_requests"]: r["poll_us"]
+        for r in baseline.get("client_session_pr5", [])
+    }
+    if not pr5_by_n:
+        print("FAIL: committed BENCH_scheduler.json has no "
+              "client_session_pr5 rows — the fused-tick speedup gate "
+              "needs the frozen pre-fusion snapshot")
+        return 1
     fresh_by_n = {}
     for r in sorted(crows, key=lambda r: r["n_requests"]):
         n_req, w, b = r["n_requests"], r["window"], r["max_grants"]
         fresh = client_session_bench(n_req, window=w, grants=b)
         rate, base_rate = fresh["requests_per_sec"], r["requests_per_sec"]
         fresh_by_n[n_req] = rate
+        if n_req in pr5_by_n:
+            speedup = pr5_by_n[n_req] / fresh["poll_us"]
+            ok_fused = np.isfinite(speedup) and speedup >= MIN_FUSED_SPEEDUP
+            print(f"  fused     N={n_req:7d}: {fresh['poll_us']:8.1f}us/poll "
+                  f"vs pre-fusion {pr5_by_n[n_req]:8.1f}us "
+                  f"({speedup:.1f}x) [{'ok' if ok_fused else 'FAIL'}]")
+            if not ok_fused:
+                failures.append(
+                    f"client_session N={n_req}: fused tick only {speedup:.1f}x"
+                    f" the pre-fusion poll latency (bar: "
+                    f">={MIN_FUSED_SPEEDUP:.0f}x vs client_session_pr5)")
         floor = (1.0 - tolerance) * base_rate
         ok_abs = np.isfinite(rate) and rate >= floor
         print(f"  client    N={n_req:7d} W={w:5d} B={b:2d}: fresh "

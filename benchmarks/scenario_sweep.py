@@ -14,6 +14,22 @@ separate.
 `--smoke` runs a CI-sized slice (no artifact write — the committed
 artifact is the full run's) and exits nonzero if any required aggregate
 metric is NaN/inf, so a degenerate run can't pass silently.
+
+`--engine {windowed,dense}` selects the per-tick execution strategy:
+`windowed` (the default) runs every cell on the O(W) active-window
+engine with W from `window_for(n_requests)`; `dense` forces the
+original O(N) scan.  The two are bit-exact whenever W covers the peak
+live queue (tests/test_scenarios.py pins this per scenario), so the
+flag changes wall-clock, not results — `dense` exists for A/B timing
+and as the oracle when sizing W for a new regime.
+
+`--scale` is the N=1e6 sweep (`make bench-scale`, never CI): the full
+scenario grid at a million requests on the windowed engine, with
+`arrival_scale` compressing the offered load into the nominal N=160
+span so the horizon stays 14k ticks while the population grows 6250x.
+Rows land under the `scale_1e6` key of `BENCH_scenarios.json`
+(informational — deep-overload cells legitimately shed almost
+everything, so the NaN gate is reported but not enforced there).
 """
 from __future__ import annotations
 
@@ -35,6 +51,7 @@ from repro.sim import (  # noqa: E402
     list_scenarios,
     run_scenario_cell,
     summarize,
+    window_for,
 )
 
 BENCH_JSON = os.path.join(
@@ -94,10 +111,15 @@ def run_sweep(
     n_requests: int,
     n_ticks: int,
     seeds: int,
+    engine: str = "windowed",
+    arrival_scale: float = 1.0,
     verbose: bool = True,
 ) -> tuple[list[dict], list[str]]:
     """Returns (cell dicts, list of NaN/inf violations)."""
-    sim_cfg = SimConfig(n_ticks=n_ticks)
+    if engine not in ("windowed", "dense"):
+        raise ValueError(f"engine must be 'windowed' or 'dense', got {engine!r}")
+    window = window_for(n_requests) if engine == "windowed" else None
+    sim_cfg = SimConfig(n_ticks=n_ticks, window=window)
     cells, violations = [], []
     for name in list_scenarios():
         for mode, policy_fn in ALLOC_MODES.items():
@@ -105,6 +127,7 @@ def run_sweep(
             m, pm = run_scenario_cell(
                 policy_fn(), name,
                 seeds=seeds, n_requests=n_requests, sim_cfg=sim_cfg,
+                arrival_scale=arrival_scale,
             )
             secs = time.perf_counter() - t0
             s = summarize(m)
@@ -141,15 +164,62 @@ def run_sweep(
     return cells, violations
 
 
+SCALE_N = 1_000_000
+SCALE_BASE_N = 160  # arrival_scale = SCALE_N / SCALE_BASE_N keeps the
+                    # span at the nominal full-run horizon (14k ticks)
+
+
+def run_scale_sweep(verbose: bool = True) -> int:
+    """The first full-grid N=1e6 run: every scenario × alloc mode at a
+    million requests on the windowed engine (W = window_for cap), one
+    seed, offered over the nominal N=160 span.  Writes the rows under
+    `scale_1e6` in BENCH_scenarios.json, preserving the full-run cells.
+    Deep overload is the regime being measured, so NaN aggregates
+    (nothing completed in a phase) are reported, not fatal."""
+    cells, violations = run_sweep(
+        n_requests=SCALE_N, n_ticks=14000, seeds=1,
+        arrival_scale=SCALE_N / SCALE_BASE_N, verbose=verbose)
+    prev = {}
+    try:
+        with open(BENCH_JSON) as f:
+            prev = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        pass
+    prev["scale_1e6"] = {
+        "sim": {"n_requests": SCALE_N, "n_ticks": 14000, "seeds": 1,
+                "engine": "windowed",
+                "arrival_scale": SCALE_N / SCALE_BASE_N},
+        "cells": cells,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(prev, f, indent=2)
+    print(f"wrote {os.path.relpath(BENCH_JSON)} scale_1e6 "
+          f"({len(cells)} cells)")
+    if violations:
+        print(f"note: {len(violations)} non-finite aggregates under deep "
+              f"overload (informational):")
+        for v in violations:
+            print(f"  {v}")
+    return 0
+
+
 def main(argv: list[str]) -> int:
     smoke = "--smoke" in argv
+    engine = "windowed"
+    if "--engine" in argv:
+        engine = argv[argv.index("--engine") + 1]
+    if "--scale" in argv:
+        return run_scale_sweep()
     if smoke:
-        cells, violations = run_sweep(n_requests=48, n_ticks=2400, seeds=2)
+        cells, violations = run_sweep(n_requests=48, n_ticks=2400, seeds=2,
+                                      engine=engine)
     else:
-        cells, violations = run_sweep(n_requests=160, n_ticks=14000, seeds=3)
+        cells, violations = run_sweep(n_requests=160, n_ticks=14000, seeds=3,
+                                      engine=engine)
         artifact = {
             "benchmark": "scenario_sweep",
-            "sim": {"n_requests": 160, "n_ticks": 14000, "seeds": 3},
+            "sim": {"n_requests": 160, "n_ticks": 14000, "seeds": 3,
+                    "engine": engine},
             "alloc_modes": sorted(ALLOC_MODES),
             "scenarios": list_scenarios(),
             "cells": cells,

@@ -14,6 +14,15 @@ is open-ended and windowed:
     slots form a request-id-sorted prefix, and each poll's cost is
     O(W + B) regardless of how many requests the session has ever seen.
     Submissions beyond the window queue FIFO and admit as slots free.
+  * **One device step per poll** (DESIGN.md §8): the whole decision
+    epoch — apply the previous epoch's verdicts, ingest completions,
+    retire, compact + admit, dispatch — is a single donated-buffer
+    `jax.jit` (`_fused_tick`).  The slot pool never leaves the device:
+    the host pushes the newly-staged arrivals plus a narrow completion
+    scatter, and pulls one packed `(4B+2,)` decision summary.  Terminal
+    classification (completed vs abandoned) runs on host-side float32
+    mirrors that replay the device's own comparison chains bit-exactly,
+    so the per-poll `(W,)` status pulls of the unfused design are gone.
   * **Decisions come from the same `schedule_batch`** the simulator
     runs, on the same `(K, W)` view; retirement (completion/timeout
     classification, the tail-latency EMA) is literally the engine's
@@ -22,7 +31,7 @@ is open-ended and windowed:
     makes sim↔live parity a theorem rather than a hope: driven in
     virtual time over `MockProvider`, the session reproduces the
     windowed sim engine's decision sequence bit-for-bit
-    (tests/test_serving_client.py pins this on the `balanced` scenario).
+    (tests/test_serving_client.py pins this on the `balanced` regime).
   * **The provider boundary is async**: submits are non-blocking, many
     requests ride in flight at once, and the session's concurrency
     accounting is the real INFLIGHT recount (== the provider's actual
@@ -37,10 +46,19 @@ is open-ended and windowed:
     and `drain()` sleeps until the next actionable instant (next queued
     arrival, earliest defer/Retry-After expiry, the provider's next
     event hint) instead of spinning at a fixed cadence.
+
+Decision timing under the fused step: `schedule_batch` runs at the end
+of epoch t's device call, the host submits the grants and collects the
+provider's 429 verdicts, and the state transition (`_apply_decisions`)
+is the *first* stage of epoch t+1's call — the same floats in the same
+order as applying at the end of t, since nothing between reads the
+written fields.  Reading `session._state` flushes that pending
+transition on demand, so introspection still sees post-apply state.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from collections import deque
 from typing import Callable, NamedTuple, Optional
@@ -49,11 +67,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.client.provider import AsyncProvider
+from repro.client.provider import (
+    AsyncProvider,
+    expo_retry,  # noqa: F401  (re-exported; historic home of the hook)
+    honor_retry_after,
+)
 from repro.client.request import Request
 from repro.core import overload as olc
 from repro.core.policy import ALLOC_ADRR, PolicyConfig, n_classes
-from repro.core.scheduler import IDLE, schedule_batch
+from repro.core.scheduler import IDLE, BatchDecision, schedule_batch
 from repro.core.types import (
     ABANDONED,
     COMPLETED,
@@ -71,6 +93,7 @@ from repro.sim.provider import ProviderPhysics, default_physics
 from repro.sim.workload import DEADLINE_BUDGET_MS
 
 _DEADLINE_NP = np.asarray(DEADLINE_BUDGET_MS)
+_DEADLINE_PY = [float(x) for x in _DEADLINE_NP]
 
 
 # ---------------------------------------------------------------------------
@@ -118,56 +141,28 @@ class SessionStats:
     peak_inflight: int = 0
 
 
-# --- Retry-After policies (the 429 backoff hook) ---------------------------
-
 RetryPolicy = Callable[[float, int], float]
 
 
-def honor_retry_after(retry_after_ms: float, n_throttles: int) -> float:
-    """Default: wait exactly what the provider asked."""
-    return retry_after_ms
-
-
-def expo_retry(mult: float = 1.0, growth: float = 2.0,
-               cap_ms: float = 60_000.0) -> RetryPolicy:
-    """Retry-After-seeded exponential backoff: the provider's hint is the
-    base, repeated bounces of the same request grow it geometrically."""
-    def policy(retry_after_ms: float, n_throttles: int) -> float:
-        return min(retry_after_ms * mult * growth ** max(n_throttles - 1, 0),
-                   cap_ms)
-    return policy
-
-
 # ---------------------------------------------------------------------------
-# Jitted steps (module-level so compilations are shared across sessions)
+# The fused device tick (module-level so compilations are shared)
 # ---------------------------------------------------------------------------
 
 
-@jax.jit
-def _ingest_and_retire(policy: PolicyConfig, phys: ProviderPhysics,
-                       batch: RequestBatch, state: SimState,
-                       comp_slot, comp_fin, now):
-    """Scatter provider completions into finish_ms, then run the
-    engine's retirement pass (completion vs timeout classification,
-    stale-abandonment, tail EMA, inflight recount) on the (W,) state.
-    Returns (state, alive) — alive marks slots still PENDING/INFLIGHT."""
-    finish = state.req.finish_ms.at[comp_slot].set(comp_fin, mode="drop")
-    state = state._replace(
-        now_ms=now, req=state.req._replace(finish_ms=finish))
-    state = _complete_and_timeout(policy, phys, batch, state)
-    alive = (state.req.status == PENDING) | (state.req.status == INFLIGHT)
-    return state, alive
+# row layout of the packed (7, W) staging transfer: int fields ride
+# exactly in f32 (buckets/classes are tiny) so the host pushes ONE
+# array per poll instead of eight
+_ST_ARRIVAL, _ST_BUCKET, _ST_CLS, _ST_TOKENS = 0, 1, 2, 3
+_ST_P50, _ST_P90, _ST_DEADLINE = 4, 5, 6
 
 
-@jax.jit
-def _compact_and_admit(batch: RequestBatch, req, alive, staged: RequestBatch,
-                       n_stage):
+def _compact_and_admit(batch: RequestBatch, req, alive, staged, n_stage):
     """Stable-compact live slots to the prefix (preserving request-id
     order — the ordering layer's tie-break invariant) and append up to
-    `n_stage` newly admitted requests behind them.  Staged request
-    state is fresh (PENDING, finish=inf); vacated slots are neutralized
-    exactly like the engine's empty-slot view (invalid, terminal,
-    never landing)."""
+    `n_stage` newly admitted requests behind them (rows of the packed
+    (7, W) staging transfer).  Staged request state is fresh (PENDING,
+    finish=inf); vacated slots are neutralized exactly like the
+    engine's empty-slot view (invalid, terminal, never landing)."""
     w = alive.shape[0]
     iota = jnp.arange(w, dtype=jnp.int32)
     idx, = jnp.nonzero(alive, size=w, fill_value=0)
@@ -183,15 +178,18 @@ def _compact_and_admit(batch: RequestBatch, req, alive, staged: RequestBatch,
         return v
 
     new_batch = RequestBatch(
-        arrival_ms=mix(batch.arrival_ms, staged.arrival_ms),
-        bucket=mix(batch.bucket, staged.bucket),
-        cls=mix(batch.cls, staged.cls),
-        true_tokens=mix(batch.true_tokens, staged.true_tokens),
-        p50=mix(batch.p50, staged.p50),
-        p90=mix(batch.p90, staged.p90),
+        arrival_ms=mix(batch.arrival_ms, staged[_ST_ARRIVAL]),
+        bucket=mix(batch.bucket, staged[_ST_BUCKET].astype(jnp.int32)),
+        cls=mix(batch.cls, staged[_ST_CLS].astype(jnp.int32)),
+        true_tokens=mix(batch.true_tokens, staged[_ST_TOKENS]),
+        p50=mix(batch.p50, staged[_ST_P50]),
+        p90=mix(batch.p90, staged[_ST_P90]),
         deadline_budget_ms=mix(batch.deadline_budget_ms,
-                               staged.deadline_budget_ms),
-        valid=mix(batch.valid, staged.valid, fill=False),
+                               staged[_ST_DEADLINE]),
+        # every staged row is an admission, so validity needs no
+        # transferred column
+        valid=jnp.where(stage_here, True,
+                        jnp.where(live_here, batch.valid[idx], False)),
     )
     fresh_i = jnp.zeros((w,), jnp.int32)
     fresh_f = jnp.zeros((w,), jnp.float32)
@@ -207,12 +205,8 @@ def _compact_and_admit(batch: RequestBatch, req, alive, staged: RequestBatch,
     return new_batch, new_req, n_live + n_stage
 
 
-_dispatch = jax.jit(schedule_batch, static_argnames=("max_grants", "backend"))
-
-
-@jax.jit
-def _apply_decisions(policy: PolicyConfig, batch: RequestBatch,
-                     state: SimState, d, accepted, delay_ms):
+def _apply_body(policy: PolicyConfig, batch: RequestBatch,
+                state: SimState, d, accepted, delay_ms):
     """Post-dispatch state transition on the (W,) pool — the live-path
     sibling of the engine's `_apply_batch`, with two deliberate
     differences: admits get finish_ms = inf (the transport decides when
@@ -282,21 +276,103 @@ def _apply_decisions(policy: PolicyConfig, batch: RequestBatch,
     )
 
 
-@jax.jit
-def _next_defer_ms(state: SimState):
-    """Earliest defer/Retry-After expiry among pending slots (inf if
-    none) — one of the idle-sleep wakeup candidates."""
-    pend = state.req.status == PENDING
-    parked = pend & (state.req.defer_until > state.now_ms)
-    return jnp.where(parked, state.req.defer_until, jnp.inf).min()
+# standalone jit of the transition, used only when `session._state` is
+# introspected before the next poll has folded the pending apply in
+_apply_decisions = jax.jit(_apply_body, donate_argnums=(2,))
+
+
+def _fused_tick(policy: PolicyConfig, phys: ProviderPhysics,
+                batch: RequestBatch, state: SimState, prev,
+                comp, staged, n_stage, now,
+                *, max_grants: int, backend: str):
+    """One decision epoch as a single donated-buffer device step:
+
+      apply(prev) -> ingest completions -> retire -> compact + admit
+                  -> dispatch -> packed summary
+
+    `prev` is the previous epoch's `(BatchDecision, accept_delay)` —
+    or None on the first epoch / after an explicit `_state` flush, a
+    distinct pytree structure that traces the no-leading-apply variant;
+    `accept_delay` is the (2B,) packed [accepted; delay_ms] verdict of
+    the host's submit loop.  `batch` and `state` are donated: the (W,)
+    slot pool lives on the device across polls and the host never
+    rematerializes it.  Per poll the host pushes exactly three packed
+    arrays — `comp` (2, W) [slot; finish], `staged` (7, W), and the
+    verdicts — and pulls one summary vector
+    `[actions, req_idx, inflight_at, backoff, severity, next_defer]`
+    (int fields ride exactly in f32 throughout).
+    """
+    if prev is not None:
+        d0, ad0 = prev
+        b0 = d0.actions.shape[0]
+        state = _apply_body(policy, batch, state, d0,
+                            ad0[:b0] != 0.0, ad0[b0:])
+    comp_slot = comp[0].astype(jnp.int32)
+    finish = state.req.finish_ms.at[comp_slot].set(comp[1], mode="drop")
+    state = state._replace(
+        now_ms=now, req=state.req._replace(finish_ms=finish))
+    state = _complete_and_timeout(policy, phys, batch, state)
+    alive = (state.req.status == PENDING) | (state.req.status == INFLIGHT)
+    batch, req, _ = _compact_and_admit(batch, state.req, alive, staged,
+                                       n_stage)
+    state = state._replace(req=req)
+    d = schedule_batch(policy, batch, state,
+                       max_grants=max_grants, backend=backend)
+    # idle-sleep hint: earliest defer/Retry-After expiry already on the
+    # books (this epoch's defers are added host-side from `backoff`)
+    pend = req.status == PENDING
+    next_defer = jnp.where(pend & (req.defer_until > now),
+                           req.defer_until, jnp.inf).min()
+    backoff = olc.defer_backoff(policy, d.severity, req.n_defers[d.req_idx])
+    summary = jnp.concatenate([
+        d.actions.astype(jnp.float32),
+        d.req_idx.astype(jnp.float32),
+        d.inflight_at.astype(jnp.float32),
+        backoff,
+        d.severity[None],
+        next_defer[None],
+    ])
+    return batch, state, d, summary
+
+
+def _freeze(tree) -> tuple:
+    """Hashable value-key for a pytree of arrays (shape, dtype, bytes
+    per leaf) — equality means numerically identical."""
+    return tuple(
+        (np.asarray(leaf).shape, str(np.asarray(leaf).dtype),
+         np.asarray(leaf).tobytes())
+        for leaf in jax.tree_util.tree_leaves(tree))
+
+
+_TICK_CACHE: dict = {}
+
+
+def _tick_for(policy: PolicyConfig, phys: ProviderPhysics,
+              max_grants: int, backend: str):
+    """Jitted fused tick with `policy` and `phys` baked in as trace
+    constants.  A session's policy never changes mid-flight, and baking
+    it buys the hot path twice: the per-poll dispatch flattens ~30
+    argument leaves instead of ~60, and XLA folds the constant knobs
+    through the program (the alloc-mode switch collapses to the one
+    live branch, threshold ladders become immediates).  Cached by VALUE
+    so every session with a numerically identical (policy, phys, B,
+    backend) shares one compilation."""
+    key = (_freeze(policy), _freeze(phys), max_grants, backend)
+    fn = _TICK_CACHE.get(key)
+    if fn is None:
+        if len(_TICK_CACHE) > 64:
+            _TICK_CACHE.clear()
+        fn = jax.jit(
+            functools.partial(_fused_tick, policy, phys,
+                              max_grants=max_grants, backend=backend),
+            donate_argnums=(0, 1))
+        _TICK_CACHE[key] = fn
+    return fn
 
 
 # ---------------------------------------------------------------------------
 # The session
 # ---------------------------------------------------------------------------
-
-
-_TERMINAL = {"completed", "rejected", "abandoned"}
 
 
 class ClientSession:
@@ -333,49 +409,91 @@ class ClientSession:
         self.phys = phys if phys is not None else default_physics()
         self.retry_policy = retry_policy or honor_retry_after
         self.stats = SessionStats()
+        self._prof: Optional[dict] = None
 
         w = cfg.window
         self._k = n_classes(policy)
         self._win_batch = empty_window_batch(w)
-        self._state = init_sim_state(w, self._k)._replace(
+        self._dev_state = init_sim_state(w, self._k)._replace(
             req=empty_window_request_state(w))
-        # host mirrors (kept in lockstep with the device pool)
+        self._pending = None  # (BatchDecision, accepted, delay) to fold in
+        self._idle_cache: Optional[PollResult] = None
+        # host mirrors (kept in lockstep with the device pool; float32
+        # fields replay the device's own comparison chains bit-exactly)
         self._reqs: list[Request] = []
         self._arrival_ms: list[float] = []
+        # columnar staging features, filled at submit() — queue pops
+        # are a contiguous rid range, so staging is 7 list-slice
+        # assigns into the packed transfer buffer, not a per-row loop
+        self._cols: tuple[list, ...] = tuple([] for _ in range(7))
         self._queue: deque[int] = deque()
         self._slot_rid = np.full(w, -1, np.int64)
-        self._slot_live = np.zeros(w, bool)
+        self._slot_status = np.full(w, REJECTED, np.int32)
+        self._slot_arrival = np.zeros(w, np.float32)
+        self._slot_thresh = np.full(w, np.inf, np.float32)
+        self._slot_finish = np.full(w, np.inf, np.float32)
         self._n_live = 0
         self._tickets: dict[int, int] = {}
         self._unfinished = 0
         self._t = 0
         self._t0: Optional[float] = None
+        self._defer_hint = float("inf")
+        self._timeout_mult = np.asarray(policy.timeout_mult, np.float32)
+        # reused per-poll transfer buffers (jit copies them at call
+        # time, so in-place refills between calls are safe)
+        self._comp = np.empty((2, w), np.float32)
+        self._comp[0] = w          # scatter sentinel: dropped by the set
+        self._comp[1] = np.inf
+        self._staged_px = np.zeros((7, w), np.float32)
+        self._staged_px[_ST_TOKENS:_ST_P90 + 1] = 1.0
+        self._staged_px[_ST_DEADLINE] = 1e9
+        self._tick = _tick_for(policy, self.phys, cfg.max_grants,
+                               cfg.backend)
         self._warmup()
 
+    @property
+    def _state(self) -> SimState:
+        """Post-apply device state.  The fused tick leaves the previous
+        epoch's transition pending (it is folded into the next poll);
+        introspection flushes it first so callers always observe the
+        state as if the epoch had been applied eagerly."""
+        if self._pending is not None:
+            d, ad = self._pending
+            b = self._bm
+            self._dev_state = _apply_decisions(
+                self.policy, self._win_batch, self._dev_state, d,
+                ad[:b] != 0.0, ad[b:].copy())
+            self._pending = None
+        return self._dev_state
+
     def _warmup(self) -> None:
-        """Compile the session's jitted steps against the (W, B, K)
+        """Compile the session's device step against the (W, B, K)
         shapes before the clock starts: XLA compilation takes seconds,
         and a wall-clock session that compiles inside its first poll
         would burn that as session time — at time_scale >> 1 enough to
-        blow every deadline before the first decision lands."""
-        w = self.cfg.window
-        comp_slot = np.full(w, w, np.int32)
-        comp_fin = np.full(w, np.inf, np.float32)
-        state, alive = _ingest_and_retire(
-            self.policy, self.phys, self._win_batch, self._state,
-            comp_slot, comp_fin, jnp.float32(0.0))
-        _, staged = self._stage_admissions(-1.0, 0)
-        batch, req, _ = _compact_and_admit(
-            self._win_batch, state.req, alive, staged, jnp.int32(0))
-        d = _dispatch(self.policy, batch, state._replace(req=req),
-                      max_grants=self.cfg.max_grants,
-                      backend=self.cfg.backend)
-        bm = int(d.actions.shape[0])
-        out = _apply_decisions(
-            self.policy, batch, state._replace(req=req), d,
-            np.ones(bm, bool), np.zeros(bm, np.float32))
-        _next_defer_ms(out)
+        blow every deadline before the first decision lands.  Both trace
+        variants (with and without the leading apply) and the flush path
+        are warmed; the throwaway buffers are re-initialized after."""
+        w, k = self.cfg.window, self._k
+        zero = np.int32(0)
+        t0 = np.float32(0.0)
+        batch1, state1, d1, _ = self._tick(
+            self._win_batch, self._dev_state, None,
+            self._comp, self._staged_px, zero, t0)
+        bm = int(d1.actions.shape[0])
+        self._bm = bm
+        self._accdelay = np.zeros(2 * bm, np.float32)
+        self._accdelay[:bm] = 1.0
+        batch2, state2, d2, _ = self._tick(
+            batch1, state1, (d1, self._accdelay),
+            self._comp, self._staged_px, zero, t0)
+        out = _apply_decisions(self.policy, batch2, state2, d2,
+                               self._accdelay[:bm] != 0.0,
+                               self._accdelay[bm:].copy())
         jax.block_until_ready(out.req.status)
+        self._win_batch = empty_window_batch(w)
+        self._dev_state = init_sim_state(w, k)._replace(
+            req=empty_window_request_state(w))
 
     # --- clock --------------------------------------------------------
     def _wall_now_ms(self) -> float:
@@ -395,139 +513,209 @@ class ClientSession:
         callers typically leave it 0 or stamp it with `now_ms()/1e3`."""
         rid = len(self._reqs)
         self._reqs.append(req)
-        self._arrival_ms.append(float(np.float32(req.arrival_s * 1000.0)))
+        arrival = float(np.float32(req.arrival_s * 1000.0))
+        self._arrival_ms.append(arrival)
+        bkt = int(req.bucket)
+        c = self._cols
+        c[_ST_ARRIVAL].append(arrival)
+        c[_ST_BUCKET].append(bkt)
+        c[_ST_CLS].append(req.resolved_cls())
+        c[_ST_TOKENS].append(float(req.max_new))
+        c[_ST_P50].append(float(req.p50))
+        c[_ST_P90].append(float(req.resolved_p90()))
+        c[_ST_DEADLINE].append(_DEADLINE_PY[bkt])
         self._queue.append(rid)
         self._unfinished += 1
+        self._idle_cache = None
         return rid
 
     @property
     def unfinished(self) -> int:
         return self._unfinished
 
+    def enable_profiling(self) -> dict:
+        """Turn on per-poll wall-time accounting and return the live
+        accumulator dict.  Buckets (seconds, cumulative over profiled
+        polls): `stage` — host-side work (completion ingest, retirement
+        classification, arrival staging, mirror compaction), `dispatch`
+        — the async fused-tick call (argument flatten + enqueue; the
+        device executes concurrently with the mirror work), `pull` —
+        the blocking device->host summary fetch, i.e. time actually
+        waiting on the device, `grants` — the provider submit loop and
+        verdict bookkeeping.  `polls` counts profiled epochs (the
+        post-drain idle fast path is excluded — it does no device
+        work)."""
+        self._prof = {"stage": 0.0, "dispatch": 0.0, "pull": 0.0,
+                      "grants": 0.0, "polls": 0}
+        return self._prof
+
     def requests(self) -> list[Request]:
         return list(self._reqs)
 
-    def _stage_admissions(self, now_ms: float, free: int):
-        """Pop arrived requests off the FIFO queue into a (W,)-padded
-        staging batch (the window-admission rule the engine's
-        `_compact_and_admit` applies to its arrival stream)."""
-        w = self.cfg.window
+    def _stage_admissions(self, now_ms: float, free: int) -> list[int]:
+        """Pop arrived requests off the FIFO queue into the prefix of
+        the persistent staging buffers (the window-admission rule the
+        engine's `_compact_and_admit` applies to its arrival stream).
+        Rows past the returned count are ignored by the device (masked
+        by `n_stage`), so no reset is needed between polls."""
         rids = []
         while self._queue and len(rids) < free \
                 and self._arrival_ms[self._queue[0]] <= now_ms:
             rids.append(self._queue.popleft())
-        arr = np.zeros(w, np.float32)
-        bucket = np.zeros(w, np.int32)
-        cls = np.zeros(w, np.int32)
-        tok = np.ones(w, np.float32)
-        p50 = np.ones(w, np.float32)
-        p90 = np.ones(w, np.float32)
-        ddl = np.full(w, 1e9, np.float32)
-        valid = np.zeros(w, bool)
-        for i, rid in enumerate(rids):
-            r = self._reqs[rid]
-            arr[i] = self._arrival_ms[rid]
-            bucket[i] = int(r.bucket)
-            cls[i] = r.resolved_cls()
-            tok[i] = float(r.max_new)
-            p50[i] = float(r.p50)
-            p90[i] = float(r.resolved_p90())
-            ddl[i] = _DEADLINE_NP[int(r.bucket)]
-            valid[i] = True
-        staged = RequestBatch(
-            arrival_ms=arr, bucket=bucket, cls=cls, true_tokens=tok,
-            p50=p50, p90=p90, deadline_budget_ms=ddl, valid=valid)
-        return rids, staged
+        if not rids:
+            return rids
+        # rids popped FIFO off the monotone submit stream are a
+        # contiguous range, so the staging features are column slices:
+        # seven bulk assigns, no per-row work
+        r0, n = rids[0], len(rids)
+        px = self._staged_px
+        for row, col in enumerate(self._cols):
+            px[row, :n] = col[r0:r0 + n]
+        return rids
 
     def poll(self, now_ms: Optional[float] = None) -> PollResult:
-        """One decision epoch: ingest completions, retire, compact +
-        admit, dispatch `schedule_batch` over the (K, W) view, submit
-        grants to the provider, apply.  O(W + B) regardless of session
-        history length."""
+        """One decision epoch: one fused device step (apply previous
+        verdicts, ingest completions, retire, compact + admit, dispatch)
+        plus the host-side provider boundary (submit grants, collect 429
+        verdicts).  O(W + B) regardless of session history length."""
         self._t += 1
         if now_ms is None:
             now_ms = self.now_ms() if self.clock == "wall" else float(
                 np.float32(np.float32(self._t) * np.float32(self.cfg.dt_ms)))
-        w, b = self.cfg.window, self.cfg.max_grants
+        w, b = self.cfg.window, self._bm
         self.stats.n_polls += 1
 
-        # 1. provider completions -> slot scatter
+        # post-drain fast path: an empty pool with nothing queued and
+        # nothing in flight is a fixpoint (deficits reset on the first
+        # idle epoch, the EMA holds, severity is constant), so the epoch
+        # is replayed from the cached result with zero device work
+        if (self._idle_cache is not None and not self._queue
+                and not self._tickets and not self._unfinished):
+            return self._idle_cache._replace(now_ms=now_ms)
+
+        prof = self._prof
+        if prof is not None:
+            _tp0 = time.perf_counter()
+        now32 = np.float32(now_ms)
+        nl = self._n_live
+
+        # 1. provider completions -> comp scatter prefix + finish mirror
         comps = self.provider.poll(now_ms)
-        comp_slot = np.full(w, w, np.int32)
-        comp_fin = np.full(w, np.inf, np.float32)
         comp_by_rid: dict[int, object] = {}
+        ncomp = 0
         if comps:
             for c in comps:
                 comp_by_rid[self._tickets.pop(c.ticket)] = c
-            rids = np.fromiter(sorted(comp_by_rid), np.int64)
-            slots = np.searchsorted(self._slot_rid[:self._n_live], rids)
-            comp_slot[:len(rids)] = slots
-            comp_fin[:len(rids)] = [
-                np.float32(comp_by_rid[r].finish_ms) for r in rids]
+            rid_list = sorted(comp_by_rid)
+            rids = np.asarray(rid_list, np.int64)
+            slots = np.searchsorted(self._slot_rid[:nl], rids)
+            # asarray(..., f32) rounds each f64 element exactly like a
+            # per-element np.float32() cast
+            fins = np.asarray(
+                [comp_by_rid[r].finish_ms for r in rid_list], np.float32)
+            ncomp = len(rids)
+            self._comp[0, :ncomp] = slots
+            self._comp[1, :ncomp] = fins
+            self._slot_finish[slots] = fins
 
-        # 2. retire (engine's completion/timeout/EMA pass)
-        state, alive_dev = _ingest_and_retire(
-            self.policy, self.phys, self._win_batch, self._state,
-            comp_slot, comp_fin, jnp.float32(now_ms))
-        status_np = np.asarray(state.req.status)
-        alive = np.asarray(alive_dev)
-
-        completed, abandoned = [], []
-        newly_term = self._slot_live & ~alive
-        for slot in np.nonzero(newly_term)[0]:
+        # 2. retirement classification on the f32 mirrors — the same
+        # comparison chains `_complete_and_timeout` runs on the device
+        # (sub/mul/compare round identically in f32; no FMA can form
+        # across a comparison), so the verdicts match bit-for-bit
+        st = self._slot_status[:nl]
+        arr = self._slot_arrival[:nl]
+        fin = self._slot_finish[:nl]
+        th = self._slot_thresh[:nl]
+        landed = (st == INFLIGHT) & (fin <= now32)
+        timed_out = landed & ((fin - arr) > th)
+        stale = (st == PENDING) & (arr <= now32) & ((now32 - arr) > th)
+        dead = landed | stale
+        completed: list[int] = []
+        abandoned: list[int] = []
+        for slot in np.nonzero(dead)[0]:
             rid = int(self._slot_rid[slot])
             r = self._reqs[rid]
-            if status_np[slot] == COMPLETED:
+            if landed[slot] and not timed_out[slot]:
                 c = comp_by_rid.get(rid)
                 r.status = "completed"
-                r.finish_s = float(np.asarray(state.req.finish_ms[slot])) / 1e3 \
+                r.finish_s = float(fin[slot]) / 1e3 \
                     if c is None else float(c.finish_ms) / 1e3
                 if c is not None:
                     r.output = c.output
                 completed.append(rid)
                 self.stats.n_completed += 1
             else:
-                assert status_np[slot] == ABANDONED
                 # stale pending, or landed past the timeout multiple
                 r.status = "abandoned"
                 abandoned.append(rid)
                 self.stats.n_abandoned += 1
             self._unfinished -= 1
-
-        # 3. stage arrivals + 4. compact/admit
+        alive = ((st == PENDING) | (st == INFLIGHT)) & ~dead
         n_alive = int(alive.sum())
-        staged_rids, staged = self._stage_admissions(now_ms, w - n_alive)
-        self._win_batch, new_req, _ = _compact_and_admit(
-            self._win_batch, state.req, alive_dev, staged,
-            jnp.int32(len(staged_rids)))
-        state = state._replace(req=new_req)
-        self._slot_rid = np.concatenate([
-            self._slot_rid[alive],
-            np.asarray(staged_rids, np.int64),
-            np.full(w - n_alive - len(staged_rids), -1, np.int64)])
-        self._n_live = n_alive + len(staged_rids)
-        for rid in staged_rids:
-            self._reqs[rid].status = "pending"
 
-        # 5. dispatch — one batched decision over the (K, W) view
-        d = _dispatch(self.policy, self._win_batch, state,
-                      max_grants=b, backend=self.cfg.backend)
-        actions = np.asarray(d.actions)
-        idxs = np.asarray(d.req_idx)
-        infl_at = np.asarray(d.inflight_at)
-        severity = np.float32(np.asarray(d.severity))
+        # 3. stage arrivals + 4. the fused device step
+        staged_rids = self._stage_admissions(now_ms, w - n_alive)
+        n_stage = len(staged_rids)
+        if prof is not None:
+            _tp1 = time.perf_counter()
+        self._win_batch, self._dev_state, d, summary = self._tick(
+            self._win_batch, self._dev_state, self._pending,
+            self._comp, self._staged_px, np.int32(n_stage), now32)
+        if prof is not None:
+            _tp2 = time.perf_counter()
+        # the dispatch is async: the mirror bookkeeping below depends
+        # only on host state, so it runs while the device executes —
+        # the blocking summary pull comes after
+        if ncomp:
+            self._comp[0, :ncomp] = w
+            self._comp[1, :ncomp] = np.inf
+
+        # 5. mirror compaction (lockstep with the device scatter)
+        nt = n_alive + n_stage
+        self._slot_rid[:n_alive] = self._slot_rid[:nl][alive]
+        self._slot_status[:n_alive] = st[alive]
+        self._slot_arrival[:n_alive] = arr[alive]
+        self._slot_thresh[:n_alive] = th[alive]
+        self._slot_finish[:n_alive] = fin[alive]
+        if n_stage:
+            sl = slice(n_alive, nt)
+            self._slot_rid[sl] = staged_rids
+            self._slot_status[sl] = PENDING
+            px = self._staged_px
+            self._slot_arrival[sl] = px[_ST_ARRIVAL, :n_stage]
+            self._slot_thresh[sl] = (
+                self._timeout_mult[px[_ST_BUCKET, :n_stage].astype(np.int64)]
+                * px[_ST_DEADLINE, :n_stage])
+            self._slot_finish[sl] = np.inf
+            for rid in staged_rids:
+                self._reqs[rid].status = "pending"
+        self._slot_rid[nt:self._n_live] = -1
+        self._slot_status[nt:self._n_live] = REJECTED
+        self._n_live = nt
 
         # 6. submit grants (decision order); collect 429 verdicts
-        bm = actions.shape[0]
-        accepted = np.ones(bm, bool)
-        delay_ms = np.zeros(bm, np.float32)
-        req_rids = np.full(bm, -1, np.int64)
+        if prof is not None:
+            _tp3 = time.perf_counter()
+        summary = np.asarray(summary)  # the one device->host pull
+        if prof is not None:
+            _tp4 = time.perf_counter()
+        actions = summary[0:b].astype(np.int32)
+        idxs = summary[b:2 * b].astype(np.int32)
+        infl_at = summary[2 * b:3 * b].astype(np.int32)
+        backoff = summary[3 * b:4 * b]
+        severity = np.float32(summary[4 * b])
+        dev_next_defer = float(summary[4 * b + 1])
+        ad = self._accdelay
+        ad[:b] = 1.0
+        ad[b:] = 0.0
+        req_rids = np.full(b, -1, np.int64)
         admitted, deferred, rejected, throttled = [], [], [], []
-        for g in range(bm):
+        for g in range(b):
             a = actions[g]
             if a == IDLE:
                 continue
-            rid = int(self._slot_rid[idxs[g]])
+            slot = idxs[g]
+            rid = int(self._slot_rid[slot])
             req_rids[g] = rid
             r = self._reqs[rid]
             if a == olc.ADMIT:
@@ -537,13 +725,16 @@ class ClientSession:
                     self._tickets[res.ticket] = rid
                     r.status = "inflight"
                     r.submit_s = now_ms / 1e3
+                    self._slot_status[slot] = INFLIGHT
                     admitted.append(rid)
                     self.stats.n_admitted += 1
                 else:
-                    accepted[g] = False
+                    ad[g] = 0.0
                     r.n_throttles += 1
-                    delay_ms[g] = np.float32(self.retry_policy(
-                        res.retry_after_ms, r.n_throttles))
+                    # f32-array store rounds the f64 delay identically
+                    # to an explicit np.float32 cast
+                    ad[b + g] = self.retry_policy(
+                        res.retry_after_ms, r.n_throttles)
                     throttled.append(rid)
                     self.stats.n_throttled += 1
             elif a == olc.DEFER:
@@ -552,27 +743,43 @@ class ClientSession:
                 self.stats.n_deferred += 1
             else:  # REJECT
                 r.status = "rejected"
+                self._slot_status[slot] = REJECTED
                 rejected.append(rid)
                 self.stats.n_rejected += 1
                 self._unfinished -= 1
 
-        # 7. apply the transition on the (W,) pool
-        self._state = _apply_decisions(
-            self.policy, self._win_batch, state, d, accepted, delay_ms)
-        self._slot_live = np.asarray(
-            (self._state.req.status == PENDING)
-            | (self._state.req.status == INFLIGHT))
+        # 7. the device transition folds into the next poll's step
+        self._pending = (d, ad)
         self.stats.peak_inflight = max(
             self.stats.peak_inflight, self.provider.inflight())
+        hint = dev_next_defer
+        if deferred:
+            hint = min(hint, float(
+                (now32 + backoff[actions == olc.DEFER]).min()))
+        if throttled:
+            bounced = ad[:b] == 0.0
+            hint = min(hint, float((now32 + ad[b:][bounced]).min()))
+        self._defer_hint = hint
 
+        if prof is not None:
+            _tp5 = time.perf_counter()
+            prof["stage"] += (_tp1 - _tp0) + (_tp3 - _tp2)
+            prof["dispatch"] += _tp2 - _tp1
+            prof["pull"] += _tp4 - _tp3
+            prof["grants"] += _tp5 - _tp4
+            prof["polls"] += 1
         progressed = bool(
             completed or abandoned or rejected or admitted or deferred
             or throttled or staged_rids)
-        return PollResult(
+        result = PollResult(
             now_ms=now_ms, actions=actions, req_rids=req_rids,
             severity=severity, completed=completed, abandoned=abandoned,
             rejected=rejected, admitted=admitted, deferred=deferred,
             throttled=throttled, n_live=self._n_live, progressed=progressed)
+        if (not progressed and not self._unfinished and not self._queue
+                and not self._tickets and nt == 0 and ncomp == 0):
+            self._idle_cache = result
+        return result
 
     # --- drain --------------------------------------------------------
     def _idle_sleep(self, now_ms: float) -> None:
@@ -583,9 +790,8 @@ class ClientSession:
         cands = []
         if self._queue:
             cands.append(self._arrival_ms[self._queue[0]])
-        nd = float(np.asarray(_next_defer_ms(self._state)))
-        if np.isfinite(nd):
-            cands.append(nd)
+        if np.isfinite(self._defer_hint):
+            cands.append(self._defer_hint)
         pe = self.provider.next_event_ms(now_ms)
         if pe is not None:
             cands.append(pe)
@@ -603,7 +809,10 @@ class ClientSession:
     def drain(self, max_polls: Optional[int] = None) -> list[Request]:
         """Poll until every submitted request is terminal.  Wall-clock
         sessions sleep through idle epochs; virtual sessions advance one
-        tick per poll.  Returns the session's requests."""
+        tick per poll.  Ends with one settling epoch that compacts the
+        last retirements out of the pool and primes the idle fast path
+        (subsequent polls on the drained session are host-only no-ops).
+        Returns the session's requests."""
         n = 0
         while self._unfinished:
             r = self.poll()
@@ -614,4 +823,7 @@ class ClientSession:
                     f"after {n} polls")
             if self.clock == "wall" and not r.progressed:
                 self._idle_sleep(r.now_ms)
+        if not self._queue and not self._tickets \
+                and self._idle_cache is None:
+            self.poll()  # settle: retire bookkeeping, prime the fast path
         return list(self._reqs)

@@ -22,6 +22,20 @@ windowed scheduler's bit-exact contract relies on.  The final block
 selection-sorts the scratch set into (idx, score) rows, best first.
 Compared with `lax.top_k` over the full (K, N) score matrix this
 streams each element once and keeps only O(B) state.
+
+`sched_compact_topb` is the tick megakernel: it fuses the windowed
+engine's per-tick compaction scatter with the score + partial top-B
+ranking in a single Pallas pass, so the slot pool is read from HBM
+once per tick instead of once for the XLA cumsum-scatter and again for
+the ranking kernel.  The compaction is expressed as a (blk, W) masked
+max-reduction per output block (exact: a stable compaction routes at
+most one live slot to each output lane, dead lanes contribute the -1
+sentinel), and the scores are computed on the *uncompacted* features —
+compaction only permutes values, so scoring before or after it is the
+same arithmetic, and the stable order means slot-order ties are
+compacted-order ties.  Ranks at or beyond the live count are
+overwritten with (rank, NEG) sentinel rows, matching `lax.top_k` over
+the compacted sentinel tail bit for bit.
 """
 from __future__ import annotations
 
@@ -174,6 +188,157 @@ def _topb_kernel(arr_ref, w_ref, out_idx_ref, out_score_ref,
             out_score_ref[j] = m
             used = (cur == m) & (rem_i == sel)
             rem_s = jnp.where(used, -jnp.inf, rem_s)
+
+
+# ---------------------------------------------------------------------------
+# Fused compaction + score + partial top-B (the tick megakernel)
+# ---------------------------------------------------------------------------
+
+
+def _compact_topb_kernel(req_ref, arr_ref, w_ref, out_req_ref, out_n_ref,
+                         out_idx_ref, out_score_ref, best_s_ref, best_i_ref,
+                         *, blk: int, nb: int, b: int, w_total: int):
+    """One grid step = one compacted output block.
+
+    Every step sees the full (W,) pool in VMEM (the window is capped at
+    a few thousand slots): it rebuilds the alive-prefix positions,
+    scatters its own compacted block via a masked (blk, W) reduction —
+    each output lane receives exactly one survivor or the -1 sentinel,
+    so the max-combine is exact — scores its slot block in place, and
+    merges the block's local top-B into the running scratch set with
+    the same strict-eviction rule as `_topb_kernel`.  Candidate merge
+    order is ascending slot index; the final step translates winners
+    into compacted coordinates (compaction is stable, so slot order and
+    compacted order agree and first-occurrence ties carry over)."""
+    bi = pl.program_id(0)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, _BPAD), 1)
+    in_set = lane < b
+
+    @pl.when(bi == 0)
+    def _init():
+        best_s_ref[...] = jnp.full((1, _BPAD), -jnp.inf, jnp.float32)
+        best_i_ref[...] = jnp.full((1, _BPAD), -1, jnp.int32)
+
+    alive = arr_ref[3, :] > 0.0                       # (W,)
+    req = req_ref[0, :]                               # (W,) i32
+    cum = jnp.cumsum(alive.astype(jnp.int32))         # (W,) inclusive
+    pos = cum - 1                                     # compacted slot of i
+    n_live = cum[w_total - 1]
+    lane_w = jax.lax.broadcasted_iota(jnp.int32, (1, w_total), 1)[0]
+
+    # --- compaction scatter for this output block: out[j] = req[i] where
+    # pos[i] == j & alive[i] (at most one i per j), else the -1 sentinel
+    jg = bi * blk + jax.lax.broadcasted_iota(
+        jnp.int32, (blk, w_total), 0)                 # (blk, W) target rows
+    hit = alive[None, :] & (pos[None, :] == jg)
+    out_req_ref[...] = jnp.max(jnp.where(hit, req[None, :], -1), axis=1)
+
+    # --- this block's slot scores (features are pre-compaction: the
+    # scatter only permutes values, so scoring before or after compaction
+    # is the same arithmetic on the same f32 values)
+    wait = arr_ref[0, :]
+    cost = arr_ref[1, :]
+    urg = arr_ref[2, :]
+    w1, w2, w3, ref_tok = w_ref[0, 0], w_ref[0, 1], w_ref[0, 2], w_ref[0, 3]
+    c = jnp.maximum(cost, 1.0)
+    score = w1 * (wait / c) - w2 * (c / ref_tok) + w3 * urg
+    in_blk = (lane_w >= bi * blk) & (lane_w < (bi + 1) * blk)
+    # dead slots carry the finite NEG (they may fill the exhausted region,
+    # overwritten below); out-of-block lanes are -inf: not candidates here
+    score = jnp.where(in_blk & alive, score, jnp.where(in_blk, NEG, -jnp.inf))
+
+    for _ in range(b):
+        s = jnp.max(score)
+        jj = jnp.argmax(score).astype(jnp.int32)      # global slot index
+        score = jnp.where(lane_w == jj, -jnp.inf, score)
+
+        cur = jnp.where(in_set, best_s_ref[...], jnp.inf)
+        worst = jnp.min(cur)
+        evict_i = jnp.max(jnp.where(cur == worst, best_i_ref[...], -2))
+        cand = in_set & (cur == worst) & (best_i_ref[...] == evict_i)
+        hit_l = lane == jnp.max(jnp.where(cand, lane, -1))
+        take = s > worst
+        best_s_ref[...] = jnp.where(hit_l & take, s, best_s_ref[...])
+        best_i_ref[...] = jnp.where(hit_l & take, jj, best_i_ref[...])
+
+    @pl.when(bi == nb - 1)
+    def _finish():
+        rem_s = best_s_ref[...]
+        rem_i = best_i_ref[...]
+        big = jnp.int32(2**31 - 1)
+        for r in range(b):
+            cur = jnp.where(in_set, rem_s, -jnp.inf)
+            m = jnp.max(cur)
+            sel = jnp.min(jnp.where(cur == m, rem_i, big))
+            # slot -> compacted coordinates (masked reduction: a dynamic
+            # scalar gather would not lower on all targets)
+            csel = jnp.max(jnp.where(lane_w == sel, pos, -1))
+            # the exhausted region (rank >= n_live) mirrors top_k over the
+            # compacted pool: the sentinel tail ties at NEG, so rank r
+            # resolves to compacted index r exactly
+            exhausted = r >= n_live
+            out_idx_ref[r] = jnp.where(exhausted, r, csel)
+            out_score_ref[r] = jnp.where(exhausted, NEG, m)
+            used = (cur == m) & (rem_i == sel)
+            rem_s = jnp.where(used, -jnp.inf, rem_s)
+        out_n_ref[0] = n_live
+
+
+@functools.partial(jax.jit, static_argnames=("b", "blk", "interpret"))
+def sched_compact_topb(slot_req, alive, wait, cost, urgency, weights, *,
+                       b: int, blk: int = 128, interpret: bool = False):
+    """Fused compaction scatter + score + partial top-B over a slot pool.
+
+    slot_req: (w,) i32 request ids; alive: (w,) bool survivors;
+    wait/cost/urgency: (w,) f32 per-slot score features (slot order,
+    pre-compaction); weights: (4,) [w_wait, w_size, w_urg, ref_tokens].
+
+    Returns (compacted (w,) i32 with -1 tail sentinels, n_live () i32,
+    idx (b,) i32 in *compacted* coordinates, score (b,) f32), bit-exact
+    with running the XLA cumsum-scatter compaction followed by
+    `sched_score_topb` over the compacted pool (mask = index < n_live):
+    stable compaction preserves first-occurrence tie order, and the
+    exhausted region (rank >= n_live) yields (rank, NEG) exactly like
+    `lax.top_k` over the sentinel tail.  w must be a multiple of blk
+    (callers pad with alive=False); requires b <= min(w, _BPAD)."""
+    w = slot_req.shape[0]
+    blk = min(blk, w)
+    assert w % blk == 0, "pad the pool to a block multiple"
+    assert 0 < b <= min(w, _BPAD), (b, w)
+    nb = w // blk
+    req = slot_req.astype(jnp.int32)[None, :]                         # (1, w)
+    arr = jnp.stack([wait, cost, urgency, alive.astype(jnp.float32)])  # (4, w)
+    wts = weights.astype(jnp.float32)[None, :]                         # (1, 4)
+
+    kernel = functools.partial(
+        _compact_topb_kernel, blk=blk, nb=nb, b=b, w_total=w)
+    comp, n_live, idx, score = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, w), lambda g: (0, 0)),
+            pl.BlockSpec((4, w), lambda g: (0, 0)),
+            pl.BlockSpec((1, 4), lambda g: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk,), lambda g: (g,)),
+            pl.BlockSpec((1,), lambda g: (0,)),
+            pl.BlockSpec((b,), lambda g: (0,)),
+            pl.BlockSpec((b,), lambda g: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((w,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, _BPAD), jnp.float32),
+            pltpu.VMEM((1, _BPAD), jnp.int32),
+        ],
+        interpret=interpret,
+    )(req, arr, wts)
+    return comp, n_live[0], idx, score
 
 
 @functools.partial(jax.jit, static_argnames=("b", "blk", "interpret"))

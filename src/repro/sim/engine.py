@@ -414,6 +414,79 @@ def _compact_and_admit(
     )
 
 
+def sim_tick(
+    policy: PolicyConfig,
+    phys: ProviderPhysics,
+    batch: RequestBatch,
+    jitter: jnp.ndarray,
+    state: SimState,
+    win: WindowCarry | None,
+    xs: tuple,
+    *,
+    dt_ms: float,
+    k_slots: int,
+    backend: str,
+    dynamics: ProviderDynamics | None = None,
+    collect_decisions: bool = False,
+):
+    """One decision epoch of the engine as a single traceable body:
+
+      retire -> compact + admit -> limiter refill -> dispatch -> apply
+
+    This is THE per-tick program — `run_sim` scans it, and the live
+    `ClientSession` fused tick is its transport-boundary sibling
+    (retire/compact/dispatch are the same functions there; apply is
+    split across the provider round-trip).  Module-level and explicit
+    so the two paths share one definition of the tick, not two copies
+    that drift.  `win=None` runs the dense O(N) transition; a
+    `WindowCarry` runs the O(W) active-window path.  Returns
+    (state, win, ys) with ys the per-tick decision trace row (or None).
+    """
+    windowed = win is not None
+    has_limiter = dynamics is not None and dynamics.tb_refill is not None
+    t_idx, comfort_t, refill_t = xs
+    now = (t_idx + 1).astype(jnp.float32) * dt_ms
+    state = state._replace(now_ms=now)
+    if windowed:
+        state, alive = _retire_window(policy, phys, batch, state, win)
+        win = _compact_and_admit(batch, win, alive, now)
+    else:
+        state = _complete_and_timeout(policy, phys, batch, state)
+    if has_limiter:
+        state = state._replace(
+            provider=state.provider._replace(
+                tb_tokens=jnp.minimum(
+                    state.provider.tb_tokens + refill_t,
+                    dynamics.tb_capacity,
+                )
+            )
+        )
+    if windowed:
+        win_batch, win_req, _ = _window_view(batch, state.req, win.slot_req)
+        d_batch, d_state = win_batch, state._replace(req=win_req)
+    else:
+        d_batch, d_state = batch, state
+    d = schedule_batch(
+        policy, d_batch, d_state,
+        max_grants=k_slots,
+        backend=backend,
+    )
+    if windowed:
+        # slot-local decision -> global request ids; empty slots
+        # translate to the out-of-range n and fall into the scatter
+        # drop path (IDLE rows never carry a release anyway)
+        w = win.slot_req.shape[0]
+        d = d._replace(
+            req_idx=win.slot_req[jnp.clip(d.req_idx, 0, w - 1)])
+    state = _apply_batch(
+        policy, phys, batch, jitter, state, d,
+        comfort_scale=comfort_t,
+        limiter=dynamics if has_limiter else None,
+    )
+    ys = (d.actions, d.req_idx, d.severity) if collect_decisions else None
+    return state, win, ys
+
+
 def run_sim(
     policy: PolicyConfig,
     batch: RequestBatch,
@@ -453,50 +526,16 @@ def run_sim(
             provider=state0.provider._replace(tb_tokens=dynamics.tb_capacity)
         )
 
-    def dispatch_inputs(state, win):
-        if not windowed:
-            return batch, state
-        win_batch, win_req, _ = _window_view(batch, state.req, win.slot_req)
-        return win_batch, state._replace(req=win_req)
-
     def tick(carry, xs):
         state, win = carry
-        t_idx, comfort_t, refill_t = xs
-        now = (t_idx + 1).astype(jnp.float32) * sim_cfg.dt_ms
-        state = state._replace(now_ms=now)
-        if windowed:
-            state, alive = _retire_window(policy, phys, batch, state, win)
-            win = _compact_and_admit(batch, win, alive, now)
-        else:
-            state = _complete_and_timeout(policy, phys, batch, state)
-        if has_limiter:
-            state = state._replace(
-                provider=state.provider._replace(
-                    tb_tokens=jnp.minimum(
-                        state.provider.tb_tokens + refill_t,
-                        dynamics.tb_capacity,
-                    )
-                )
-            )
-        d_batch, d_state = dispatch_inputs(state, win)
-        d = schedule_batch(
-            policy, d_batch, d_state,
-            max_grants=sim_cfg.k_slots,
+        state, win, ys = sim_tick(
+            policy, phys, batch, jitter, state, win, xs,
+            dt_ms=sim_cfg.dt_ms,
+            k_slots=sim_cfg.k_slots,
             backend=sim_cfg.ordering_backend,
+            dynamics=dynamics,
+            collect_decisions=collect_decisions,
         )
-        if windowed:
-            # slot-local decision -> global request ids; empty slots
-            # translate to the out-of-range n and fall into the scatter
-            # drop path (IDLE rows never carry a release anyway)
-            w = win.slot_req.shape[0]
-            d = d._replace(
-                req_idx=win.slot_req[jnp.clip(d.req_idx, 0, w - 1)])
-        state = _apply_batch(
-            policy, phys, batch, jitter, state, d,
-            comfort_scale=comfort_t,
-            limiter=dynamics if has_limiter else None,
-        )
-        ys = (d.actions, d.req_idx, d.severity) if collect_decisions else None
         return (state, win), ys
 
     win0 = init_window_carry(sim_cfg.window, n) if windowed else None

@@ -96,7 +96,7 @@ def run_cell(
 @functools.partial(
     jax.jit,
     static_argnames=("scenario", "sim_cfg", "n_requests", "class_map",
-                     "information"),
+                     "information", "arrival_scale"),
 )
 def _run_scenario_seeds(
     policy: PolicyConfig,
@@ -107,12 +107,13 @@ def _run_scenario_seeds(
     n_requests: int,
     class_map: str,
     information: str,
+    arrival_scale: float,
 ) -> tuple[SimMetrics, PhaseMetrics]:
     k = n_classes(policy)
     wl_cfg, sched, dynamics, edges = scn.build(
         scenario, n_requests, sim_cfg.n_ticks, sim_cfg.dt_ms,
         class_map=class_map, information=information,
-        limiter_classes=k,
+        limiter_classes=k, arrival_scale=arrival_scale,
     )
 
     def one(key):
@@ -137,12 +138,15 @@ def run_scenario_cell(
     information: str = "coarse",
     phys: ProviderPhysics | None = None,
     sim_cfg: SimConfig = SimConfig(),
+    arrival_scale: float = 1.0,
 ) -> tuple[SimMetrics, PhaseMetrics]:
     """One (policy, scenario) cell over S seeds in a single jit'd vmap.
 
     Returns (aggregate metrics, per-phase metrics), both stacked over
     the leading seed axis.  The scenario spec is static: each distinct
     scenario compiles once and its schedule arrays are trace constants.
+    `arrival_scale` compresses the scenario's span by offering the same
+    population at a higher rate (see `scenarios.build`).
     """
     if isinstance(scenario, str):
         scenario = scn.get_scenario(scenario)
@@ -157,7 +161,7 @@ def run_scenario_cell(
     keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(seed0, seed0 + seeds))
     return _run_scenario_seeds(
         policy, phys, keys, scenario, sim_cfg, n_requests, class_map,
-        information,
+        information, arrival_scale,
     )
 
 

@@ -89,27 +89,34 @@ class Scenario(NamedTuple):
         return bool(self.brownouts) or self.tb_rate_rps is not None
 
 
-def arrival_span_ms(sc: Scenario, n_requests: int) -> float:
-    """Expected stationary arrival span the phases are laid over."""
-    return n_requests / arrival_rate(sc.mix, sc.congestion) * 1000.0
+def arrival_span_ms(sc: Scenario, n_requests: int,
+                    arrival_scale: float = 1.0) -> float:
+    """Expected stationary arrival span the phases are laid over.
+    `arrival_scale` multiplies the offered rate (scale runs compress a
+    large population into the nominal span instead of stretching the
+    horizon with N)."""
+    return n_requests / (
+        arrival_rate(sc.mix, sc.congestion) * arrival_scale) * 1000.0
 
 
-def phase_edges_ms(sc: Scenario, n_requests: int) -> jnp.ndarray:
+def phase_edges_ms(sc: Scenario, n_requests: int,
+                   arrival_scale: float = 1.0) -> jnp.ndarray:
     """(P+1,) wall-clock phase boundaries — the metric windows."""
-    span = arrival_span_ms(sc, n_requests)
+    span = arrival_span_ms(sc, n_requests, arrival_scale)
     fracs = jnp.asarray([p.frac for p in sc.phases], jnp.float32)
     return jnp.concatenate(
         [jnp.zeros((1,), jnp.float32), jnp.cumsum(fracs) * span]
     )
 
 
-def build_arrival_schedule(sc: Scenario, n_requests: int) -> ArrivalSchedule:
+def build_arrival_schedule(sc: Scenario, n_requests: int,
+                           arrival_scale: float = 1.0) -> ArrivalSchedule:
     """Materialize the piecewise schedule arrays from the static spec."""
     total = sum(p.frac for p in sc.phases)
     if abs(total - 1.0) > 1e-6:
         raise ValueError(
             f"scenario {sc.name!r}: phase fracs must sum to 1, got {total}")
-    span = arrival_span_ms(sc, n_requests)
+    span = arrival_span_ms(sc, n_requests, arrival_scale)
     t0, cum_work = [], []
     t = w = 0.0
     for p in sc.phases:
@@ -135,14 +142,15 @@ def build_arrival_schedule(sc: Scenario, n_requests: int) -> ArrivalSchedule:
 
 
 def build_dynamics(
-    sc: Scenario, n_ticks: int, dt_ms: float, n_requests: int, k: int
+    sc: Scenario, n_ticks: int, dt_ms: float, n_requests: int, k: int,
+    arrival_scale: float = 1.0,
 ) -> ProviderDynamics | None:
     """Materialize the (T,)-shaped provider schedules; None when the
     scenario configures no dynamics (the engine then compiles the exact
     stationary program)."""
     if not sc.has_dynamics:
         return None
-    span = arrival_span_ms(sc, n_requests)
+    span = arrival_span_ms(sc, n_requests, arrival_scale)
     comfort = (
         brownout_schedule(n_ticks, dt_ms, sc.brownouts, span)
         if sc.brownouts else None
@@ -179,6 +187,7 @@ def build(
     class_map: str = "paper2",
     information: str = "coarse",
     limiter_classes: int | None = None,
+    arrival_scale: float = 1.0,
 ) -> tuple[WorkloadConfig, ArrivalSchedule, ProviderDynamics | None,
            jnp.ndarray]:
     """One-stop materialization: (workload cfg, arrival schedule,
@@ -188,6 +197,12 @@ def build(
     `limiter_classes` sizes the token-bucket vectors; pass the *policy*
     class count when it exceeds the lane scheme's (the engine's bucket
     state is sized by the policy).  Defaults to the lane scheme's K.
+
+    `arrival_scale` multiplies the offered rate uniformly: the arrival
+    span, phase edges, brownout windows, and token-bucket schedules all
+    compress together, so a population of N at scale s sees the same
+    scenario shape over span/s — the knob the N=1e6 scale sweep uses to
+    keep the horizon fixed while the population grows.
     """
     wl_cfg = WorkloadConfig(
         n_requests=n_requests,
@@ -195,12 +210,15 @@ def build(
         congestion=sc.congestion,
         information=information,
         class_map=class_map,
+        arrival_scale=arrival_scale,
     )
-    sched = build_arrival_schedule(sc, n_requests)
+    sched = build_arrival_schedule(sc, n_requests, arrival_scale)
     k = limiter_classes if limiter_classes is not None \
         else n_classes_of(class_map)
-    dynamics = build_dynamics(sc, n_ticks, dt_ms, n_requests, k)
-    return wl_cfg, sched, dynamics, phase_edges_ms(sc, n_requests)
+    dynamics = build_dynamics(sc, n_ticks, dt_ms, n_requests, k,
+                              arrival_scale)
+    return wl_cfg, sched, dynamics, phase_edges_ms(sc, n_requests,
+                                                   arrival_scale)
 
 
 # ---------------------------------------------------------------------------

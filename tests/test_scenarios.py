@@ -20,6 +20,7 @@ from repro.sim import (
     run_cell,
     run_scenario_cell,
     run_sim,
+    window_for,
 )
 from repro.sim.provider import (
     ProviderDynamics,
@@ -156,6 +157,33 @@ class TestStationaryBitExact:
             assert np.array_equal(
                 np.asarray(getattr(m0, name)),
                 np.asarray(getattr(m1, name)), equal_nan=True), name
+
+
+class TestDenseVsWindowed:
+    """The active window is an execution strategy, not a modeling
+    change: with W covering the live queue, a scenario cell's aggregate
+    AND per-phase metrics match the dense engine bit for bit — the
+    contract `benchmarks/scenario_sweep.py --engine` (windowed default)
+    rides on.  `rate_limited` exercises provider dynamics (token-bucket
+    429s) through both engines; `burst_train` exercises the
+    nonstationary arrival warp."""
+
+    @pytest.mark.parametrize("name", ["burst_train", "rate_limited"])
+    def test_scenario_cell_metrics_bit_exact(self, name):
+        cfg_dense = SimConfig(n_ticks=1000)
+        cfg_win = SimConfig(n_ticks=1000, window=window_for(48))
+        m_d, pm_d = run_scenario_cell(
+            base_policy(), name, seeds=1, n_requests=48, sim_cfg=cfg_dense)
+        m_w, pm_w = run_scenario_cell(
+            base_policy(), name, seeds=1, n_requests=48, sim_cfg=cfg_win)
+        for f in m_d._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(m_d, f)), np.asarray(getattr(m_w, f)),
+                err_msg=f"aggregate {f}")
+        for f in pm_d._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(pm_d, f)), np.asarray(getattr(pm_w, f)),
+                err_msg=f"phase {f}")
 
 
 class TestLoadMultiplierProperties:

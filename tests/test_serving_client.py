@@ -230,7 +230,9 @@ class TestThrottleBackoff:
 
     def test_retry_policy_hook(self):
         """expo_retry grows the park time geometrically per bounce of
-        the same request — the pluggable Retry-After policy."""
+        the same request — the pluggable Retry-After policy.  The
+        default ±20% jitter smears each delay, so the spacing bound is
+        the jittered floor 0.8 * growth^(i-1) * retry_after."""
         phys = default_physics()
         prov = self._crunch_provider(phys, retry_after=400.0)
         sess = ClientSession(
@@ -250,13 +252,38 @@ class TestThrottleBackoff:
         multi = {rid: ts for rid, ts in bounces.items() if len(ts) >= 2}
         assert prov.n_throttled > 0
         assert multi, "no request bounced twice — the hook went unexercised"
-        # the delay applied after the i-th bounce of a request is
-        # retry_after * growth^(i-1); the gap to its next bounce must
-        # respect it
+        # the delay applied after the i-th bounce of a request is at
+        # least 0.8 * retry_after * growth^(i-1); the gap to its next
+        # bounce must respect it
         for rid, ts in multi.items():
             for i in range(1, len(ts)):
                 grown = 400.0 * 3.0 ** (i - 1)
-                assert ts[i] - ts[i - 1] >= min(grown, 60_000.0) - 1e-3
+                assert ts[i] - ts[i - 1] >= 0.8 * min(grown, 60_000.0) - 1e-3
+
+    def test_expo_retry_jitter_distribution(self):
+        """The jitter decorrelates a synchronized 429 cohort: delays for
+        the same (retry_after, n_throttles) spread uniformly over
+        base * [1 - j, 1 + j] instead of collapsing to one value, and
+        replays are deterministic under the same seed."""
+        policy = expo_retry(mult=1.0, growth=2.0, jitter=0.2, seed=7)
+        base = 400.0 * 2.0 ** 2  # third bounce
+        draws = np.asarray([policy(400.0, 3) for _ in range(400)])
+        assert draws.min() >= 0.8 * base - 1e-9
+        assert draws.max() <= 1.2 * base + 1e-9
+        # genuinely spread (a lockstep cohort would be a point mass) and
+        # roughly uniform: both halves of the band are populated
+        assert np.unique(draws).size > 390
+        assert draws.std() > 0.08 * base
+        lo_half = (draws < base).mean()
+        assert 0.35 < lo_half < 0.65
+        # seeded determinism: an identical policy replays identically
+        replay = expo_retry(mult=1.0, growth=2.0, jitter=0.2, seed=7)
+        assert [replay(400.0, 3) for _ in range(400)] == list(draws)
+        # jitter=0 recovers the exact geometric schedule (and the cap)
+        exact = expo_retry(mult=1.0, growth=3.0, jitter=0.0)
+        assert exact(400.0, 1) == 400.0
+        assert exact(400.0, 3) == 3600.0
+        assert exact(400.0, 20) == 60_000.0
 
 
 class TestSessionLifecycle:
@@ -326,6 +353,69 @@ class TestSessionLifecycle:
         explicit = Request(rid=0, prompt=None, max_new=100.0, p50=100.0,
                            bucket=2, p90=555.0)
         assert explicit.resolved_p90() == 555.0
+
+
+class TestDonationSafety:
+    """The fused tick's perf contract: the (W,) pool is donated (the
+    device reuses the buffers in place, the host never rematerializes
+    them), and a drained session's polls are host-only no-ops."""
+
+    def _session(self, window=16):
+        phys = default_physics()
+        return ClientSession(
+            MockProvider(phys, dt_ms=25.0), strategy("final_adrr_olc"),
+            SessionConfig(window=window, max_grants=2, dt_ms=25.0),
+            clock="virtual", phys=phys)
+
+    def test_fused_tick_donates_pool_buffers(self):
+        """Every (W,)-sized device buffer of the pre-poll (batch, state)
+        pool must be consumed by the fused step — a silently dropped
+        donation would double the pool's memory and re-copy it every
+        poll.  (A handful of scalar/(K,) fields legitimately escape:
+        the deferred-apply decision in `_pending` keeps aliases of
+        deficit/rr_turn/inflight alive across the epoch boundary, so
+        XLA declines those donations — bytes, not the O(W) pool.)"""
+        sess = self._session()
+        sess.submit(Request(rid=0, prompt=None, max_new=25.0, p50=25.0,
+                            bucket=0))
+        sess.poll()  # fold the warmup-fresh pool through one real epoch
+        w = sess.cfg.window
+        before = [x for x in jax.tree_util.tree_leaves(
+            (sess._win_batch, sess._dev_state)) if x.size >= w]
+        assert len(before) >= 14  # the pool really is (W,)-columnar
+        sess.poll()
+        assert all(x.is_deleted() for x in before)
+
+    def test_post_drain_poll_is_transfer_free(self):
+        """After drain() the pool is empty and the epoch is a fixpoint:
+        poll() must replay the cached result without touching the
+        device at all — no transfers in either direction."""
+        sess = self._session()
+        for i in range(4):
+            sess.submit(Request(rid=i, prompt=None, max_new=25.0, p50=25.0,
+                                bucket=0))
+        sess.drain(max_polls=4000)
+        assert sess._idle_cache is not None
+        with jax.transfer_guard("disallow"):
+            r1 = sess.poll()
+            r2 = sess.poll()
+        assert not r1.progressed and not r2.progressed
+        assert r1.n_live == 0
+        assert r2.now_ms > r1.now_ms  # the clock still advances
+
+    def test_submit_after_drain_invalidates_idle_cache(self):
+        """A new submission must break the fixpoint: the next poll goes
+        back through the device and the request completes."""
+        sess = self._session()
+        sess.submit(Request(rid=0, prompt=None, max_new=25.0, p50=25.0,
+                            bucket=0))
+        sess.drain(max_polls=4000)
+        assert sess._idle_cache is not None
+        sess.submit(Request(rid=1, prompt=None, max_new=25.0, p50=25.0,
+                            bucket=0, arrival_s=sess.now_ms() / 1e3))
+        assert sess._idle_cache is None
+        out = sess.drain(max_polls=4000)
+        assert out[1].status == "completed"
 
 
 class _EchoProvider:
