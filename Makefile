@@ -1,9 +1,13 @@
 # Developer entry points. `make test` is the tier-1 verification command.
 PY := python
 export PYTHONPATH := src
+# never write bytecode under src/ — check-clean fails on stray
+# __pycache__ dirs there (editable installs / PYTHONPATH runs leave them)
+export PYTHONDONTWRITEBYTECODE := 1
 
 .PHONY: test test-fast bench bench-smoke bench-sched bench-scale \
-	bench-scenarios bench-client serve-smoke check-bench check-clean ci
+	bench-scenarios bench-client serve-smoke check-bench check-clean \
+	lint ci
 
 # Tier-1: full test suite (ROADMAP.md)
 test:
@@ -82,9 +86,27 @@ check-clean:
 	if [ -n "$$loose" ]; then \
 		echo "ERROR: bytecode not covered by .gitignore:"; \
 		echo "$$loose"; exit 1; \
-	fi; echo "check-clean: no tracked or unignored __pycache__/*.pyc"
+	fi; \
+	stray=$$(find src -type d -name __pycache__ 2>/dev/null || true); \
+	if [ -n "$$stray" ]; then \
+		echo "ERROR: stray __pycache__ under src/ (editable install?):"; \
+		echo "$$stray"; exit 1; \
+	fi; echo "check-clean: no tracked, unignored, or stray bytecode"
+
+# Static analysis gate (DESIGN.md "Static analysis"): ruff first when
+# installed (pyflakes/E9 baseline — CI installs it via requirements.txt;
+# the container image may not have it, reprolint's RPL006 covers the
+# import-hygiene core either way), then the reprolint invariant rules.
+# Nonzero exit on any unsuppressed finding.
+lint:
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src tests benchmarks; \
+	else \
+		echo "lint: ruff not installed; relying on reprolint RPL006"; \
+	fi
+	$(PY) -m repro.analysis.lint src tests benchmarks
 
 # CI entry point (.github/workflows/ci.yml runs exactly this): hygiene
-# check, tier-1 tests, CI-sized bench smoke, serving smoke,
-# bench-regression gate
-ci: check-clean test bench-smoke serve-smoke check-bench
+# check, lint gate (fail fast, before the expensive suites), tier-1
+# tests, CI-sized bench smoke, serving smoke, bench-regression gate
+ci: check-clean lint test bench-smoke serve-smoke check-bench

@@ -18,7 +18,7 @@ import json
 import os
 
 from repro.core.policy import strategy
-from repro.sim import SimConfig, WorkloadConfig, run_cell, summarize
+from repro.sim import WorkloadConfig, run_cell, summarize
 from repro.sim.provider import physics_for_arch
 from repro.sim.workload import CONGESTION_MULT, _MEAN_TOKENS
 

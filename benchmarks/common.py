@@ -24,8 +24,6 @@ if _XLA_FLAG not in os.environ.get("XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = (
         os.environ.get("XLA_FLAGS", "") + " " + _XLA_FLAG).strip()
 
-import numpy as np
-
 from repro.core.policy import PolicyConfig
 from repro.sim import SimConfig, WorkloadConfig, run_cell, summarize
 

@@ -48,7 +48,6 @@ import repro.sim.engine as eng  # noqa: E402
 from repro.core.policy import base_policy, kclass_policy, n_classes  # noqa: E402
 from repro.core.scheduler import schedule_batch, schedule_slot  # noqa: E402
 from repro.core.types import (  # noqa: E402
-    RequestBatch,
     WindowCarry,
     init_sim_state,
 )
@@ -62,7 +61,6 @@ from repro.sim import (  # noqa: E402
 )
 
 from benchmarks.common import (  # noqa: E402
-    TABLE_DIR,
     Timer,
     merge_rows,
     write_csv,

@@ -5,12 +5,11 @@ Also emits the overload-action histogram by bucket (Fig 5): rejections
 must concentrate on xlong; shorts are never rejected.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policy import strategy, with_bucket_policy
-from repro.core.types import REJECTED, SHORT
-from repro.sim import SimConfig, default_physics, generate, run_sim
+from repro.core.types import REJECTED
+from repro.sim import default_physics, generate, run_sim
 from repro.sim.workload import WorkloadConfig
 
 from benchmarks.common import SIM, N_REQ, cell, fmt, row_from_summary, write_csv

@@ -5,8 +5,6 @@ Final (OLC) fixed, all four regimes.
 Validates: graceful degradation — no cliff; completion stays ~flat in
 balanced regimes; the response is graded in heavy regimes.
 """
-import numpy as np
-
 from repro.core.policy import strategy
 from repro.sim.workload import REGIMES
 

@@ -26,7 +26,6 @@ analytic side).  MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D
 import argparse
 import dataclasses
 import json
-import math
 
 from repro.config import SHAPES
 from repro.configs import ARCHS

@@ -3,9 +3,6 @@ cutoffs and backoff perturbed +-20% from baseline, coarse priors fixed.
 
 Validates: local stability (no unstable collapse; modest metric drift).
 """
-import jax.numpy as jnp
-import numpy as np
-
 from repro.core.policy import base_policy
 
 from benchmarks.common import cell, row_from_summary, write_csv

@@ -1,0 +1,10 @@
+"""reprolint: AST-based invariant checker for the repro codebase.
+
+Entry point: ``python -m repro.analysis.lint src tests benchmarks``.
+Rules live in `repro.analysis.rules`; configuration in the
+``[tool.reprolint]`` table of pyproject.toml. Stdlib-only by design —
+the lint pass runs in CI before jax/numpy install.
+"""
+from repro.analysis.walker import Finding, SourceFile
+
+__all__ = ["Finding", "SourceFile"]

@@ -1,0 +1,151 @@
+"""Load the ``[tool.reprolint]`` manifest from pyproject.toml.
+
+The manifest declares which modules are bit-exactness-critical (RPL001
+only fires there), the names `pinned`-discipline applies to, where the
+Pallas kernel packages live, and callables whose donated positions the
+dataflow rule can't see locally (bound methods built at runtime).
+
+Parsing prefers tomllib (3.11+), falls back to tomli, and finally to a
+minimal line-oriented parser good enough for the subset this manifest
+uses — the linter must run on a bare CI interpreter with no installs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from pathlib import Path
+from typing import Any
+
+try:  # Python 3.11+
+    import tomllib as _toml
+except ImportError:  # pragma: no cover - depends on interpreter
+    try:
+        import tomli as _toml  # type: ignore[no-redef]
+    except ImportError:
+        _toml = None  # type: ignore[assignment]
+
+DEFAULTS: dict[str, Any] = {
+    "critical-modules": [],
+    "pinned-names": ["pinned"],
+    "sensitive-names": [],
+    "kernels-root": "src/repro/kernels",
+    "kernel-test-file": "tests/test_kernels.py",
+    "lane": 128,
+    "donating-callables": {},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Manifest:
+    critical_modules: tuple[str, ...]
+    pinned_names: tuple[str, ...]
+    sensitive_names: tuple[str, ...]
+    kernels_root: str
+    kernel_test_file: str
+    lane: int
+    # dotted callable name -> donated positional indices, for donating
+    # call sites the per-module analysis can't resolve statically
+    donating_callables: dict[str, tuple[int, ...]]
+
+    def is_critical(self, rel: str) -> bool:
+        return any(rel.endswith(m) for m in self.critical_modules)
+
+
+def _fallback_parse(text: str) -> dict[str, Any]:
+    """Minimal TOML subset: [section] headers, key = value with string /
+    int / flat array-of-{string,int} values. Enough for [tool.reprolint]
+    when no real TOML parser is importable."""
+    data: dict[str, Any] = {}
+    section: dict[str, Any] = data
+    buf = ""
+    key = ""
+    for raw in text.splitlines():
+        line = raw.strip()
+        if buf:  # continuation of a multi-line array
+            buf += " " + line
+            if _balanced(buf):
+                section[key] = _parse_value(buf)
+                buf = ""
+            continue
+        if not line or line.startswith("#"):
+            continue
+        m = re.match(r"\[([^\]]+)\]$", line)
+        if m:
+            section = data
+            for part in m.group(1).split("."):
+                section = section.setdefault(part.strip().strip('"'), {})
+            continue
+        if "=" in line:
+            key, _, val = line.partition("=")
+            key = key.strip().strip('"')
+            val = val.strip()
+            if val.startswith("[") and not _balanced(val):
+                buf = val
+            else:
+                section[key] = _parse_value(val)
+    return data
+
+
+def _balanced(s: str) -> bool:
+    return s.count("[") == s.count("]")
+
+
+def _parse_value(val: str) -> Any:
+    val = val.split("#", 1)[0].strip() if not val.startswith('"') else val
+    if val.startswith("["):
+        inner = val.strip()[1:-1]
+        items = [s.strip() for s in inner.split(",") if s.strip()]
+        return [_parse_value(s) for s in items]
+    if val.startswith('"') or val.startswith("'"):
+        return val[1:-1]
+    if val in ("true", "false"):
+        return val == "true"
+    try:
+        return int(val)
+    except ValueError:
+        return val
+
+
+def load_manifest(root: Path) -> Manifest:
+    """Read [tool.reprolint] from <root>/pyproject.toml (defaults if
+    absent)."""
+    pyproject = root / "pyproject.toml"
+    table: dict[str, Any] = {}
+    if pyproject.is_file():
+        text = pyproject.read_text(encoding="utf-8")
+        if _toml is not None:
+            data = _toml.loads(text)
+        else:  # pragma: no cover - no-TOML interpreter
+            data = _fallback_parse(text)
+        table = data.get("tool", {}).get("reprolint", {})
+    cfg = dict(DEFAULTS)
+    cfg.update(table)
+    donating: dict[str, tuple[int, ...]] = {}
+    for name, positions in dict(cfg["donating-callables"]).items():
+        donating[name] = tuple(int(p) for p in positions)
+    return Manifest(
+        critical_modules=tuple(cfg["critical-modules"]),
+        pinned_names=tuple(cfg["pinned-names"]),
+        sensitive_names=tuple(cfg["sensitive-names"]),
+        kernels_root=str(cfg["kernels-root"]),
+        kernel_test_file=str(cfg["kernel-test-file"]),
+        lane=int(cfg["lane"]),
+        donating_callables=donating,
+    )
+
+
+def manifest_for_tests(**overrides: Any) -> Manifest:
+    """Construct a Manifest from keyword overrides (fixture tests)."""
+    cfg = dict(DEFAULTS)
+    for k, v in overrides.items():
+        cfg[k.replace("_", "-")] = v
+    donating = {n: tuple(p) for n, p in dict(cfg["donating-callables"]).items()}
+    return Manifest(
+        critical_modules=tuple(cfg["critical-modules"]),
+        pinned_names=tuple(cfg["pinned-names"]),
+        sensitive_names=tuple(cfg["sensitive-names"]),
+        kernels_root=str(cfg["kernels-root"]),
+        kernel_test_file=str(cfg["kernel-test-file"]),
+        lane=int(cfg["lane"]),
+        donating_callables=donating,
+    )

@@ -1,0 +1,63 @@
+"""Rule registry for reprolint.
+
+A rule is a callable ``(project: Project) -> Iterable[Finding]``
+registered under its ID with the `rule` decorator. Project-scope rules
+see every file at once (RPL005 checks package structure across the
+tree); most rules just loop over ``project.files``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Callable, Iterable, Optional
+
+from repro.analysis.manifest import Manifest
+from repro.analysis.walker import Finding, SourceFile
+
+RuleFn = Callable[["Project"], Iterable[Finding]]
+
+_RULES: dict[str, tuple[str, RuleFn]] = {}
+
+
+def rule(rule_id: str, summary: str) -> Callable[[RuleFn], RuleFn]:
+    def deco(fn: RuleFn) -> RuleFn:
+        if rule_id in _RULES:
+            raise ValueError(f"duplicate rule id {rule_id}")
+        _RULES[rule_id] = (summary, fn)
+        return fn
+    return deco
+
+
+def all_rules() -> dict[str, tuple[str, RuleFn]]:
+    return dict(_RULES)
+
+
+@dataclasses.dataclass
+class Project:
+    """Everything one lint invocation sees: parsed files + manifest."""
+
+    root: Path
+    files: list[SourceFile]
+    manifest: Manifest
+
+    def file(self, rel: str) -> Optional[SourceFile]:
+        for sf in self.files:
+            if sf.rel == rel:
+                return sf
+        return None
+
+    def run(self, only: Optional[set[str]] = None) -> list[Finding]:
+        """Run every registered rule; suppression is applied here so
+        rules never have to think about it. Suppressed findings are
+        kept (marked) so --show-suppressed can list them."""
+        out: list[Finding] = []
+        for rule_id, (_summary, fn) in sorted(_RULES.items()):
+            if only is not None and rule_id not in only:
+                continue
+            for f in fn(self):
+                sf = self.file(f.path)
+                if sf is not None and sf.is_suppressed(f.rule, f.line):
+                    f = dataclasses.replace(f, suppressed=True)
+                out.append(f)
+        out.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+        return out

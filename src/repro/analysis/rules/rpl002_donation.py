@@ -1,0 +1,239 @@
+"""RPL002 — use-after-donate dataflow.
+
+`jax.jit(..., donate_argnums=...)` hands the argument buffers to XLA;
+after the call the old Arrays are deleted and any host read of a stale
+binding raises (or worse, silently observes freed memory under some
+backends). The rule tracks, per function body in statement order, the
+bindings passed in donated positions of a known donating callable; a
+later load of such a binding is a finding until the name is rebound.
+
+Donating callables come from three sources: module-level
+``NAME = jax.jit(fn, donate_argnums=(...))`` assignments, immediate
+``jax.jit(...)(args)`` calls, and the manifest's
+``[tool.reprolint.donating-callables]`` table for callables built at
+runtime (bound methods like ``self._tick``). Non-literal donate_argnums
+(e.g. ``donate_argnums=spec.donate`` in launch/dryrun.py) can't be
+resolved statically and are skipped — those sites are audited by hand.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.registry import Project, rule
+from repro.analysis.walker import (
+    Finding, SourceFile, assigned_names, call_kwarg, dotted,
+)
+
+_JIT_NAMES = {"jax.jit", "jax.api.jit"}
+
+
+def _literal_positions(node: ast.expr) -> Optional[tuple[int, ...]]:
+    """donate_argnums as a literal int or tuple/list of ints, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, int) \
+                    and not isinstance(e.value, bool):
+                out.append(e.value)
+            else:
+                return None
+        return tuple(out)
+    return None
+
+
+def _donating_jit(sf: SourceFile, node: ast.AST) -> Optional[tuple[int, ...]]:
+    """If `node` is a jax.jit(...) call with literal donate_argnums,
+    return the donated positions."""
+    if not isinstance(node, ast.Call) or sf.qualified(node.func) not in _JIT_NAMES:
+        return None
+    kw = call_kwarg(node, "donate_argnums")
+    if kw is None:
+        return None
+    return _literal_positions(kw)
+
+
+def _module_donators(sf: SourceFile, project: Project) -> dict[str, tuple[int, ...]]:
+    """dotted name -> donated positions, seeded from the manifest and
+    extended with module-level `NAME = jax.jit(..., donate_argnums=...)`
+    (and `self.NAME = ...` / `fn = ...` inside function bodies)."""
+    out = dict(project.manifest.donating_callables)
+    if sf.tree is None:
+        return out
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        pos = _donating_jit(sf, node.value)
+        if pos is None:
+            continue
+        for t in node.targets:
+            d = dotted(t)
+            if d is not None:
+                out[d] = pos
+    return out
+
+
+def _donated_args(call: ast.Call, positions: tuple[int, ...]) -> Iterator[str]:
+    for i in positions:
+        if i < len(call.args):
+            d = dotted(call.args[i])
+            if d is not None:
+                yield d
+
+
+def _is_donating_call(sf: SourceFile, call: ast.Call,
+                      donators: dict[str, tuple[int, ...]]
+                      ) -> Optional[tuple[int, ...]]:
+    """Donated positions if `call` invokes a known donating callable —
+    by name, or directly as `jax.jit(f, donate_argnums=...)(args)`."""
+    d = dotted(call.func)
+    if d is not None and d in donators:
+        return donators[d]
+    pos = _donating_jit(sf, call.func)
+    if pos is not None:
+        return pos
+    return None
+
+
+class _BodyScan:
+    """Statement-order walk of one function body with a taint set of
+    donated dotted names. Control flow is handled conservatively:
+    branches are scanned in order against the same taint set (a read in
+    either arm of an `if` after a donation is a finding), and loop
+    bodies are scanned twice so a donation late in the body taints a
+    read early in the next iteration."""
+
+    def __init__(self, sf: SourceFile, donators: dict[str, tuple[int, ...]]):
+        self.sf = sf
+        self.donators = donators
+        self.taint: dict[str, int] = {}  # dotted name -> donation line
+        self.findings: list[Finding] = []
+        self._seen: set[tuple[int, int, str]] = set()
+
+    def scan_body(self, body: list[ast.stmt]) -> None:
+        for stmt in body:
+            self.scan_stmt(stmt)
+
+    def scan_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return  # nested defs get their own scan
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            # two passes over the loop body: pass 2 sees taint created
+            # at the bottom of pass 1 (wrap-around reads)
+            for _ in range(2):
+                self.scan_body(stmt.body)
+            self.scan_body(stmt.orelse)
+            return
+        if isinstance(stmt, (ast.If,)):
+            self.scan_body(stmt.body)
+            self.scan_body(stmt.orelse)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self.scan_expr_reads(item.context_expr)
+            self.scan_body(stmt.body)
+            return
+        if isinstance(stmt, ast.Try):
+            self.scan_body(stmt.body)
+            for h in stmt.handlers:
+                self.scan_body(h.body)
+            self.scan_body(stmt.orelse)
+            self.scan_body(stmt.finalbody)
+            return
+        if isinstance(stmt, ast.Delete):
+            for t in stmt.targets:
+                self._clear(t)
+            return
+        if isinstance(stmt, ast.Assign):
+            self.scan_expr_reads(stmt.value)
+            self.scan_value_for_donation(stmt.value)
+            for t in stmt.targets:
+                self._clear(t)
+            return
+        if isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self.scan_expr_reads(stmt.value)
+                self.scan_value_for_donation(stmt.value)
+            self._clear(stmt.target)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            # `x += ...` reads x first, so it counts as a use
+            self.scan_expr_reads(stmt.target)
+            self.scan_expr_reads(stmt.value)
+            self.scan_value_for_donation(stmt.value)
+            self._clear(stmt.target)
+            return
+        # generic statement (Expr/Return/Assert/...): everything is a read
+        self.scan_expr_reads(stmt)
+        self.scan_value_for_donation(stmt)
+
+    def scan_value_for_donation(self, node: ast.AST) -> None:
+        """Find donating calls anywhere in an expression and taint their
+        donated args (after reads in the same statement were checked)."""
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                pos = _is_donating_call(self.sf, sub, self.donators)
+                if pos is not None:
+                    for name in _donated_args(sub, pos):
+                        self.taint[name] = sub.lineno
+
+    def scan_expr_reads(self, node: ast.AST) -> None:
+        # Taint only holds donations from *previous* statements (reads in
+        # a statement are checked before its own donations register), so
+        # every tainted read here is genuinely stale — including one
+        # passed back into another donating call.
+        if not self.taint:
+            return
+        for sub in ast.walk(node):
+            d = dotted(sub) if isinstance(sub, (ast.Name, ast.Attribute)) else None
+            if d is None:
+                continue
+            hit = self._tainted(d)
+            if hit is None:
+                continue
+            key = (sub.lineno, sub.col_offset, d)
+            if key in self._seen:  # loop bodies are scanned twice
+                continue
+            self._seen.add(key)
+            self.findings.append(Finding(
+                "RPL002", self.sf.rel, sub.lineno, sub.col_offset,
+                f"read of `{d}` after it was donated to a jitted call at "
+                f"line {hit} (use-after-donate); rebind it from the call "
+                f"result before reading"))
+
+    def _tainted(self, name: str) -> Optional[int]:
+        if name in self.taint:
+            return self.taint[name]
+        # a read of a parent object (`self._pool.x`) through a tainted
+        # dotted prefix is also stale
+        for t, line in self.taint.items():
+            if name.startswith(t + "."):
+                return line
+        return None
+
+    def _clear(self, target: ast.expr) -> None:
+        for name in assigned_names(target):
+            self.taint.pop(name, None)
+            for t in list(self.taint):
+                if t.startswith(name + "."):
+                    del self.taint[t]
+
+
+@rule("RPL002", "read of a binding after it was passed in a donated "
+      "position of a jitted call")
+def check(project: Project) -> Iterator[Finding]:
+    for sf in project.files:
+        if sf.tree is None:
+            continue
+        donators = _module_donators(sf, project)
+        if not donators:
+            continue
+        for node in ast.walk(sf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scan = _BodyScan(sf, donators)
+                scan.scan_body(node.body)
+                yield from scan.findings

@@ -1,0 +1,184 @@
+"""RPL003 — host synchronization inside traced (jitted / scan-body)
+functions.
+
+`.item()`, `float()`, `int()`, `bool()`, `np.asarray(...)` on a traced
+value force a device→host transfer at trace time — inside `jax.jit` or
+a `lax.scan` body they either fail (ConcretizationTypeError) or, when
+they happen to succeed on a constant, silently bake a recompile +
+transfer hazard into the hot path that the runtime `transfer_guard`
+tests only catch when that exact branch executes. Shape/dtype reads
+(`x.shape[0]`, `int(x.ndim)`, `len(xs)`) are static and exempt.
+
+Traced functions are found module-locally: `@jax.jit`-style decorators
+(through `functools.partial`), callables passed at the traced positions
+of jit/vmap/pmap/scan/fori_loop/while_loop/cond/pallas_call, and the
+transitive closure over module-local helpers called from traced bodies.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.registry import Project, rule
+from repro.analysis.walker import Finding, SourceFile, dotted, unwrap_partial
+
+# transform -> positional indices whose argument is traced as a function
+_TRACED_POSITIONS = {
+    "jax.jit": (0,),
+    "jax.vmap": (0,),
+    "jax.pmap": (0,),
+    "jax.grad": (0,),
+    "jax.value_and_grad": (0,),
+    "jax.checkpoint": (0,),
+    "jax.lax.scan": (0,),
+    "jax.lax.map": (0,),
+    "jax.lax.fori_loop": (2,),
+    "jax.lax.while_loop": (0, 1),
+    "jax.lax.cond": (1, 2),
+    "jax.lax.switch": (1, 2, 3, 4, 5),
+    "jax.experimental.pallas.pallas_call": (0,),
+}
+_DECORATOR_TRANSFORMS = {"jax.jit", "jax.vmap", "jax.pmap", "jax.grad",
+                         "jax.value_and_grad", "jax.checkpoint"}
+
+_HOST_CASTS = {"float", "int", "bool", "complex"}
+_HOST_METHODS = {"item", "tolist", "block_until_ready"}
+_HOST_FUNCS = {"numpy.asarray", "numpy.array", "numpy.float32",
+               "numpy.float64", "numpy.int32", "numpy.int64"}
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize"}
+
+
+def _local_functions(tree: ast.Module) -> dict[str, ast.FunctionDef]:
+    """Named defs at any nesting level (scan bodies are usually nested
+    closures)."""
+    out: dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.setdefault(node.name, node)  # first wins on collision
+    return out
+
+
+def _traced_roots(sf: SourceFile, tree: ast.Module,
+                  funcs: dict[str, ast.FunctionDef]) -> set[str]:
+    roots: set[str] = set()
+    for name, fn in funcs.items():
+        for dec in fn.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            q = sf.qualified(target)
+            if q in _DECORATOR_TRANSFORMS:
+                roots.add(name)
+            elif q in ("functools.partial", "partial") \
+                    and isinstance(dec, ast.Call) and dec.args:
+                inner = sf.qualified(dec.args[0])
+                if inner in _DECORATOR_TRANSFORMS:
+                    roots.add(name)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        q = sf.qualified(node.func)
+        if q not in _TRACED_POSITIONS:
+            continue
+        for i in _TRACED_POSITIONS[q]:
+            if i < len(node.args):
+                target = unwrap_partial(sf, node.args[i])
+                d = dotted(target)
+                if d is not None and d in funcs:
+                    roots.add(d)
+    return roots
+
+
+def _transitive(sf: SourceFile, funcs: dict[str, ast.FunctionDef],
+                roots: set[str]) -> set[str]:
+    closed = set(roots)
+    frontier = list(roots)
+    while frontier:
+        name = frontier.pop()
+        fn = funcs.get(name)
+        if fn is None:
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                d = dotted(node.func)
+                if d in funcs and d not in closed:
+                    closed.add(d)
+                    frontier.append(d)
+    return closed
+
+
+def _is_static_read(node: ast.Call) -> bool:
+    """True when the call's arguments only touch static metadata —
+    shapes, dtypes, len(), or plain constants — so the cast never sees
+    a traced value."""
+    args = list(node.args) + [kw.value for kw in node.keywords]
+    if not args:
+        return True
+    for arg in args:
+        for sub in ast.walk(arg):
+            if isinstance(sub, ast.Attribute) and sub.attr in _STATIC_ATTRS:
+                return True
+            if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) \
+                    and sub.func.id == "len":
+                return True
+    return all(isinstance(a, ast.Constant) for a in args)
+
+
+def _host_sync_hit(sf: SourceFile, node: ast.Call) -> Optional[str]:
+    if isinstance(node.func, ast.Name) and node.func.id in _HOST_CASTS \
+            and len(node.args) == 1 and not node.keywords:
+        if _is_static_read(node):
+            return None
+        return f"{node.func.id}()"
+    if isinstance(node.func, ast.Attribute) and node.func.attr in _HOST_METHODS:
+        return f".{node.func.attr}()"
+    q = sf.qualified(node.func)
+    if q in _HOST_FUNCS:
+        if _is_static_read(node):
+            return None
+        return f"{q.rpartition('.')[2]}() [numpy]"
+    return None
+
+
+@rule("RPL003", "host-synchronizing call inside a jitted / scan-body "
+      "function")
+def check(project: Project) -> Iterator[Finding]:
+    for sf in project.files:
+        if sf.tree is None:
+            continue
+        funcs = _local_functions(sf.tree)
+        traced = _transitive(
+            sf, funcs, _traced_roots(sf, sf.tree, funcs))
+        for name in sorted(traced):
+            fn = funcs[name]
+            for node in ast.walk(fn):
+                # nested defs inside a traced fn are traced too (they
+                # are in `funcs` and reachable, so they get their own
+                # pass); don't double-report their bodies here
+                if isinstance(node, ast.Call):
+                    if _owner_function(fn, funcs, node) is not fn:
+                        continue
+                    hit = _host_sync_hit(sf, node)
+                    if hit is not None:
+                        yield Finding(
+                            "RPL003", sf.rel, node.lineno, node.col_offset,
+                            f"{hit} inside traced function `{name}` forces "
+                            f"a host sync (transfer / recompile hazard); "
+                            f"hoist it out of the traced region")
+
+
+def _owner_function(current: ast.FunctionDef,
+                    funcs: dict[str, ast.FunctionDef],
+                    node: ast.AST) -> ast.FunctionDef:
+    """Innermost named def containing `node` (by position), so a call
+    in a nested def isn't attributed to the outer traced fn as well."""
+    best = current
+    n0 = (node.lineno, node.col_offset)  # type: ignore[attr-defined]
+    for fn in funcs.values():
+        if fn is current or fn is best:
+            continue
+        f0 = (fn.lineno, fn.col_offset)
+        f1 = (fn.end_lineno, fn.end_col_offset)
+        b0 = (best.lineno, best.col_offset)
+        b1 = (best.end_lineno, best.end_col_offset)
+        if f0 <= n0 <= f1 and b0 <= f0 and f1 <= b1:
+            best = fn
+    return best

@@ -1,0 +1,199 @@
+"""RPL004 — static-arg hashability for jit cache keys.
+
+Arguments declared static via `static_argnums` / `static_argnames` are
+hashed into the jit cache key. A list/dict/set/ndarray there raises
+`TypeError: unhashable type` at the first call — or, for an ndarray,
+sometimes later on a cache probe. The rule records every jit wrapper
+with static args (decorated defs and ``NAME = jax.jit(f, static_...)``
+assignments) and flags call sites / parameter defaults that pass a
+value that is unhashable by construction: display literals (`[...]`,
+`{...}`), comprehensions, or calls to list/dict/set/np.array-likes.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.registry import Project, rule
+from repro.analysis.walker import (
+    Finding, SourceFile, call_kwarg, dotted, unwrap_partial,
+)
+
+_JIT_NAMES = {"jax.jit", "jax.pmap"}
+_UNHASHABLE_FACTORIES = {
+    "list", "dict", "set", "bytearray",
+    "numpy.array", "numpy.asarray", "numpy.zeros", "numpy.ones",
+    "jax.numpy.array", "jax.numpy.asarray", "jax.numpy.zeros",
+    "jax.numpy.ones",
+}
+
+
+def _unhashable_reason(sf: SourceFile, node: ast.expr) -> Optional[str]:
+    if isinstance(node, (ast.List, ast.ListComp)):
+        return "list"
+    if isinstance(node, (ast.Dict, ast.DictComp)):
+        return "dict"
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return "set"
+    if isinstance(node, ast.Call):
+        q = sf.qualified(node.func)
+        if q in _UNHASHABLE_FACTORIES:
+            return q.rpartition(".")[2]
+    return None
+
+
+def _static_decl(sf: SourceFile, call: ast.Call
+                 ) -> Optional[tuple[tuple[int, ...], tuple[str, ...]]]:
+    """(static positions, static names) if `call` is jax.jit/pmap with
+    literal static_argnums/static_argnames, else None."""
+    if sf.qualified(call.func) not in _JIT_NAMES:
+        return None
+    nums: tuple[int, ...] = ()
+    names: tuple[str, ...] = ()
+    kw = call_kwarg(call, "static_argnums")
+    if kw is not None:
+        nums = _int_tuple(kw) or ()
+    kw = call_kwarg(call, "static_argnames")
+    if kw is not None:
+        names = _str_tuple(kw) or ()
+    if not nums and not names:
+        return None
+    return nums, names
+
+
+def _int_tuple(node: ast.expr) -> Optional[tuple[int, ...]]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        vals = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                vals.append(e.value)
+            else:
+                return None
+        return tuple(vals)
+    return None
+
+
+def _str_tuple(node: ast.expr) -> Optional[tuple[str, ...]]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        vals = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                vals.append(e.value)
+            else:
+                return None
+        return tuple(vals)
+    return None
+
+
+class _Wrapper:
+    """One jit wrapper with static args: how calls map to static slots."""
+
+    def __init__(self, nums: tuple[int, ...], names: tuple[str, ...],
+                 fn: Optional[ast.FunctionDef]):
+        self.nums = nums
+        self.names = set(names)
+        self.param_names: list[str] = []
+        if fn is not None:
+            self.param_names = [a.arg for a in fn.args.args]
+            # static_argnames imply positions when the signature is known
+            for n in names:
+                if n in self.param_names:
+                    self.nums = self.nums + (self.param_names.index(n),)
+
+    def static_values(self, call: ast.Call) -> Iterator[ast.expr]:
+        for i in self.nums:
+            if i < len(call.args):
+                yield call.args[i]
+        for kw in call.keywords:
+            if kw.arg is not None and kw.arg in self.names:
+                yield kw.value
+
+
+def _collect_wrappers(sf: SourceFile,
+                      funcs: dict[str, ast.FunctionDef]
+                      ) -> dict[str, _Wrapper]:
+    out: dict[str, _Wrapper] = {}
+    # decorated defs: @jax.jit(static_argnums=...) and
+    # @functools.partial(jax.jit, static_argnames=...)
+    for name, fn in funcs.items():
+        for dec in fn.decorator_list:
+            if not isinstance(dec, ast.Call):
+                continue
+            decl = _static_decl(sf, dec)
+            if decl is None and sf.qualified(dec.func) in (
+                    "functools.partial", "partial") and dec.args:
+                inner = dec.args[0]
+                if sf.qualified(inner) in _JIT_NAMES:
+                    synthetic = ast.Call(func=inner, args=[],
+                                         keywords=dec.keywords)
+                    decl = _static_decl(sf, synthetic)
+            if decl is not None:
+                out[name] = _Wrapper(decl[0], decl[1], fn)
+    # assignments: NAME = jax.jit(f, static_...)
+    for node in ast.walk(sf.tree):  # type: ignore[arg-type]
+        if not isinstance(node, ast.Assign) or not isinstance(node.value, ast.Call):
+            continue
+        decl = _static_decl(sf, node.value)
+        if decl is None:
+            continue
+        target_fn = None
+        if node.value.args:
+            inner = unwrap_partial(sf, node.value.args[0])
+            d = dotted(inner)
+            if d is not None:
+                target_fn = funcs.get(d)
+        for t in node.targets:
+            d = dotted(t)
+            if d is not None:
+                out[d] = _Wrapper(decl[0], decl[1], target_fn)
+    return out
+
+
+@rule("RPL004", "unhashable value passed/defaulted into a "
+      "static_argnums/static_argnames slot")
+def check(project: Project) -> Iterator[Finding]:
+    for sf in project.files:
+        if sf.tree is None:
+            continue
+        funcs = {n.name: n for n in ast.walk(sf.tree)
+                 if isinstance(n, ast.FunctionDef)}
+        wrappers = _collect_wrappers(sf, funcs)
+        # defaults of the wrapped function for its static params
+        for name, w in wrappers.items():
+            fn = funcs.get(name)
+            if fn is None or not fn.args.defaults:
+                continue
+            offset = len(fn.args.args) - len(fn.args.defaults)
+            for i, default in enumerate(fn.args.defaults):
+                pos = offset + i
+                pname = fn.args.args[pos].arg
+                if pos in w.nums or pname in w.names:
+                    reason = _unhashable_reason(sf, default)
+                    if reason is not None:
+                        yield Finding(
+                            "RPL004", sf.rel, default.lineno,
+                            default.col_offset,
+                            f"default for static arg `{pname}` of `{name}` "
+                            f"is an unhashable {reason}; use a tuple / "
+                            f"frozen value")
+        if not wrappers:
+            continue
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func)
+            if d is None or d not in wrappers:
+                continue
+            for val in wrappers[d].static_values(node):
+                reason = _unhashable_reason(sf, val)
+                if reason is not None:
+                    yield Finding(
+                        "RPL004", sf.rel, val.lineno, val.col_offset,
+                        f"unhashable {reason} passed to static arg of "
+                        f"`{d}` — jit cache keys must hash; pass a tuple "
+                        f"or frozen dataclass")

@@ -1,0 +1,148 @@
+"""RPL005 — Pallas kernel contract.
+
+Every kernel package under the manifest's ``kernels-root`` must ship:
+
+* a ``ref.py`` with at least one ``*_ref`` oracle function (the pure
+  jnp reference the parity tests compare against), and
+* a parity test: the manifest's ``kernel-test-file`` must import at
+  least one ``*_ref`` symbol from that package.
+
+Inside kernel modules, literal ``pl.BlockSpec`` / ``pltpu.VMEM`` shapes
+must be lane-aligned — the minor (last) axis a multiple of the manifest
+lane width (128) or exactly 1 — and VMEM scratch must not accumulate in
+half precision (f32 accumulators are part of the bit-exactness story).
+Module-level int constants (``_BPAD = 128``) resolve; variable shapes
+are skipped (they're checked at runtime by the parity tests).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterator
+
+from repro.analysis.registry import Project, rule
+from repro.analysis.walker import (
+    Finding, SourceFile, literal_int, module_int_constants,
+)
+
+_SHAPE_CALLS = {
+    "jax.experimental.pallas.BlockSpec": 0,       # shape is arg 0
+    "jax.experimental.pallas.tpu.VMEM": 0,
+    "jax.experimental.pallas.tpu.SMEM": 0,
+}
+_HALF_DTYPES = {"float16", "bfloat16"}
+
+
+def _check_shape_call(sf: SourceFile, node: ast.Call, lane: int,
+                      consts: dict[str, int]) -> Iterator[Finding]:
+    q = sf.qualified(node.func)
+    if q not in _SHAPE_CALLS:
+        return
+    idx = _SHAPE_CALLS[q]
+    shape = node.args[idx] if idx < len(node.args) else None
+    if isinstance(shape, (ast.Tuple, ast.List)) and shape.elts:
+        minor = literal_int(shape.elts[-1], consts)
+        if minor is not None and minor != 1 and minor % lane != 0:
+            yield Finding(
+                "RPL005", sf.rel, shape.lineno, shape.col_offset,
+                f"{q.rpartition('.')[2]} minor axis {minor} is not "
+                f"lane-aligned (must be 1 or a multiple of {lane}); "
+                f"Mosaic pads or mis-tiles unaligned minor dims")
+    if q.endswith(".VMEM") and len(node.args) > 1:
+        dtype = node.args[1]
+        seg = None
+        if isinstance(dtype, ast.Attribute):
+            seg = dtype.attr
+        elif isinstance(dtype, ast.Name):
+            seg = dtype.id
+        if seg in _HALF_DTYPES:
+            yield Finding(
+                "RPL005", sf.rel, dtype.lineno, dtype.col_offset,
+                f"VMEM scratch in {seg}: accumulate in float32 and cast "
+                f"on the way out (half-precision accumulation breaks "
+                f"bit-exactness)")
+
+
+@rule("RPL005", "Pallas kernel package missing ref oracle / parity test, "
+      "or mis-aligned BlockSpec/VMEM shape")
+def check(project: Project) -> Iterator[Finding]:
+    man = project.manifest
+    kroot = project.root / man.kernels_root
+    test_sf = project.file(man.kernel_test_file)
+
+    # --- package-structure half: ref.py + parity-test reference ---
+    if kroot.is_dir():
+        for pkg in sorted(p for p in kroot.iterdir() if p.is_dir()):
+            if not (pkg / "__init__.py").is_file():
+                continue
+            pkg_rel = f"{man.kernels_root}/{pkg.name}".replace("\\", "/")
+            init_rel = f"{pkg_rel}/__init__.py"
+            ref = pkg / "ref.py"
+            ref_names: set[str] = set()
+            if not ref.is_file():
+                yield Finding(
+                    "RPL005", init_rel, 1, 0,
+                    f"kernel package `{pkg.name}` has no ref.py oracle "
+                    f"module (every Pallas kernel needs a jnp reference)")
+            else:
+                try:
+                    rtree = ast.parse(ref.read_text(encoding="utf-8"))
+                    # defs and re-exports both count: an oracle shared
+                    # with the model stack lives once and is re-exported
+                    ref_names = {n.name for n in ast.walk(rtree)
+                                 if isinstance(n, ast.FunctionDef)
+                                 and n.name.endswith("_ref")}
+                    for n in ast.walk(rtree):
+                        if isinstance(n, ast.ImportFrom):
+                            ref_names.update(
+                                (a.asname or a.name) for a in n.names
+                                if (a.asname or a.name).endswith("_ref"))
+                except SyntaxError:
+                    ref_names = set()
+                if not ref_names:
+                    yield Finding(
+                        "RPL005", f"{pkg_rel}/ref.py", 1, 0,
+                        f"ref.py in `{pkg.name}` defines no `*_ref` "
+                        f"oracle function")
+            if test_sf is not None and test_sf.tree is not None:
+                imported = _ref_imports_from(
+                    test_sf.tree, pkg_module=_pkg_module(man.kernels_root,
+                                                        pkg.name))
+                if ref.is_file() and ref_names and not (imported & ref_names):
+                    yield Finding(
+                        "RPL005", init_rel, 1, 0,
+                        f"no `*_ref` oracle from `{pkg.name}` is imported "
+                        f"by {man.kernel_test_file} — kernel has no parity "
+                        f"test")
+
+    # --- shape-alignment half: scan kernel modules ---
+    prefix = man.kernels_root.rstrip("/") + "/"
+    for sf in project.files:
+        if sf.tree is None or not sf.rel.startswith(prefix):
+            continue
+        consts = module_int_constants(sf.tree)
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call):
+                yield from _check_shape_call(sf, node, man.lane, consts)
+
+
+def _pkg_module(kernels_root: str, pkg_name: str) -> str:
+    """`src/repro/kernels` + `sched_score` -> `repro.kernels.sched_score`."""
+    parts = Path(kernels_root).parts
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    return ".".join(parts + (pkg_name,))
+
+
+def _ref_imports_from(tree: ast.Module, pkg_module: str) -> set[str]:
+    """Names ending in `_ref` imported (directly or via the package's
+    ref module) from `pkg_module` anywhere in the test file."""
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module and \
+                (node.module == pkg_module
+                 or node.module.startswith(pkg_module + ".")):
+            for a in node.names:
+                if a.name.endswith("_ref"):
+                    out.add(a.name)
+    return out

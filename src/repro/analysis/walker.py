@@ -1,0 +1,196 @@
+"""Source-file model and AST utilities for reprolint.
+
+A `SourceFile` owns one parsed module: its text, AST, the per-line
+suppression table (`# reprolint: disable=RPL00x[,RPL00y]` and the
+file-wide `# reprolint: disable-file=RPL00x`), the `# noqa` lines the
+import-hygiene rule honors, and an import-alias map that resolves local
+names back to canonical dotted paths (`jnp` -> `jax.numpy`, `pl` ->
+`jax.experimental.pallas`), so every rule matches on canonical names
+instead of whatever aliases a module happens to use.
+
+Everything here is stdlib-only: the linter runs before the heavy
+dependencies install in CI, so it must never import jax/numpy.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Iterable, Iterator, Optional
+
+_SUPPRESS_RE = re.compile(r"#\s*reprolint:\s*disable=([A-Z0-9_,\s]+)")
+_SUPPRESS_FILE_RE = re.compile(r"#\s*reprolint:\s*disable-file=([A-Z0-9_,\s]+)")
+_NOQA_RE = re.compile(r"#\s*noqa(?::\s*([A-Z0-9, ]+))?", re.IGNORECASE)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str          # "RPL001"
+    path: str          # repo-relative posix path
+    line: int          # 1-based
+    col: int           # 0-based
+    message: str
+    suppressed: bool = False
+
+    def render(self) -> str:
+        tag = " (suppressed)" if self.suppressed else ""
+        return f"{self.path}:{self.line}:{self.col + 1}: {self.rule} {self.message}{tag}"
+
+
+class SourceFile:
+    """A parsed module plus the lint bookkeeping rules share."""
+
+    def __init__(self, path: Path, rel: str):
+        self.path = path
+        self.rel = rel
+        self.text = path.read_text(encoding="utf-8")
+        self.lines = self.text.splitlines()
+        self.parse_error: Optional[SyntaxError] = None
+        try:
+            self.tree: Optional[ast.Module] = ast.parse(self.text)
+        except SyntaxError as e:  # surfaced as an RPL000 finding by the CLI
+            self.tree = None
+            self.parse_error = e
+        self._suppress: dict[int, set[str]] = {}
+        self._suppress_file: set[str] = set()
+        self._noqa: dict[int, Optional[set[str]]] = {}  # None = bare noqa
+        for i, line in enumerate(self.lines, start=1):
+            if "#" not in line:
+                continue
+            m = _SUPPRESS_RE.search(line)
+            if m:
+                ids = {s.strip() for s in m.group(1).split(",") if s.strip()}
+                self._suppress.setdefault(i, set()).update(ids)
+            m = _SUPPRESS_FILE_RE.search(line)
+            if m:
+                self._suppress_file.update(
+                    s.strip() for s in m.group(1).split(",") if s.strip())
+            m = _NOQA_RE.search(line)
+            if m:
+                codes = m.group(1)
+                self._noqa[i] = (
+                    None if codes is None
+                    else {s.strip().upper() for s in codes.split(",")})
+        self.aliases = (
+            import_aliases(self.tree) if self.tree is not None else {})
+
+    def is_suppressed(self, rule: str, line: int) -> bool:
+        if rule in self._suppress_file:
+            return True
+        return rule in self._suppress.get(line, set())
+
+    def has_noqa(self, line: int, code: str) -> bool:
+        """True if the line carries a bare `# noqa` or one naming `code`
+        (the flake8 convention the import-hygiene rule honors so existing
+        `# noqa: F401` markers keep working)."""
+        if line not in self._noqa:
+            return False
+        codes = self._noqa[line]
+        return codes is None or code.upper() in codes
+
+    def qualified(self, node: ast.AST) -> Optional[str]:
+        """Canonical dotted name of a Name/Attribute chain, with the
+        module's import aliases expanded at the root."""
+        d = dotted(node)
+        if d is None:
+            return None
+        root, _, rest = d.partition(".")
+        full = self.aliases.get(root, root)
+        return f"{full}.{rest}" if rest else full
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """`a.b.c` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def import_aliases(tree: ast.Module) -> dict[str, str]:
+    """local name -> canonical dotted path, from every import statement
+    in the module (any scope: kernels import inside functions)."""
+    out: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.partition(".")[0]] = (
+                    a.name if a.asname else a.name.partition(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def call_kwarg(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def literal_int(node: ast.AST, consts: dict[str, int]) -> Optional[int]:
+    """Resolve an int literal or a module-level int constant name."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    if isinstance(node, ast.Name) and node.id in consts:
+        return consts[node.id]
+    return None
+
+
+def module_int_constants(tree: ast.Module) -> dict[str, int]:
+    """Top-level `NAME = <int literal>` bindings (e.g. `_BPAD = 128`)."""
+    out: dict[str, int] = {}
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Constant) \
+                and isinstance(node.value.value, int) \
+                and not isinstance(node.value.value, bool):
+            out[node.targets[0].id] = node.value.value
+    return out
+
+
+def unwrap_partial(sf: SourceFile, node: ast.AST) -> ast.AST:
+    """`functools.partial(f, ...)` -> `f` (transparent for the purposes
+    of "which function does this jit/scan trace")."""
+    while isinstance(node, ast.Call) and sf.qualified(node.func) in (
+            "functools.partial", "partial") and node.args:
+        node = node.args[0]
+    return node
+
+
+def assigned_names(target: ast.expr) -> Iterator[str]:
+    """Dotted names bound by an assignment target (tuples flattened)."""
+    if isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            yield from assigned_names(elt)
+    elif isinstance(target, ast.Starred):
+        yield from assigned_names(target.value)
+    else:
+        d = dotted(target)
+        if d is not None:
+            yield d
+
+
+SKIP_DIRS = {"__pycache__", ".git", ".jax_cache", ".venv", "node_modules"}
+
+
+def iter_source_files(paths: Iterable[Path]) -> Iterator[Path]:
+    for p in paths:
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            for sub in sorted(p.rglob("*.py")):
+                if not any(part in SKIP_DIRS for part in sub.parts):
+                    yield sub

@@ -75,10 +75,8 @@ from repro.client.provider import (
 from repro.client.request import Request
 from repro.core import overload as olc
 from repro.core.policy import ALLOC_ADRR, PolicyConfig, n_classes
-from repro.core.scheduler import IDLE, BatchDecision, schedule_batch
+from repro.core.scheduler import IDLE, schedule_batch
 from repro.core.types import (
-    ABANDONED,
-    COMPLETED,
     INFLIGHT,
     PENDING,
     REJECTED,
@@ -277,7 +275,10 @@ def _apply_body(policy: PolicyConfig, batch: RequestBatch,
 
 
 # standalone jit of the transition, used only when `session._state` is
-# introspected before the next poll has folded the pending apply in
+# introspected before the next poll has folded the pending apply in.
+# RPL002 audit: donates position 2 (the RequestState bundle); the sole
+# caller (`_state`) rebinds `self._dev_state` from the result in the
+# same statement, so no stale binding survives the call.
 _apply_decisions = jax.jit(_apply_body, donate_argnums=(2,))
 
 
@@ -362,6 +363,13 @@ def _tick_for(policy: PolicyConfig, phys: ProviderPhysics,
     if fn is None:
         if len(_TICK_CACHE) > 64:
             _TICK_CACHE.clear()
+        # RPL002 audit: donates positions 0-1 (the (W,) window pool and
+        # device-state bundle). Callers reach this through `self._tick`,
+        # declared in [tool.reprolint.donating-callables] so the
+        # dataflow rule sees the donation through the bound method; both
+        # call sites rebind the donated attributes in the same statement
+        # (tests/test_serving_client.py::test_stale_post_donation_read_raises
+        # is the runtime twin).
         fn = jax.jit(
             functools.partial(_fused_tick, policy, phys,
                               max_grants=max_grants, backend=backend),

@@ -41,5 +41,9 @@ def pinned(x):
 def _pinned_vmap(axis_size, in_batched, x):
     del axis_size
     # in_batched is a single-element list (one positional arg); the
-    # output batching spec must mirror the output pytree, i.e. x's
-    return jax.lax.optimization_barrier(x), in_batched[0]
+    # output batching spec must mirror the output pytree, i.e. x's.
+    # Re-enter `pinned` (not the raw barrier): under vmap-of-vmap the
+    # rule itself is traced by the outer vmap, and optimization_barrier
+    # has no batching rule of its own — recursing through the custom
+    # wrapper peels one batch level per call instead.
+    return pinned(x), in_batched[0]

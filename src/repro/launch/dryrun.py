@@ -76,6 +76,10 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
         rec["variant"] = spec.note
         with mesh:
             t0 = time.time()
+            # RPL002 audit: donate positions come from the spec, so the
+            # static rule can't resolve them — safe regardless, because
+            # .lower() only traces (no buffers are consumed) and
+            # spec.args are rebuilt per spec
             lowered = jax.jit(
                 spec.fn, in_shardings=spec.in_shardings,
                 donate_argnums=spec.donate).lower(*spec.args)

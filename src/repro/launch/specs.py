@@ -12,7 +12,6 @@ recorded via cfg.variant_note.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Any, NamedTuple
 
@@ -20,11 +19,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.config import ModelConfig, ShapeConfig, SHAPES, TrainConfig
+from repro.config import ModelConfig, SHAPES, TrainConfig
 from repro.configs import get
 from repro.models import cache_axes, init_caches, init_model
 from repro.models.common import dtype_of
-from repro.models.model import lm_loss
 from repro.sharding.rules import DEFAULT_ACT_RULES, logical_to_sharding
 from repro.training import adamw
 from repro.training.train_step import TrainState, train_step

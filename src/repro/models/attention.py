@@ -8,7 +8,7 @@ Pallas kernels in repro.kernels); `impl="pallas"` routes prefill through
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

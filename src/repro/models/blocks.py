@@ -11,12 +11,10 @@ import jax.numpy as jnp
 from repro.config import ModelConfig
 from repro.models import ssm as ssm_mod
 from repro.models.attention import (
-    KVCache,
     attn_decode,
     attn_init,
     attn_prefill,
 )
-from repro.models.common import dense_apply, dense_init
 from repro.models.mlp import mlp_apply, mlp_init
 from repro.models.moe import moe_apply, moe_init
 from repro.models.norms import norm_apply, norm_init

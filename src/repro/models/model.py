@@ -13,7 +13,7 @@ a prefix; the loss masks prefix positions.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

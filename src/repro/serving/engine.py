@@ -8,13 +8,13 @@ compiles (decode shapes lower serve_step per the assignment).
 from __future__ import annotations
 
 import functools
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig, ServeConfig
-from repro.models import decode_step, init_caches, prefill
+from repro.models import decode_step, prefill
 
 
 class GenState(NamedTuple):

@@ -43,11 +43,8 @@ import numpy as np
 from repro.core.types import (
     CLS_HEAVY,
     CLS_INTERACTIVE,
-    LONG,
-    MEDIUM,
     RequestBatch,
     SHORT,
-    XLONG,
 )
 
 # bucket -> (token_low, token_high): paper's short<=64, medium 65-256,

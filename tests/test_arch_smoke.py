@@ -1,8 +1,6 @@
 """Per-assigned-architecture smoke tests (assignment requirement):
 instantiate the REDUCED same-family variant, run one forward and one
 train step on CPU, assert output shapes and no NaNs."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

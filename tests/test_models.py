@@ -7,7 +7,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import MoEConfig
 from repro.configs import ARCHS, get_smoke
 from repro.models import decode_step, forward_train, init_model, prefill
 from repro.models.attention import _sdpa, causal_mask, flash_xla

@@ -1,0 +1,169 @@
+"""core.numerics.pinned edge cases (satellite of the reprolint PR).
+
+The engine-parity suites exercise `pinned` indirectly — these tests pin
+its contract directly: bitwise identity eager and under jit, pytree
+structure preservation, nested vmap-of-vmap batching of the custom
+rule, and the property the whole discipline exists for — a pinned
+subgraph rounds identically whether it runs standalone or fused into a
+larger jitted program (including a `lax.scan` EMA chain, the shape
+`sim/engine.py` relies on).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.numerics import pinned
+
+
+def _bits(x):
+    return np.asarray(x, dtype=np.float32).view(np.uint32)
+
+
+def _vals(key, shape):
+    # awkward magnitudes: values where reassociation/FMA actually moves ulps
+    a = jax.random.uniform(key, shape, jnp.float32, 1e-4, 1e4)
+    return a * jnp.where(jax.random.bernoulli(key, 0.5, shape), 1.0, -1.0)
+
+
+class TestIdentity:
+    def test_identity_bits_eager_and_jit(self):
+        x = _vals(jax.random.PRNGKey(0), (257,))
+        np.testing.assert_array_equal(_bits(pinned(x)), _bits(x))
+        np.testing.assert_array_equal(_bits(jax.jit(pinned)(x)), _bits(x))
+
+    def test_pytree_structure_preserved(self):
+        tree = {"a": jnp.float32(1.5),
+                "b": (jnp.arange(3, dtype=jnp.float32),
+                      jnp.ones((2, 2), jnp.float32))}
+        out = pinned(tree)
+        assert jax.tree_util.tree_structure(out) == \
+            jax.tree_util.tree_structure(tree)
+        for o, t in zip(jax.tree_util.tree_leaves(out),
+                        jax.tree_util.tree_leaves(tree)):
+            np.testing.assert_array_equal(_bits(o), _bits(t))
+
+    def test_dtype_and_weak_type_preserved(self):
+        xi = jnp.arange(4, dtype=jnp.int32)
+        assert pinned(xi).dtype == jnp.int32
+        xf = jnp.float32(2.0)
+        assert pinned(xf).dtype == jnp.float32
+
+
+class TestVmapBatching:
+    def test_vmap_matches_stacked_loop_bitwise(self):
+        xs = _vals(jax.random.PRNGKey(1), (8, 33))
+
+        def f(x):
+            return pinned(x * 3.0 + x / 7.0)
+
+        batched = jax.vmap(f)(xs)
+        looped = jnp.stack([f(xs[i]) for i in range(xs.shape[0])])
+        np.testing.assert_array_equal(_bits(batched), _bits(looped))
+
+    def test_nested_vmap_of_vmap(self):
+        # the runner's seed axis on top of the class axis: the custom
+        # batching rule must compose with itself
+        xs = _vals(jax.random.PRNGKey(2), (4, 5, 17))
+
+        def f(x):
+            return pinned(jnp.sum(x * 1.000001))
+
+        nested = jax.vmap(jax.vmap(f))(xs)
+        flat = jax.vmap(f)(xs.reshape(20, 17)).reshape(4, 5)
+        np.testing.assert_array_equal(_bits(nested), _bits(flat))
+
+    def test_nested_vmap_under_jit(self):
+        # the pin's contract is cross-*program* (two different jitted
+        # programs round the pinned subgraph identically), asserted here
+        # at vmap-of-vmap depth: an extra consumer that would otherwise
+        # fuse into the producer must not perturb the pinned value
+        xs = _vals(jax.random.PRNGKey(3), (3, 4, 9))
+
+        def f(x):
+            return pinned(x * 0.1 + 0.9)
+
+        @jax.jit
+        def bare(xs):
+            return jax.vmap(jax.vmap(f))(xs)
+
+        @jax.jit
+        def embedded(xs):
+            y = jax.vmap(jax.vmap(f))(xs)
+            return y, jnp.tanh(y * 3.0).sum()
+
+        a = bare(xs)
+        b, _ = embedded(xs)
+        np.testing.assert_array_equal(_bits(a), _bits(b))
+
+    def test_vmap_over_pytree(self):
+        xs = {"u": _vals(jax.random.PRNGKey(4), (6, 5)),
+              "v": _vals(jax.random.PRNGKey(5), (6, 5))}
+
+        def f(t):
+            return pinned({"s": t["u"] + t["v"], "d": t["u"] - t["v"]})
+
+        out = jax.vmap(f)(xs)
+        assert out["s"].shape == (6, 5) and out["d"].shape == (6, 5)
+        np.testing.assert_array_equal(
+            _bits(out["s"]), _bits(xs["u"] + xs["v"]))
+
+
+class TestPinSurvivesFusion:
+    """The property the discipline exists for: arithmetic between two
+    pins rounds identically no matter what program surrounds it."""
+
+    def test_pinned_subgraph_identical_across_programs(self):
+        w1, w2, w3 = 0.63, 0.21, 1.7
+
+        def score(wait, cost, urg):
+            return pinned((w1 * (wait / cost), w2 * cost, w3 * urg))
+
+        def standalone(wait, cost, urg):
+            t = score(wait, cost, urg)
+            return (t[0] - t[1]) + t[2]
+
+        def fused(wait, cost, urg):
+            # same pinned subgraph buried in a bigger program that
+            # invites FMA contraction / reassociation around it
+            t = score(wait, cost, urg)
+            s = (t[0] - t[1]) + t[2]
+            noise = jnp.tanh(wait * cost) * jnp.exp(-urg)
+            return s, s * 2.0 + noise
+
+        k = jax.random.PRNGKey(6)
+        wait = _vals(k, (513,)) ** 2 + 1.0
+        cost = _vals(jax.random.PRNGKey(7), (513,)) ** 2 + 1.0
+        urg = _vals(jax.random.PRNGKey(8), (513,))
+
+        a = jax.jit(standalone)(wait, cost, urg)
+        b, _ = jax.jit(fused)(wait, cost, urg)
+        np.testing.assert_array_equal(_bits(a), _bits(b))
+
+    def test_ema_chain_scan_matches_step_loop(self):
+        # sim/engine.py's tail-EMA shape: delta = pinned(alpha * (x - ema));
+        # a lax.scan over ticks inside one jit must round exactly like
+        # single jitted steps driven from the host
+        alpha = jnp.float32(0.15)
+
+        def step(ema, x):
+            delta = pinned(alpha * (x - ema))
+            return ema + delta, ema + delta
+
+        xs = _vals(jax.random.PRNGKey(9), (200,))
+        ema0 = jnp.float32(1.0)
+
+        @jax.jit
+        def scanned(e0, xs):
+            return jax.lax.scan(step, e0, xs)
+
+        final_scan, trail_scan = scanned(ema0, xs)
+
+        step_j = jax.jit(step)
+        e = ema0
+        trail = []
+        for i in range(xs.shape[0]):
+            e, out = step_j(e, xs[i])
+            trail.append(out)
+        np.testing.assert_array_equal(_bits(final_scan), _bits(e))
+        np.testing.assert_array_equal(
+            _bits(trail_scan), _bits(jnp.stack(trail)))

@@ -1,0 +1,567 @@
+"""reprolint fixture tests: each rule demonstrates a catch and a clean
+pass on a minimal reproducer, plus suppression syntax, manifest loading,
+and the CLI contract `make ci` relies on (nonzero exit on a violation,
+zero on the real tree).
+
+These tests never import jax — the analysis package is stdlib-only by
+design, and that property is itself asserted here.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from repro.analysis.manifest import load_manifest, manifest_for_tests
+from repro.analysis.registry import Project
+from repro.analysis.walker import SourceFile
+import repro.analysis.rules  # noqa: F401  (registers the rules)
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+SRC_DIR = REPO_ROOT / "src"
+
+
+def _project(tmp_path, files, **manifest_overrides):
+    sfs = []
+    for rel, text in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text), encoding="utf-8")
+        if rel.endswith(".py"):
+            sfs.append(SourceFile(p, rel))
+    return Project(root=tmp_path, files=sfs,
+                   manifest=manifest_for_tests(**manifest_overrides))
+
+
+def _findings(project, rule_id):
+    return [f for f in project.run(only={rule_id}) if not f.suppressed]
+
+
+# ---------------------------------------------------------------------------
+# RPL001 — pinned-float discipline
+# ---------------------------------------------------------------------------
+
+_RPL001_MANIFEST = dict(
+    critical_modules=["core/engine.py"],
+    sensitive_names=["sev", "scores", "score", "ema"],
+)
+
+
+class TestRPL001:
+    def test_catch_bare_reduction(self, tmp_path):
+        p = _project(tmp_path, {"core/engine.py": """\
+            import jax.numpy as jnp
+
+            def overload(scores):
+                sev = jnp.sum(scores)
+                return sev
+            """}, **_RPL001_MANIFEST)
+        fs = _findings(p, "RPL001")
+        assert len(fs) == 1 and fs[0].line == 4
+
+    def test_catch_method_reduction_and_fma(self, tmp_path):
+        p = _project(tmp_path, {"core/engine.py": """\
+            def update(ema, x, alpha):
+                ema = ema.mean()
+                score = alpha * x + ema
+                return score
+            """}, **_RPL001_MANIFEST)
+        lines = {f.line for f in _findings(p, "RPL001")}
+        assert lines == {2, 3}
+
+    def test_clean_inside_pinned(self, tmp_path):
+        p = _project(tmp_path, {"core/engine.py": """\
+            import jax.numpy as jnp
+            from repro.core.numerics import pinned
+
+            def overload(scores, alpha, x, ema):
+                sev = pinned(jnp.sum(scores))
+                score = pinned(alpha * x + ema)
+                return sev + score
+            """}, **_RPL001_MANIFEST)
+        assert _findings(p, "RPL001") == []
+
+    def test_clean_outside_critical_module(self, tmp_path):
+        p = _project(tmp_path, {"sim/other.py": """\
+            import jax.numpy as jnp
+
+            def overload(scores):
+                return jnp.sum(scores)
+            """}, **_RPL001_MANIFEST)
+        assert _findings(p, "RPL001") == []
+
+    def test_insensitive_counting_sum_is_clean(self, tmp_path):
+        # bool-mask counting (`elig.sum()`) must not be flagged
+        p = _project(tmp_path, {"core/engine.py": """\
+            def count(elig):
+                n = elig.sum()
+                return n
+            """}, **_RPL001_MANIFEST)
+        assert _findings(p, "RPL001") == []
+
+
+# ---------------------------------------------------------------------------
+# RPL002 — use-after-donate
+# ---------------------------------------------------------------------------
+
+class TestRPL002:
+    def test_catch_read_after_donation(self, tmp_path):
+        p = _project(tmp_path, {"m.py": """\
+            import jax
+
+            def step(pool, x):
+                fn = jax.jit(work, donate_argnums=(0,))
+                out = fn(pool, x)
+                bad = pool + 1
+                return out, bad
+            """})
+        fs = _findings(p, "RPL002")
+        assert len(fs) == 1 and fs[0].line == 6 and "`pool`" in fs[0].message
+
+    def test_clean_when_rebound_from_result(self, tmp_path):
+        p = _project(tmp_path, {"m.py": """\
+            import jax
+
+            def step(pool, x):
+                fn = jax.jit(work, donate_argnums=(0,))
+                pool = fn(pool, x)
+                return pool + 1
+            """})
+        assert _findings(p, "RPL002") == []
+
+    def test_catch_redonation_in_loop_without_rebind(self, tmp_path):
+        # second iteration passes an already-deleted buffer back in
+        p = _project(tmp_path, {"m.py": """\
+            import jax
+
+            def drive(pool, xs):
+                fn = jax.jit(work, donate_argnums=(0,))
+                for x in xs:
+                    out = fn(pool, x)
+                return out
+            """})
+        assert len(_findings(p, "RPL002")) == 1
+
+    def test_clean_loop_with_rebind(self, tmp_path):
+        p = _project(tmp_path, {"m.py": """\
+            import jax
+
+            def drive(pool, xs):
+                fn = jax.jit(work, donate_argnums=(0,))
+                for x in xs:
+                    pool = fn(pool, x)
+                return pool
+            """})
+        assert _findings(p, "RPL002") == []
+
+    def test_manifest_donating_callable_attribute(self, tmp_path):
+        # bound methods the AST can't resolve come from the manifest
+        p = _project(tmp_path, {"m.py": """\
+            class S:
+                def poll(self):
+                    d = self._tick(self._win, self._dev)
+                    return self._win[0], d
+            """}, donating_callables={"self._tick": [0, 1]})
+        fs = _findings(p, "RPL002")
+        assert len(fs) == 1 and "self._win" in fs[0].message
+
+    def test_tuple_rebind_same_statement_is_clean(self, tmp_path):
+        # the fused-tick idiom: donate and rebind in one statement
+        p = _project(tmp_path, {"m.py": """\
+            class S:
+                def poll(self):
+                    self._win, self._dev, d = self._tick(self._win, self._dev)
+                    return self._win[0], d
+            """}, donating_callables={"self._tick": [0, 1]})
+        assert _findings(p, "RPL002") == []
+
+    def test_non_literal_donate_argnums_is_skipped(self, tmp_path):
+        # launch/dryrun.py style: positions unresolvable -> hand audit
+        p = _project(tmp_path, {"m.py": """\
+            import jax
+
+            def lower(spec):
+                fn = jax.jit(spec.fn, donate_argnums=spec.donate)
+                fn(spec.args)
+                return spec.args
+            """})
+        assert _findings(p, "RPL002") == []
+
+
+# ---------------------------------------------------------------------------
+# RPL003 — host-sync-in-jit
+# ---------------------------------------------------------------------------
+
+class TestRPL003:
+    def test_catch_float_cast_under_jit_decorator(self, tmp_path):
+        p = _project(tmp_path, {"m.py": """\
+            import jax
+
+            @jax.jit
+            def f(x):
+                return float(x) + 1.0
+            """})
+        fs = _findings(p, "RPL003")
+        assert len(fs) == 1 and "float()" in fs[0].message
+
+    def test_catch_item_in_scan_body(self, tmp_path):
+        p = _project(tmp_path, {"m.py": """\
+            import jax
+
+            def run(c0, xs):
+                def body(c, x):
+                    bad = x.item()
+                    return c + bad, c
+                return jax.lax.scan(body, c0, xs)
+            """})
+        assert len(_findings(p, "RPL003")) == 1
+
+    def test_catch_transitive_helper(self, tmp_path):
+        # helper called from a traced body is itself traced
+        p = _project(tmp_path, {"m.py": """\
+            import jax
+            import numpy as np
+
+            def helper(x):
+                return np.asarray(x)
+
+            @jax.jit
+            def f(x):
+                return helper(x)
+            """})
+        fs = _findings(p, "RPL003")
+        assert len(fs) == 1 and fs[0].line == 5
+
+    def test_clean_shape_reads_and_host_code(self, tmp_path):
+        p = _project(tmp_path, {"m.py": """\
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def f(x):
+                n = int(x.shape[0])
+                return x * n
+
+            def host(x):
+                return float(x), np.asarray(x)
+            """})
+        assert _findings(p, "RPL003") == []
+
+    def test_partial_jit_decorator_detected(self, tmp_path):
+        p = _project(tmp_path, {"m.py": """\
+            import functools
+            import jax
+
+            @functools.partial(jax.jit, static_argnames=("n",))
+            def f(x, n):
+                return bool(x)
+            """})
+        assert len(_findings(p, "RPL003")) == 1
+
+
+# ---------------------------------------------------------------------------
+# RPL004 — static-arg hashability
+# ---------------------------------------------------------------------------
+
+class TestRPL004:
+    def test_catch_list_passed_to_static_name(self, tmp_path):
+        p = _project(tmp_path, {"m.py": """\
+            import functools
+            import jax
+
+            @functools.partial(jax.jit, static_argnames=("cfg",))
+            def g(x, cfg):
+                return x
+
+            def use(x):
+                return g(x, cfg=[1, 2])
+            """})
+        fs = _findings(p, "RPL004")
+        assert len(fs) == 1 and "list" in fs[0].message
+
+    def test_catch_unhashable_positional_via_argnums(self, tmp_path):
+        p = _project(tmp_path, {"m.py": """\
+            import jax
+
+            def f(x, cfg):
+                return x
+
+            g = jax.jit(f, static_argnums=(1,))
+
+            def use(x):
+                return g(x, {"a": 1})
+            """})
+        fs = _findings(p, "RPL004")
+        assert len(fs) == 1 and "dict" in fs[0].message
+
+    def test_catch_unhashable_default(self, tmp_path):
+        p = _project(tmp_path, {"m.py": """\
+            import functools
+            import jax
+
+            @functools.partial(jax.jit, static_argnames=("ws",))
+            def g(x, ws=[1.0, 2.0]):
+                return x
+            """})
+        fs = _findings(p, "RPL004")
+        assert len(fs) == 1 and "default" in fs[0].message
+
+    def test_clean_tuple_and_scalar(self, tmp_path):
+        p = _project(tmp_path, {"m.py": """\
+            import functools
+            import jax
+
+            @functools.partial(jax.jit, static_argnames=("cfg", "n"))
+            def g(x, cfg=(1, 2), n=4):
+                return x
+
+            def use(x):
+                return g(x, cfg=(3, 4), n=8)
+            """})
+        assert _findings(p, "RPL004") == []
+
+
+# ---------------------------------------------------------------------------
+# RPL005 — Pallas kernel contract
+# ---------------------------------------------------------------------------
+
+_KERNEL_MANIFEST = dict(kernels_root="kernels",
+                        kernel_test_file="tests/test_kernels.py")
+
+
+class TestRPL005:
+    def test_catch_missing_ref_module(self, tmp_path):
+        p = _project(tmp_path, {
+            "kernels/foo/__init__.py": "",
+            "kernels/foo/foo.py": "def kern():\n    pass\n",
+            "tests/test_kernels.py": "",
+        }, **_KERNEL_MANIFEST)
+        fs = _findings(p, "RPL005")
+        assert len(fs) == 1 and "no ref.py" in fs[0].message
+
+    def test_catch_ref_without_parity_test(self, tmp_path):
+        p = _project(tmp_path, {
+            "kernels/foo/__init__.py": "",
+            "kernels/foo/ref.py": "def foo_ref(x):\n    return x\n",
+            "tests/test_kernels.py": "import math\n\n\ndef test_pi():\n    assert math.pi > 3\n",
+        }, **_KERNEL_MANIFEST)
+        fs = _findings(p, "RPL005")
+        assert len(fs) == 1 and "parity" in fs[0].message
+
+    def test_catch_misaligned_blockspec_minor_axis(self, tmp_path):
+        p = _project(tmp_path, {
+            "kernels/foo/__init__.py": "",
+            "kernels/foo/ref.py": "def foo_ref(x):\n    return x\n",
+            "kernels/foo/foo.py": """\
+                from jax.experimental import pallas as pl
+                from jax.experimental.pallas import tpu as pltpu
+                import jax.numpy as jnp
+
+                BLK = 256
+
+                SPEC_BAD = pl.BlockSpec((8, 40), lambda i: (0, i))
+                SPEC_OK = pl.BlockSpec((8, BLK), lambda i: (0, i))
+                SCRATCH_BAD = pltpu.VMEM((1, 2), jnp.float32)
+                SCRATCH_HALF = pltpu.VMEM((1, 128), jnp.bfloat16)
+                SCRATCH_OK = pltpu.VMEM((1, 128), jnp.float32)
+                """,
+            "tests/test_kernels.py":
+                "from kernels.foo.ref import foo_ref  # noqa: F401\n",
+        }, **_KERNEL_MANIFEST)
+        fs = _findings(p, "RPL005")
+        msgs = "\n".join(f.message for f in fs)
+        assert len(fs) == 3
+        assert "minor axis 40" in msgs and "minor axis 2" in msgs
+        assert "bfloat16" in msgs
+
+    def test_clean_full_contract(self, tmp_path):
+        p = _project(tmp_path, {
+            "kernels/foo/__init__.py": "",
+            "kernels/foo/ref.py": "def foo_ref(x):\n    return x\n",
+            "kernels/foo/foo.py": """\
+                from jax.experimental import pallas as pl
+
+                SPEC = pl.BlockSpec((8, 128), lambda i: (0, i))
+                VEC = pl.BlockSpec((128,), lambda i: (i,))
+                """,
+            "tests/test_kernels.py":
+                "from kernels.foo.ref import foo_ref  # noqa: F401\n",
+        }, **_KERNEL_MANIFEST)
+        assert _findings(p, "RPL005") == []
+
+    def test_reexported_ref_counts_as_oracle(self, tmp_path):
+        # ssd_scan style: ref.py re-exports an oracle that lives with
+        # the model stack
+        p = _project(tmp_path, {
+            "kernels/foo/__init__.py": "",
+            "kernels/foo/ref.py":
+                "from models.ssm import foo_ref  # noqa: F401\n",
+            "tests/test_kernels.py":
+                "from kernels.foo.ref import foo_ref  # noqa: F401\n",
+        }, **_KERNEL_MANIFEST)
+        assert _findings(p, "RPL005") == []
+
+
+# ---------------------------------------------------------------------------
+# RPL006 — import hygiene
+# ---------------------------------------------------------------------------
+
+class TestRPL006:
+    def test_catch_unused_and_duplicate(self, tmp_path):
+        p = _project(tmp_path, {"m.py": """\
+            import os
+            import sys
+            import sys
+
+            print(sys.argv)
+            """})
+        msgs = [f.message for f in _findings(p, "RPL006")]
+        assert any("`os` imported but unused" in m for m in msgs)
+        assert any("re-imported" in m for m in msgs)
+
+    def test_noqa_silences_on_name_line(self, tmp_path):
+        p = _project(tmp_path, {"m.py": """\
+            from os.path import (
+                join,
+                sep,  # noqa: F401
+            )
+
+            print(join("a", "b"))
+            """})
+        assert _findings(p, "RPL006") == []
+
+    def test_init_without_all_is_reexport_surface(self, tmp_path):
+        p = _project(tmp_path, {"pkg/__init__.py": "from os import sep\n"})
+        assert _findings(p, "RPL006") == []
+
+    def test_all_counts_as_use(self, tmp_path):
+        p = _project(tmp_path, {"m.py": """\
+            from os import sep
+
+            __all__ = ["sep"]
+            """})
+        assert _findings(p, "RPL006") == []
+
+
+# ---------------------------------------------------------------------------
+# framework: suppression, manifest, CLI
+# ---------------------------------------------------------------------------
+
+class TestSuppression:
+    def test_line_suppression_marks_not_reports(self, tmp_path):
+        p = _project(tmp_path, {"core/engine.py": """\
+            import jax.numpy as jnp
+
+            def overload(scores):
+                sev = jnp.sum(scores)  # reprolint: disable=RPL001
+                return sev
+            """}, **_RPL001_MANIFEST)
+        all_f = p.run(only={"RPL001"})
+        assert len(all_f) == 1 and all_f[0].suppressed
+        assert _findings(p, "RPL001") == []
+
+    def test_file_level_suppression(self, tmp_path):
+        p = _project(tmp_path, {"core/engine.py": """\
+            # reprolint: disable-file=RPL001
+            import jax.numpy as jnp
+
+            def overload(scores):
+                sev = jnp.sum(scores)
+                return sev
+            """}, **_RPL001_MANIFEST)
+        assert _findings(p, "RPL001") == []
+
+    def test_suppression_is_rule_specific(self, tmp_path):
+        p = _project(tmp_path, {"core/engine.py": """\
+            import jax.numpy as jnp
+
+            def overload(scores):
+                sev = jnp.sum(scores)  # reprolint: disable=RPL002
+                return sev
+            """}, **_RPL001_MANIFEST)
+        assert len(_findings(p, "RPL001")) == 1
+
+
+class TestManifest:
+    def test_repo_manifest_loads(self):
+        man = load_manifest(REPO_ROOT)
+        assert "core/scheduler.py" in man.critical_modules
+        assert "sim/engine.py" in man.critical_modules
+        assert man.lane == 128
+        assert man.kernels_root == "src/repro/kernels"
+        assert man.donating_callables.get("self._tick") == (0, 1)
+
+    def test_defaults_without_pyproject(self, tmp_path):
+        man = load_manifest(tmp_path)
+        assert man.critical_modules == ()
+        assert man.pinned_names == ("pinned",)
+        assert man.lane == 128
+
+    def test_fallback_parser_matches_real_manifest(self):
+        # the no-TOML-library code path must read the repo manifest the
+        # same way tomllib/tomli do (it runs on bare CI interpreters)
+        from repro.analysis.manifest import _fallback_parse
+        data = _fallback_parse(
+            (REPO_ROOT / "pyproject.toml").read_text(encoding="utf-8"))
+        t = data["tool"]["reprolint"]
+        real = load_manifest(REPO_ROOT)
+        assert tuple(t["critical-modules"]) == real.critical_modules
+        assert tuple(t["sensitive-names"]) == real.sensitive_names
+        assert t["lane"] == real.lane
+        assert {k: tuple(v) for k, v in t["donating-callables"].items()} \
+            == real.donating_callables
+
+
+def _run_cli(args, cwd):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC_DIR) + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", *args],
+        cwd=cwd, env=env, capture_output=True, text=True, timeout=120)
+
+
+class TestCLI:
+    def test_nonzero_on_violation_tree(self, tmp_path):
+        # the deliberate-violation smoke `make ci` relies on: a tree
+        # with a use-after-donate must fail the lint gate
+        (tmp_path / "pyproject.toml").write_text("[tool.reprolint]\n")
+        (tmp_path / "bad.py").write_text(textwrap.dedent("""\
+            import jax
+
+            def step(pool, x):
+                fn = jax.jit(work, donate_argnums=(0,))
+                out = fn(pool, x)
+                return out, pool
+            """))
+        r = _run_cli(["--root", str(tmp_path), "bad.py"], cwd=tmp_path)
+        assert r.returncode == 1, r.stdout + r.stderr
+        assert "RPL002" in r.stdout
+
+    def test_zero_on_real_tree(self):
+        r = _run_cli(["src", "tests", "benchmarks"], cwd=REPO_ROOT)
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert "0 finding(s)" in r.stdout
+
+    def test_missing_path_is_usage_error(self, tmp_path):
+        (tmp_path / "pyproject.toml").write_text("[tool.reprolint]\n")
+        r = _run_cli(["--root", str(tmp_path), "nope"], cwd=tmp_path)
+        assert r.returncode == 2
+
+    def test_list_rules_names_all_six(self):
+        r = _run_cli(["--list-rules"], cwd=REPO_ROOT)
+        assert r.returncode == 0
+        for rid in ("RPL001", "RPL002", "RPL003", "RPL004", "RPL005",
+                    "RPL006"):
+            assert rid in r.stdout
+
+    def test_analysis_package_never_imports_jax(self):
+        # lint must run on a bare CI interpreter before deps install
+        code = ("import sys; import repro.analysis.lint; "
+                "import repro.analysis.rules; "
+                "sys.exit(1 if any(m.startswith('jax') for m in sys.modules) "
+                "else 0)")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(SRC_DIR)
+        r = subprocess.run([sys.executable, "-c", code], env=env,
+                           capture_output=True, text=True, timeout=60)
+        assert r.returncode == 0, r.stderr

@@ -14,9 +14,6 @@ from repro.core.policy import (
 )
 from repro.core.scheduler import IDLE, schedule_slot
 from repro.core.types import (
-    CLS_HEAVY,
-    INFLIGHT,
-    PENDING,
     RequestBatch,
     SHORT,
     XLONG,

@@ -22,7 +22,6 @@ open-ended submission, p90 defaulting, and the deprecated
 from __future__ import annotations
 
 import time
-import warnings
 
 import jax
 import numpy as np
@@ -385,6 +384,27 @@ class TestDonationSafety:
         assert len(before) >= 14  # the pool really is (W,)-columnar
         sess.poll()
         assert all(x.is_deleted() for x in before)
+
+    def test_stale_post_donation_read_raises(self):
+        """The invariant reprolint RPL002 enforces statically, verified
+        dynamically: a binding captured before a poll is donated into
+        the fused tick, and a host read of the stale Array must raise
+        (deleted buffer) rather than silently observe freed memory.
+        `poll()` itself stays safe because it rebinds `_win_batch` /
+        `_dev_state` from the tick's results in the same statement."""
+        sess = self._session()
+        sess.submit(Request(rid=0, prompt=None, max_new=25.0, p50=25.0,
+                            bucket=0))
+        sess.poll()  # fold the warmup-fresh pool through one real epoch
+        w = sess.cfg.window
+        stale = [x for x in jax.tree_util.tree_leaves(
+            (sess._win_batch, sess._dev_state)) if x.size >= w]
+        assert stale, "expected (W,)-sized donated leaves"
+        sess.poll()  # donates every captured buffer
+        for leaf in stale:
+            assert leaf.is_deleted()
+            with pytest.raises(RuntimeError):
+                np.asarray(leaf)  # any host materialization must fail
 
     def test_post_drain_poll_is_transfer_free(self):
         """After drain() the pool is empty and the epoch is a fixpoint:

@@ -7,9 +7,7 @@ the unit level (no 512-device mesh needed).
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.config import ModelConfig
 from repro.configs import get, get_smoke
 from repro.models import init_caches, init_model
 from repro.models.model import cache_axes, lm_loss

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.policy import strategy, base_policy
+from repro.core.policy import strategy
 from repro.core.types import (
     ABANDONED, COMPLETED, INFLIGHT, PENDING, REJECTED, SHORT,
 )
