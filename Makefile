@@ -6,8 +6,8 @@ export PYTHONPATH := src
 export PYTHONDONTWRITEBYTECODE := 1
 
 .PHONY: test test-fast bench bench-smoke bench-sched bench-scale \
-	bench-scenarios bench-client serve-smoke check-bench check-clean \
-	lint ci
+	bench-scenarios bench-client bench-fleet serve-smoke check-bench \
+	check-clean lint ci
 
 # Tier-1: full test suite (ROADMAP.md)
 test:
@@ -31,6 +31,7 @@ bench:
 bench-smoke:
 	$(PY) benchmarks/multi_class.py --smoke
 	$(PY) benchmarks/scenario_sweep.py --smoke
+	$(PY) benchmarks/fleet_sweep.py --smoke
 
 # scheduler-throughput microbenchmark -> BENCH_scheduler.json
 # (slots/sec at K=2 vs K=8, the batch-dispatch B x N sweep, and the
@@ -51,6 +52,12 @@ bench-scale:
 # full nonstationary scenario grid -> BENCH_scenarios.json
 bench-scenarios:
 	$(PY) benchmarks/scenario_sweep.py
+
+# fleet dispatch sweep: failover at P in {1,4,16} (recovery >= 0.99
+# gate on the P>1 cells; P=1 is the no-alternative control), skew,
+# brownout -> `fleet_sweep` rows in BENCH_scenarios.json
+bench-fleet:
+	$(PY) benchmarks/fleet_sweep.py
 
 # streaming client-session throughput (requests/s over MockProvider at
 # N in {1e3,1e5}) -> client_session rows in BENCH_scheduler.json; the
@@ -105,6 +112,7 @@ lint:
 		echo "lint: ruff not installed; relying on reprolint RPL006"; \
 	fi
 	$(PY) -m repro.analysis.lint src tests benchmarks
+	$(PY) -m repro.analysis.docs_check
 
 # CI entry point (.github/workflows/ci.yml runs exactly this): hygiene
 # check, lint gate (fail fast, before the expensive suites), tier-1

@@ -1,0 +1,165 @@
+"""Fleet sweep: the (P,) provider axis under failure, skew, and
+brownout (DESIGN.md §10).
+
+Runs the fleet scenarios through the full three-layer stack plus the
+layer-0 routing pass, scaling the failover scenario across fleet widths
+P ∈ {1, 4, 16}.  P=1 is the degenerate fleet (the fail window takes the
+*whole* provider down — the pure retry/requeue regime); P=4 and P=16
+measure how endpoint-aware routing absorbs the same outage when there
+is somewhere else to send the work.
+
+Each failover cell reports a **recovery** metric: the completion rate
+of requests arriving after the fail window divided by the completion
+rate of requests arriving before it (phase 2 vs phase 0 of the
+scenario's 0.35/0.30/0.35 split, which brackets the 0.35-0.65 fail
+window).  The >= 0.99 recovery bar gates the P > 1 cells: when the
+fleet has somewhere else to send the work, post-outage arrivals must
+not pay for the outage.  The P=1 cell is the ungated control — the
+whole provider was down, post-outage arrivals land on the requeued
+backlog, and the cost ladder legitimately sheds some of them; its
+reported recovery (~0.95) is the baseline the routed cells are
+measured against.  The full run writes
+rows under the `fleet_sweep` key of `BENCH_scenarios.json` (merging,
+not clobbering, the scenario-sweep cells) and exits nonzero if any
+recovery bar or finiteness gate fails.
+
+`--smoke` runs a CI-sized slice (P ∈ {1, 4}, small N, no artifact
+write) with the same gates.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+import warnings
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+
+import numpy as np  # noqa: E402
+
+from benchmarks import common as _common  # noqa: E402,F401 (enables the
+                                          # persistent compilation cache)
+from repro.core.policy import final_adrr_olc  # noqa: E402
+from repro.sim import (  # noqa: E402
+    SimConfig,
+    run_scenario_cell,
+    summarize,
+    window_for,
+)
+from repro.sim import scenarios as scn  # noqa: E402
+
+BENCH_JSON = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_scenarios.json")
+
+RECOVERY_BAR = 0.99
+
+REQUIRED_FINITE = (
+    "completion_rate", "satisfaction", "goodput_rps", "global_p95_ms",
+)
+
+
+def _failover_at(p: int) -> scn.Scenario:
+    """The registry failover scenario widened/narrowed to a P-endpoint
+    fleet; the fail window stays on endpoint 0."""
+    base = scn.get_scenario("fleet_failover")
+    return base._replace(name=f"fleet_failover_p{p}",
+                         fleet=base.fleet._replace(p=p))
+
+
+def _recovery(pm) -> float:
+    """Post-failover completion rate over pre-failover completion rate,
+    seed-averaged.  Phases index the scenario's arrival split: phase 0
+    arrives entirely before the fail window, phase 2 entirely after."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        arrived = np.nanmean(np.asarray(pm.n_arrived, np.float64), axis=0)
+        completed = np.nanmean(np.asarray(pm.n_completed, np.float64), axis=0)
+    pre = completed[0] / max(arrived[0], 1.0)
+    post = completed[-1] / max(arrived[-1], 1.0)
+    if pre <= 0.0:
+        return float("nan")
+    return float(post / pre)
+
+
+def run_sweep(*, n_requests: int, n_ticks: int, seeds: int,
+              widths: tuple[int, ...], verbose: bool = True,
+              ) -> tuple[list[dict], list[str]]:
+    """Returns (cell dicts, gate violations)."""
+    sim_cfg = SimConfig(n_ticks=n_ticks, window=window_for(n_requests))
+    policy = final_adrr_olc()
+    cells, violations = [], []
+    grid = [(_failover_at(p), p > 1) for p in widths]
+    grid += [(scn.get_scenario(n), False)
+             for n in ("fleet_skew", "fleet_brownout")]
+    for scenario, gated in grid:
+        t0 = time.perf_counter()
+        m, pm = run_scenario_cell(
+            policy, scenario, seeds=seeds, n_requests=n_requests,
+            sim_cfg=sim_cfg)
+        secs = time.perf_counter() - t0
+        s = summarize(m)
+        for key in REQUIRED_FINITE:
+            if not np.isfinite(s[key][0]):
+                violations.append(f"{scenario.name}: {key} = {s[key][0]}")
+        agg = {k: round(s[k][0], 3) if np.isfinite(s[k][0]) else None
+               for k in REQUIRED_FINITE + ("n_rejects", "n_abandoned")}
+        cell = {
+            "scenario": scenario.name,
+            "p": scenario.fleet.p,
+            "cell_seconds": round(secs, 2),
+            "aggregate": agg,
+        }
+        if scenario.name.startswith("fleet_failover"):
+            rec = _recovery(pm)
+            cell["recovery"] = round(rec, 4) if np.isfinite(rec) else None
+            if gated and not (rec >= RECOVERY_BAR):
+                violations.append(
+                    f"{scenario.name}: recovery {rec:.4f} < {RECOVERY_BAR}")
+        cells.append(cell)
+        if verbose:
+            rec_s = (f" recovery={cell['recovery']:.3f}"
+                     if cell.get("recovery") is not None else "")
+            cr = agg["completion_rate"]
+            print(f"  {scenario.name:20s} P={scenario.fleet.p:<3d} "
+                  f"{secs:5.1f}s cr={cr if cr is not None else 'nan'}"
+                  f"{rec_s}")
+    return cells, violations
+
+
+def main(argv: list[str]) -> int:
+    smoke = "--smoke" in argv
+    if smoke:
+        cells, violations = run_sweep(
+            n_requests=64, n_ticks=4000, seeds=2, widths=(1, 4))
+    else:
+        cells, violations = run_sweep(
+            n_requests=160, n_ticks=14000, seeds=3, widths=(1, 4, 16))
+        prev = {}
+        try:
+            with open(BENCH_JSON) as f:
+                prev = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            pass
+        prev["fleet_sweep"] = {
+            "sim": {"n_requests": 160, "n_ticks": 14000, "seeds": 3,
+                    "engine": "windowed"},
+            "recovery_bar": RECOVERY_BAR,
+            "cells": cells,
+        }
+        with open(BENCH_JSON, "w") as f:
+            json.dump(prev, f, indent=2)
+        print(f"wrote {os.path.relpath(BENCH_JSON)} fleet_sweep "
+              f"({len(cells)} cells)")
+    if violations:
+        print("FAIL:")
+        for v in violations:
+            print(f"  {v}")
+        return 1
+    print(f"fleet sweep OK: {len(cells)} cells, "
+          f"P>1 recovery >= {RECOVERY_BAR}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,73 @@
+"""Docs-freshness gate: README claims must match the repo.
+
+Documentation rots in two predictable ways: a quickstart names a make
+target that was renamed, or a subsystem map points at a module that
+moved.  This checker (wired into ``make lint``) parses README.md and
+fails on either:
+
+* every `` `make <target>` `` mentioned in README.md must be a real
+  target in the Makefile;
+* every backticked module/file path (``src/...``, ``tests/...``,
+  ``benchmarks/...``, ``docs/...``, or a dotted ``repro.*`` module)
+  must exist on disk.
+
+Stdlib only — no third-party imports — so it runs in any environment
+the test suite runs in.  Exit 0 when fresh, 1 with a per-claim report
+when stale.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+_REPO = os.path.abspath(
+    os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..", ".."))
+
+_MAKE_RE = re.compile(r"`make\s+([A-Za-z0-9_.-]+)`")
+_PATH_RE = re.compile(
+    r"`((?:src|tests|benchmarks|docs)/[A-Za-z0-9_./-]+|[A-Za-z0-9_/.-]+\.md)`")
+_MODULE_RE = re.compile(r"`(repro(?:\.[A-Za-z0-9_]+)+)`")
+_TARGET_RE = re.compile(r"^([A-Za-z0-9_.-]+):", re.MULTILINE)
+
+
+def _module_exists(dotted: str) -> bool:
+    stem = os.path.join(_REPO, "src", *dotted.split("."))
+    return os.path.isfile(stem + ".py") or os.path.isdir(stem)
+
+
+def check(readme: str = "README.md") -> list[str]:
+    """Returns the list of stale claims (empty means fresh)."""
+    readme_path = os.path.join(_REPO, readme)
+    if not os.path.isfile(readme_path):
+        return [f"{readme} does not exist"]
+    with open(readme_path) as f:
+        text = f.read()
+    with open(os.path.join(_REPO, "Makefile")) as f:
+        targets = set(_TARGET_RE.findall(f.read()))
+    stale = []
+    for t in _MAKE_RE.findall(text):
+        if t not in targets:
+            stale.append(f"{readme}: `make {t}` is not a Makefile target")
+    for p in _PATH_RE.findall(text):
+        if not os.path.exists(os.path.join(_REPO, p)):
+            stale.append(f"{readme}: path `{p}` does not exist")
+    for m in _MODULE_RE.findall(text):
+        if not _module_exists(m):
+            stale.append(f"{readme}: module `{m}` does not exist")
+    return stale
+
+
+def main() -> int:
+    stale = check()
+    if stale:
+        print("docs_check: stale documentation claims:")
+        for s in stale:
+            print(f"  {s}")
+        return 1
+    print("docs_check: README claims match the repo")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

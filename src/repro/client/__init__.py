@@ -2,10 +2,13 @@
 
 `ClientSession` runs the paper's three-layer scheduler as an open-ended
 submit/poll/drain session over the `AsyncProvider` boundary;
-`MockProvider` replays the simulator's provider dynamics against it and
-`AsyncBlackBoxProvider` adapts the real JAX engine.
+`MockProvider` replays the simulator's provider dynamics against it,
+`AsyncBlackBoxProvider` adapts the real JAX engine, and `FleetProvider`
+multiplexes a session over P endpoints with endpoint-aware routing
+(DESIGN.md §10).
 """
 from repro.client.blackbox import AsyncBlackBoxProvider  # noqa: F401
+from repro.client.fleet import FleetProvider  # noqa: F401
 from repro.client.provider import (  # noqa: F401
     AsyncProvider,
     Completion,

@@ -1,0 +1,212 @@
+"""FleetProvider: P async endpoints behind one `AsyncProvider` face.
+
+The live-path sibling of the engine's fleet mode (DESIGN.md §10): a
+session schedules against ONE provider boundary, and this adapter
+multiplexes it over P child `AsyncProvider`s using the same routing
+cost model as `core.routing.route_requests` —
+
+    cost[p] = (base_ms[p] + ms_per_token[p] * p50) * (1 + out[p]/comfort[p])
+              + 429_pressure[p]            (+ UNAVAIL if p is down)
+
+evaluated per submit with the client-observable signals only: the
+adapter's own per-endpoint outstanding counts and the Retry-After
+bounces it has seen.  The 429-pressure term is the live analogue of the
+engine's bucket-dryness fraction — a client cannot see the provider's
+buckets, only its bounces, so an endpoint that recently 429'd carries
+its Retry-After as a routing penalty until that backoff expires.
+
+Failure semantics deliberately differ from the engine (documented
+asymmetry): the engine models abrupt endpoint death — in-flight work is
+killed and requeued by `_complete_and_timeout`.  The live adapter
+drains gracefully: a down endpoint refuses new submits (UNAVAIL cost;
+if the whole fleet is down the submit bounces 429-style with
+`retry_after_ms`) but its already-accepted work completes via `poll`.
+Both behaviors are real — cloud endpoints do both — and the harsher
+one lives in the engine, where the failover-recovery bar is measured.
+
+With P == 1 the adapter is a transparent pass-through: the routing
+argmin has one candidate and `inflight_hint` is forwarded to the child
+untouched, so a single-endpoint fleet replays the exact session-vs-
+engine parity traces (tests/test_serving_client.py's contract).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Optional, Sequence
+
+import numpy as np
+
+from repro.client.provider import AsyncProvider, Completion, SubmitResult
+from repro.core.routing import UNAVAIL_MS
+from repro.sim.provider import FleetPhysics, ProviderPhysics
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.client.request import Request
+
+
+class FleetProvider:
+    """Route every submit to the cheapest of P child endpoints.
+
+    `providers` are the child transports (any `AsyncProvider`);
+    `fphys` carries the (P,)-leaf speed/comfort estimates the routing
+    cost reads (the client's *model* of the endpoints, not necessarily
+    their truth).  `avail` is an optional (T, P) availability schedule
+    sampled at `dt_ms` ticks — the test/replay hook for failover; live
+    deployments would instead mark endpoints down from health checks.
+    """
+
+    def __init__(
+        self,
+        providers: Sequence[AsyncProvider],
+        fphys: FleetPhysics,
+        *,
+        dt_ms: float = 25.0,
+        avail: Optional[np.ndarray] = None,   # (T, P) rows, like engine xs
+        retry_after_ms: float = 1500.0,
+    ):
+        if len(providers) == 0:
+            raise ValueError("FleetProvider needs at least one endpoint")
+        p = len(providers)
+        if np.asarray(fphys.base_ms).shape != (p,):
+            raise ValueError(
+                f"fphys is {np.asarray(fphys.base_ms).shape[0]}-endpoint "
+                f"but {p} providers were given")
+        self.providers = list(providers)
+        self.p = p
+        self._base = np.asarray(fphys.base_ms, np.float32)
+        self._ms_per_token = np.asarray(fphys.ms_per_token, np.float32)
+        self._comfort = np.asarray(fphys.comfort_concurrency, np.float32)
+        self.dt_ms = float(dt_ms)
+        self._avail_rows = None if avail is None else np.asarray(
+            avail, np.float32)
+        self.retry_after_ms = float(retry_after_ms)
+        # fleet ticket -> (endpoint, child ticket); fleet tickets are
+        # monotone so completions report in a stable, mergeable order
+        self._tickets: dict[int, tuple[int, int]] = {}
+        self._by_child: list[dict[int, int]] = [dict() for _ in range(p)]
+        self._next_ticket = 0
+        # client-observed 429 pressure: endpoint p is penalized by its
+        # last Retry-After until that backoff expires
+        self._dry_until = np.zeros((p,), np.float64)
+        self._dry_penalty = np.zeros((p,), np.float32)
+        self.n_routed = np.zeros((p,), np.int64)
+        self.n_refused = 0
+
+    @classmethod
+    def from_fleet_scenario(cls, scenario, n_requests: int, n_ticks: int,
+                            dt_ms: float, k: int,
+                            phys: ProviderPhysics | None = None
+                            ) -> "FleetProvider":
+        """Build the live fleet for a registry fleet scenario: one
+        `MockProvider` per endpoint carrying that endpoint's physics
+        skew, brownout rows, and bucket schedule — the same arrays
+        `scenarios.build_fleet` hands the engine — plus the (T, P)
+        availability schedule on the adapter."""
+        from repro.client.provider import MockProvider
+        from repro.sim.provider import default_physics
+        from repro.sim.scenarios import build_fleet
+
+        phys = phys if phys is not None else default_physics()
+        fleet = build_fleet(scenario, phys, n_ticks, dt_ms, n_requests, k)
+        if fleet is None:
+            raise ValueError(
+                f"scenario {scenario.name!r} carries no fleet spec")
+        fphys, dyn = fleet.phys, fleet.dyn
+        children = []
+        for ep in range(np.asarray(fphys.base_ms).shape[0]):
+            children.append(MockProvider(
+                ProviderPhysics(*(np.asarray(a)[ep] for a in fphys)),
+                dt_ms=dt_ms,
+                comfort_scale=(None if dyn.comfort_scale is None
+                               else np.asarray(dyn.comfort_scale)[:, ep]),
+                tb_refill=(None if dyn.tb_refill is None
+                           else np.asarray(dyn.tb_refill)[:, ep]),
+                tb_capacity=(None if dyn.tb_capacity is None
+                             else np.asarray(dyn.tb_capacity)[ep]),
+                retry_after_ms=float(np.asarray(dyn.retry_after_ms)),
+            ))
+        return cls(
+            children, fphys, dt_ms=dt_ms,
+            avail=None if dyn.avail is None else np.asarray(dyn.avail),
+            retry_after_ms=float(np.asarray(dyn.retry_after_ms)),
+        )
+
+    # --- routing ------------------------------------------------------
+    def _avail_row(self, now_ms: float) -> Optional[np.ndarray]:
+        if self._avail_rows is None:
+            return None
+        t = int(np.floor(now_ms / self.dt_ms + 1e-6)) - 1
+        t = min(max(t, 0), self._avail_rows.shape[0] - 1)
+        return self._avail_rows[t]
+
+    def route(self, p50: float, now_ms: float) -> tuple[int, float]:
+        """(endpoint, cost_seconds) for a request of predicted size
+        `p50` — the same formula the engine's routing layer scores,
+        with the adapter's observed signals.  Ties go to the lowest
+        endpoint index (np.argmin), matching `jnp.argmin`."""
+        out = np.asarray(
+            [float(c.inflight()) for c in self.providers], np.float32)
+        load = out / np.maximum(self._comfort, np.float32(1.0))
+        unloaded = self._base + self._ms_per_token * np.float32(p50)
+        cost = unloaded * (np.float32(1.0) + load)
+        dry = now_ms < self._dry_until
+        cost = cost + np.where(dry, self._dry_penalty, np.float32(0.0))
+        row = self._avail_row(now_ms)
+        if row is not None:
+            cost = np.where(row < 0.5, np.float32(UNAVAIL_MS), cost)
+        ep = int(np.argmin(cost))
+        return ep, float(cost[ep]) * 1e-3
+
+    # --- AsyncProvider ------------------------------------------------
+    def submit(self, req: "Request", now_ms: float,
+               inflight_hint: int | None = None) -> SubmitResult:
+        ep, cost_s = self.route(req.p50, now_ms)
+        if cost_s * 1e3 >= UNAVAIL_MS:
+            # whole fleet down: bounce like a 429 so the session's
+            # normal retry machinery handles the outage
+            self.n_refused += 1
+            return SubmitResult(False, self.retry_after_ms)
+        # P == 1: forward the session's optimistic concurrency view so a
+        # single-endpoint fleet prices service exactly like the bare
+        # child (the session-vs-engine parity contract).  P > 1: the
+        # child's own outstanding count is the endpoint's true load.
+        hint = inflight_hint if self.p == 1 else None
+        res = self.providers[ep].submit(req, now_ms, inflight_hint=hint)
+        if not res.accepted:
+            # observed 429: penalize this endpoint for its Retry-After
+            self._dry_until[ep] = now_ms + res.retry_after_ms
+            self._dry_penalty[ep] = np.float32(res.retry_after_ms)
+            return res
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._tickets[ticket] = (ep, res.ticket)
+        self._by_child[ep][res.ticket] = ticket
+        self.n_routed[ep] += 1
+        return SubmitResult(True, 0.0, ticket=ticket)
+
+    def poll(self, now_ms: float) -> list[Completion]:
+        out = []
+        for ep, child in enumerate(self.providers):
+            for c in child.poll(now_ms):
+                ticket = self._by_child[ep].pop(c.ticket)
+                del self._tickets[ticket]
+                out.append(Completion(ticket, c.finish_ms, c.output))
+        # fleet-ticket order: deterministic merge independent of which
+        # child reported first
+        out.sort(key=lambda c: c.ticket)
+        return out
+
+    def inflight(self) -> int:
+        return sum(c.inflight() for c in self.providers)
+
+    def inflight_by_endpoint(self) -> np.ndarray:
+        """(P,) outstanding counts — the routing layer's load signal,
+        exposed for tests and dashboards."""
+        return np.asarray([c.inflight() for c in self.providers], np.int64)
+
+    def next_event_ms(self, now_ms: float) -> Optional[float]:
+        cands = []
+        for c in self.providers:
+            e = c.next_event_ms(now_ms)
+            if e is not None:
+                cands.append(float(e))
+        return min(cands) if cands else None

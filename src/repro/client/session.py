@@ -39,7 +39,11 @@ is open-ended and windowed:
     bounce parks the request until `now + retry_after` through the
     session's `retry_policy` hook — the place Retry-After-aware backoff
     strategies plug in (the `rate_crunch` regime is where they
-    separate).
+    separate).  The boundary is one provider wide by contract:
+    fleet-scale sessions hand the session a
+    `repro.client.fleet.FleetProvider`, which multiplexes P child
+    endpoints behind this same interface with endpoint-aware routing
+    (DESIGN.md §10) — the session itself never learns P exists.
   * **Two clocks.**  `clock="virtual"` advances `dt_ms` per poll (or an
     explicit `now_ms`) — deterministic replays, tests, benchmarks.
     `clock="wall"` reads the monotonic clock scaled by `time_scale`,

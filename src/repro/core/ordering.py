@@ -65,7 +65,7 @@ def _wait_and_urgency(batch: RequestBatch, now_ms):
     return wait, urgency
 
 
-def order_scores(batch: RequestBatch, now_ms, cfg: PolicyConfig):
+def order_scores(batch: RequestBatch, now_ms, cfg: PolicyConfig, route=None):
     """Paper scoring rule over every request (mask applied by caller).
 
     The barrier pins each term's rounding before the sum: scores decide
@@ -73,15 +73,28 @@ def order_scores(batch: RequestBatch, now_ms, cfg: PolicyConfig):
     (W,)-shaped views of the same requests the dense engine sees as
     (N,) — without the barrier XLA may FMA-contract one program but not
     the other, and a 1-ulp score drift can reorder near-ties.
+
+    `route` ((N,) f32, fleet mode) is the predicted queue delay at the
+    request's best endpoint in seconds (`routing.route_requests`); it
+    enters as a fourth pinned term subtracted after the base sum — the
+    same left-to-right association the Pallas kernel and its oracle use.
     """
     wait, urgency = _wait_and_urgency(batch, now_ms)
     cost = jnp.maximum(batch.p50, 1.0)
+    if route is None:
+        terms = pinned((
+            cfg.ord_w_wait * (wait / cost),
+            cfg.ord_w_size * (cost / cfg.ord_ref_tokens),
+            cfg.ord_w_urg * urgency,
+        ))
+        return (terms[0] - terms[1]) + terms[2]
     terms = pinned((
         cfg.ord_w_wait * (wait / cost),
         cfg.ord_w_size * (cost / cfg.ord_ref_tokens),
         cfg.ord_w_urg * urgency,
+        cfg.ord_w_route * route,
     ))
-    return (terms[0] - terms[1]) + terms[2]
+    return ((terms[0] - terms[1]) + terms[2]) - terms[3]
 
 
 def select_fifo(batch: RequestBatch, mask):
@@ -91,28 +104,38 @@ def select_fifo(batch: RequestBatch, mask):
     return idx, mask.any()
 
 
-def select_scored(batch: RequestBatch, mask, now_ms, cfg: PolicyConfig):
+def select_scored(batch: RequestBatch, mask, now_ms, cfg: PolicyConfig,
+                  route=None):
     """Score-based pick among mask. Returns (idx, any)."""
-    scores = jnp.where(mask, order_scores(batch, now_ms, cfg), _NEG)
+    scores = jnp.where(mask, order_scores(batch, now_ms, cfg, route), _NEG)
     idx = jnp.argmax(scores)
     return idx, mask.any()
 
 
-def _kernel_inputs(batch: RequestBatch, now_ms, cfg: PolicyConfig):
+def _kernel_inputs(batch: RequestBatch, now_ms, cfg: PolicyConfig,
+                   with_route: bool = False):
     """Per-request feature vectors + per-class weight rows for the fused
     kernel.  A FIFO class feeds -arrival_ms through the `wait` slot with
     unit cost, zero urgency, and weights [1, 0, 0, 1], so its score is
     exactly -arrival_ms: argmax == argmin(arrival) with identical
     first-occurrence tie-breaking and no dependence on now_ms (a
     `now - arrival` key would quantize distinct arrivals into f32 ties
-    at large now_ms)."""
+    at large now_ms).  With `with_route` the rows grow a fifth weight:
+    `ord_w_route` for scored classes, 0 for FIFO (the route feature is
+    streamed for every class but a zero weight keeps FIFO's score
+    exactly -arrival_ms)."""
     wait, urgency = _wait_and_urgency(batch, now_ms)
     fifo_key = -batch.arrival_ms
     cost = batch.p50  # the kernel applies the max(cost, 1) clamp itself
+    scored_w = [cfg.ord_w_wait, cfg.ord_w_size, cfg.ord_w_urg,
+                cfg.ord_ref_tokens]
+    fifo_w = [1.0, 0.0, 0.0, 1.0]
+    if with_route:
+        scored_w.append(cfg.ord_w_route)
+        fifo_w.append(0.0)
     w_scored = jnp.stack(
-        [cfg.ord_w_wait, cfg.ord_w_size, cfg.ord_w_urg, cfg.ord_ref_tokens]
-    ).astype(jnp.float32)
-    w_fifo = jnp.asarray([1.0, 0.0, 0.0, 1.0], jnp.float32)
+        [jnp.asarray(w, jnp.float32) for w in scored_w]).astype(jnp.float32)
+    w_fifo = jnp.asarray(fifo_w, jnp.float32)
     return wait, fifo_key, cost, urgency, w_scored, w_fifo
 
 
@@ -122,6 +145,7 @@ def select_per_class(
     now_ms,
     cfg: PolicyConfig,
     backend: str = "jnp",
+    route=None,
 ):
     """Vectorized head-of-line pick for every class at once.
 
@@ -132,7 +156,8 @@ def select_per_class(
     (`lax.top_k` keeps argmax/argmin first-occurrence tie-breaking).
     `backend` must be static (a Python string) under jit.
     """
-    idx, _ = select_top_b(batch, cls_mask, now_ms, cfg, 1, backend=backend)
+    idx, _ = select_top_b(batch, cls_mask, now_ms, cfg, 1, backend=backend,
+                          route=route)
     return idx[:, 0], cls_mask.any(axis=1)
 
 
@@ -165,19 +190,20 @@ def rank_fifo(batch: RequestBatch, mask, b: int, backend: str = "jnp"):
     return idx.astype(jnp.int32), n_elig
 
 
-def _select_top_b_pallas(batch, cls_mask, now_ms, cfg, b: int):
+def _select_top_b_pallas(batch, cls_mask, now_ms, cfg, b: int, route=None):
     """Ranked (K, B) candidates via the fused score+top-B kernel: one
     tiled pass per class computes scores and the blockwise partial top-B
     reduction in VMEM (kernels/sched_score), never materializing the
     (K, N) score matrix in HBM.  K is small and static, so the Python
     class loop costs K kernel launches, each streaming the queue once —
     versus the former B successive fused-argmax passes (B streams per
-    class)."""
+    class).  In fleet mode the route feature streams as a fifth row for
+    every class; the FIFO weight row zeroes it out."""
     from repro.kernels.sched_score.ops import sched_score_topb
 
     k = cls_mask.shape[0]
     wait, fifo_key, cost, urgency, w_scored, w_fifo = _kernel_inputs(
-        batch, now_ms, cfg)
+        batch, now_ms, cfg, with_route=route is not None)
     rows = []
     for c in range(k):
         use_score = cfg.ord_scored[c] > 0
@@ -185,7 +211,8 @@ def _select_top_b_pallas(batch, cls_mask, now_ms, cfg, b: int):
         wait_c = jnp.where(use_score, wait, fifo_key)
         cost_c = jnp.where(use_score, cost, 1.0)
         urg_c = jnp.where(use_score, urgency, 0.0)
-        idx, _ = sched_score_topb(wait_c, cost_c, urg_c, cls_mask[c], w, b)
+        idx, _ = sched_score_topb(wait_c, cost_c, urg_c, cls_mask[c], w, b,
+                                  route)
         rows.append(idx)
     return jnp.stack(rows)
 
@@ -197,6 +224,7 @@ def select_top_b(
     cfg: PolicyConfig,
     b: int,
     backend: str = "jnp",
+    route=None,
 ):
     """Ranked head-of-line candidates for every class: the top `b`
     releases per class in release order (best first).
@@ -206,16 +234,19 @@ def select_top_b(
     the first min(n_elig[c], L) entries of row c are meaningful; column
     0 is bit-identical to `select_per_class` (same argmax/argmin with
     first-occurrence tie-breaking, which `lax.top_k` preserves).
+    `route` ((N,) f32 or None) adds the fleet route cost term to scored
+    classes on both backends; FIFO ranking never sees it.
     """
     b = min(int(b), batch.n)
     n_elig = cls_mask.sum(axis=1).astype(jnp.int32)
     if backend == "pallas":
-        return _select_top_b_pallas(batch, cls_mask, now_ms, cfg, b), n_elig
+        return _select_top_b_pallas(batch, cls_mask, now_ms, cfg, b,
+                                    route), n_elig
     if backend != "jnp":
         raise ValueError(f"unknown ordering backend: {backend!r}")
     fifo_key = jnp.where(cls_mask, batch.arrival_ms[None, :], jnp.inf)
     scores = jnp.where(
-        cls_mask, order_scores(batch, now_ms, cfg)[None, :], _NEG
+        cls_mask, order_scores(batch, now_ms, cfg, route)[None, :], _NEG
     )
     _, fifo_rank = jax.lax.top_k(-fifo_key, b)   # (K, L) earliest-first
     _, sc_rank = jax.lax.top_k(scores, b)        # (K, L) best-score-first

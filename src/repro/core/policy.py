@@ -75,6 +75,11 @@ class PolicyConfig(NamedTuple):
     ord_w_size: jnp.ndarray          # () f32 weight on size/ref (penalty)
     ord_w_urg: jnp.ndarray           # () f32 weight on deadline urgency
     ord_ref_tokens: jnp.ndarray      # () f32 size normalizer
+    ord_w_route: jnp.ndarray         # () f32 weight on the fleet route
+                                     #        cost term (seconds of
+                                     #        predicted queue delay at the
+                                     #        request's best endpoint;
+                                     #        unused outside fleet mode)
 
     # --- overload control (layer 3) ---
     olc_enabled: jnp.ndarray         # () f32 0/1
@@ -130,6 +135,7 @@ def base_policy(**overrides) -> PolicyConfig:
         ord_w_size=_f(0.6),
         ord_w_urg=_f(0.8),
         ord_ref_tokens=_f(512.0),
+        ord_w_route=_f(1.0),
         olc_enabled=_f(1.0),
         olc_w_load=_f(0.40),
         olc_w_queue=_f(0.30),

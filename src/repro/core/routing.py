@@ -1,0 +1,106 @@
+"""Layer 0 — fleet routing: endpoint choice above allocation (DESIGN.md §10).
+
+With a (P,) provider axis every release carries two decisions: *which
+request* (the three paper layers, unchanged) and *which endpoint* (this
+module).  Both read the same client-observable signals — per-endpoint
+outstanding counts, comfort estimates, rate-limit pressure — and both
+are pure functions, so the fleet engine and the live `FleetProvider`
+share one definition of the routing cost.
+
+The cost of sending request r to endpoint p is a predicted completion
+time:
+
+    cost[p, r] = unloaded(p, r) * (1 + inflight[p] / comfort[p])
+                 + 429_pressure[p]          (+ UNAVAIL if p is down)
+
+  * `unloaded(p, r) = base_ms[p] + ms_per_token[p] * p50[r]` — the
+    endpoint's speed on this request's predicted size;
+  * the load factor is a first-order queue-delay estimate: a fleet
+    client cannot see the provider's true slowdown curve, only its own
+    outstanding count per endpoint;
+  * `429_pressure[p]` charges the expected Retry-After cost scaled by
+    the fraction of the endpoint's class buckets that are dry — an
+    endpoint that just bounced work is de-prioritized before it bounces
+    more;
+  * a down endpoint gets the finite `UNAVAIL` penalty (not inf: the
+    cost feeds score arithmetic, and inf would poison the min when the
+    whole fleet is down).
+
+`route_requests` returns (endpoint, route): the per-request argmin
+endpoint, and the min cost in seconds — the *route score term* the
+ordering layer subtracts (requests whose best endpoint is congested
+rank later; `PolicyConfig.ord_w_route` weights the term, and the Pallas
+`sched_score` kernels carry it as a fifth feature row).
+
+Everything is integer counts, schedule values, and elementwise f32
+chains routed through `pinned`, so the windowed and dense fleet engines
+compute bit-identical routes over the same requests (the same
+cross-program discipline as `ordering.order_scores`).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import jax.numpy as jnp
+
+from repro.core.numerics import pinned
+from repro.core.types import FleetState
+
+if TYPE_CHECKING:  # annotation-only: core must not import sim at runtime
+    from repro.sim.provider import FleetPhysics
+
+# Finite "effectively never" routing penalty for a down endpoint: large
+# enough to dominate any real predicted delay, small enough that
+# cost arithmetic (and the route score term) stays finite when the
+# whole fleet is down.
+UNAVAIL_MS = 1e9
+
+
+def route_requests(
+    fphys: FleetPhysics,
+    fleet: FleetState,
+    p50: jnp.ndarray,
+    comfort_t=None,
+    avail_t=None,
+    retry_after_ms=None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Score every (endpoint, request) pair; pick each request's endpoint.
+
+    fphys: (P,)-leaf fleet physics; fleet: current `FleetState`;
+    p50: (N,) f32 predicted sizes (any N — the dense batch or a window
+    view); comfort_t: (P,) f32 brownout row or None; avail_t: (P,) f32
+    availability row or None; retry_after_ms: () f32 when a limiter is
+    configured (enables the 429-pressure term).
+
+    Returns (endpoint (N,) i32, route (N,) f32): the argmin endpoint
+    per request (ties to the lowest index) and the min predicted
+    completion cost in seconds — the ordering layer's route score term.
+    """
+    comfort = fphys.comfort_concurrency
+    if comfort_t is not None:
+        comfort = comfort * jnp.asarray(comfort_t, jnp.float32)
+    # integer outstanding count over comfort: a deterministic, width-
+    # independent congestion estimate (the float inflight_tokens sum
+    # reduces at engine width and is NOT cross-engine stable)
+    load = fleet.inflight.astype(jnp.float32) / jnp.maximum(comfort, 1.0)
+    penalty = jnp.zeros_like(load)
+    if retry_after_ms is not None:
+        # 429 pressure: expected Retry-After, scaled by how much of the
+        # endpoint's rate budget is dry (fraction of class buckets
+        # without a whole grant left)
+        dry = (fleet.tb_tokens < 1.0).mean(axis=1)
+        penalty = jnp.asarray(retry_after_ms, jnp.float32) * dry
+    # the barrier isolates the cost chain from differently-shaped
+    # producers so both engine programs lower it identically (the same
+    # cross-program pin as ordering.order_scores)
+    base, mpt, loadv, pen = pinned(
+        (fphys.base_ms, fphys.ms_per_token, load, penalty))
+    unloaded = base[:, None] + mpt[:, None] * p50[None, :]   # (P, N)
+    cost = unloaded * (1.0 + loadv[:, None]) + pen[:, None]
+    if avail_t is not None:
+        cost = jnp.where(
+            jnp.asarray(avail_t, jnp.float32)[:, None] < 0.5,
+            jnp.float32(UNAVAIL_MS), cost)
+    endpoint = jnp.argmin(cost, axis=0).astype(jnp.int32)
+    route = pinned(jnp.min(cost, axis=0) * 1e-3)
+    return endpoint, route

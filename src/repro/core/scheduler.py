@@ -22,6 +22,14 @@ Both entry points are consumed by the simulation engine
 (repro.sim.engine) and the live serving adapter (repro.serving.blackbox),
 so the policy logic is written once.
 
+Fleet dispatch (DESIGN.md §10) slots in *above* these layers: when a
+`(N,)` endpoint assignment and `(N,)` route-cost vector are provided
+(from `core.routing.route_requests`), the route cost joins the ordering
+score as a fourth term and `schedule_batch` gathers the chosen
+endpoint into `BatchDecision.provider_idx` per grant — which-request
+and which-endpoint stay separable decisions, and with `endpoint=None`
+the compiled program is the single-provider one unchanged.
+
 The class count K is static — the length of `PolicyConfig`'s per-class
 arrays and of `SchedState.deficit`.  All per-class computation here is
 vectorized over a (K, N) class-membership mask (no Python loop over
@@ -31,7 +39,7 @@ compiled program shape serves the paper's 2-lane split, a per-bucket
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +73,10 @@ class BatchDecision(NamedTuple):
     severity: jnp.ndarray     # () f32 severity shared by all B decisions
     deficit: jnp.ndarray      # (K,) f32 updated allocation deficits
     rr_turn: jnp.ndarray      # () int32 updated FQ pointer
+    # (B,) int32 fleet endpoint per grant (fleet mode only; None in
+    # single-provider mode — the absence is pytree structure, so the
+    # P=1-free program is byte-identical to the pre-fleet one)
+    provider_idx: Optional[jnp.ndarray] = None
 
 
 IDLE = -1
@@ -179,6 +191,8 @@ def schedule_batch(
     state: SimState,
     max_grants: int = 1,
     backend: str = "jnp",
+    route=None,
+    endpoint=None,
 ) -> BatchDecision:
     """Grant up to `max_grants` releases in one vectorized pass.
 
@@ -197,6 +211,14 @@ def schedule_batch(
 
     `max_grants` and `backend` must be static under jit.  With
     max_grants=1 the decision stream is bit-exact with `schedule_slot`.
+
+    Fleet mode (`route`/`endpoint` from `routing.route_requests`): the
+    (N,) route term joins the scored ordering, and each grant's row in
+    `BatchDecision.provider_idx` is the granted request's pre-computed
+    best endpoint — routing happens above allocation, so the three
+    paper layers are unchanged and a (P,)-aware consumer only has to
+    gather.  Both default to None; passing neither reproduces the
+    single-provider program exactly.
     """
     k = n_classes(cfg)
     bmax = min(int(max_grants), batch.n)
@@ -210,7 +232,7 @@ def schedule_batch(
 
     # --- layer 2 once: ranked candidates per class + global FIFO lane
     rank_idx, n_elig_cls = ordering.select_top_b(
-        batch, elig_kn, now, cfg, bmax, backend=backend
+        batch, elig_kn, now, cfg, bmax, backend=backend, route=route
     )
     glob_idx, n_elig_tot = ordering.rank_fifo(batch, elig, bmax,
                                               backend=backend)
@@ -310,6 +332,12 @@ def schedule_batch(
     (deficit, rr_turn, _, _, _, _, actions, idxs, infl_at) = jax.lax.fori_loop(
         0, bmax, grant, carry0
     )
+    provider_idx = None
+    if endpoint is not None:
+        # gather-only: the endpoint choice was fixed before allocation,
+        # so granting never re-routes (integer gather, no float math)
+        provider_idx = endpoint[jnp.clip(idxs, 0, batch.n - 1)].astype(
+            jnp.int32)
     return BatchDecision(
         actions=actions,
         req_idx=idxs,
@@ -317,4 +345,5 @@ def schedule_batch(
         severity=sev,
         deficit=deficit,
         rr_turn=rr_turn,
+        provider_idx=provider_idx,
     )

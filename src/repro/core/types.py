@@ -14,7 +14,7 @@ and service classes are interactive (short) vs heavy (everything else).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 
@@ -76,6 +76,12 @@ class RequestState(NamedTuple):
     n_throttles: jnp.ndarray  # (N,) int32 provider 429s this request saw
                               #        (rate-limited sends that bounced with
                               #        a client-visible retry-after)
+    endpoint: Optional[jnp.ndarray] = None
+                              # (N,) int32 fleet endpoint the request was
+                              #        last routed to (fleet mode only;
+                              #        None = single-provider — absence is
+                              #        pytree structure, so the P=1-free
+                              #        program is unchanged)
 
 
 class SchedState(NamedTuple):
@@ -103,11 +109,32 @@ class ProviderState(NamedTuple):
     n_throttled: jnp.ndarray    # () int32 total 429-style bounces
 
 
+class FleetState(NamedTuple):
+    """Per-endpoint provider state along the fleet axis P (DESIGN.md §10).
+
+    The fleet generalization of `ProviderState`: every aggregate signal
+    gains a leading (P,) axis.  Present only in fleet mode
+    (`SimState.fleet` is None otherwise — absence is pytree structure,
+    so the single-provider program never traces a fleet branch).  In
+    fleet mode `ProviderState` keeps the *global* totals (the
+    allocation/overload layers are endpoint-agnostic); `FleetState`
+    carries the per-endpoint split the routing layer scores.
+    """
+
+    inflight: jnp.ndarray         # (P,) int32 outstanding per endpoint
+    inflight_tokens: jnp.ndarray  # (P,) float32 outstanding predicted work
+    tb_tokens: jnp.ndarray        # (P, K) float32 per-endpoint rate grants
+    n_throttled: jnp.ndarray      # (P,) int32 429 bounces per endpoint
+    n_requeued: jnp.ndarray       # (P,) int32 in-flight requests requeued
+                                  #       by an endpoint failure (failover)
+
+
 class SimState(NamedTuple):
     now_ms: jnp.ndarray  # () float32
     req: RequestState
     sched: SchedState
     provider: ProviderState
+    fleet: Optional[FleetState] = None  # (P,) fleet split; None = single
 
 
 class WindowCarry(NamedTuple):
@@ -166,6 +193,18 @@ def init_provider_state(n_classes: int = N_CLASSES) -> ProviderState:
         inflight_tokens=jnp.zeros((), jnp.float32),
         tb_tokens=jnp.zeros((n_classes,), jnp.float32),
         n_throttled=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_fleet_state(p: int, n_classes: int = N_CLASSES) -> FleetState:
+    # tb_tokens starts at zero; the engine seeds it to the configured
+    # per-endpoint burst capacity when a limiter is active (run_sim).
+    return FleetState(
+        inflight=jnp.zeros((p,), jnp.int32),
+        inflight_tokens=jnp.zeros((p,), jnp.float32),
+        tb_tokens=jnp.zeros((p, n_classes), jnp.float32),
+        n_throttled=jnp.zeros((p,), jnp.int32),
+        n_requeued=jnp.zeros((p,), jnp.int32),
     )
 
 

@@ -18,10 +18,10 @@ from repro.kernels.sched_score.sched_score import (
 _LANE = 128  # TPU lane width: block shapes must stay a multiple of this
 
 
-def _pad_queue(wait, cost, urgency, mask, blk: int):
+def _pad_queue(wait, cost, urgency, mask, blk: int, route=None):
     """Pad the queue axis to a block multiple with inert lanes
-    (mask=False, unit cost).  Padding is shape-static, so jit
-    specializes once per (n, blk)."""
+    (mask=False, unit cost, zero route).  Padding is shape-static, so
+    jit specializes once per (n, blk)."""
     n = wait.shape[0]
     # shrink the block for short queues without losing lane alignment
     blk = min(blk, max(_LANE, -(-n // _LANE) * _LANE))
@@ -32,21 +32,26 @@ def _pad_queue(wait, cost, urgency, mask, blk: int):
         cost = jnp.concatenate([cost, jnp.ones((pad,), cost.dtype)])
         urgency = jnp.concatenate([urgency, zf])
         mask = jnp.concatenate([mask, jnp.zeros((pad,), bool)])
-    return wait, cost, urgency, mask, blk
+        if route is not None:
+            route = jnp.concatenate([route, jnp.zeros((pad,), route.dtype)])
+    return wait, cost, urgency, mask, route, blk
 
 
-def sched_score_argmax(wait, cost, urgency, mask, weights, *, blk: int = 2048):
+def sched_score_argmax(wait, cost, urgency, mask, weights, route=None, *,
+                       blk: int = 2048):
     """wait/cost/urgency: (n,) f32; mask: (n,) bool; weights: (4,)
     [w_wait, w_size, w_urg, ref_tokens]. Returns (best_idx i32, best_score).
     Any n is accepted — the queue is padded internally to a lane-aligned
-    block multiple with mask=False lanes."""
-    wait, cost, urgency, mask, blk = _pad_queue(wait, cost, urgency, mask, blk)
-    return _argmax_kernel(wait, cost, urgency, mask, weights, blk=blk,
+    block multiple with mask=False lanes.  `route` (n,) f32 enables the
+    fleet route term with a (5,) weights vector [..., w_route]."""
+    wait, cost, urgency, mask, route, blk = _pad_queue(
+        wait, cost, urgency, mask, blk, route)
+    return _argmax_kernel(wait, cost, urgency, mask, weights, route, blk=blk,
                           interpret=interpret_mode())
 
 
-def sched_score_topb(wait, cost, urgency, mask, weights, b: int, *,
-                     blk: int = 2048):
+def sched_score_topb(wait, cost, urgency, mask, weights, b: int, route=None,
+                     *, blk: int = 2048):
     """Fused score + partial top-B over a queue of any length n >= b.
 
     Returns (idx (b,) i32, score (b,) f32) in release order, matching
@@ -54,17 +59,20 @@ def sched_score_topb(wait, cost, urgency, mask, weights, b: int, *,
     tie-breaking.  Padding lanes are mask=False: their NEG scores rank
     after every real lane's (real masked lanes share the NEG value but
     precede the padding in index order), so with b <= n a padded index
-    can never reach the output.
+    can never reach the output.  `route` (n,) f32 enables the fleet
+    route term with a (5,) weights vector [..., w_route].
     """
     n = wait.shape[0]
     b = min(int(b), n)
-    wait, cost, urgency, mask, blk = _pad_queue(wait, cost, urgency, mask, blk)
-    return _topb_kernel(wait, cost, urgency, mask, weights, b=b, blk=blk,
-                        interpret=interpret_mode())
+    wait, cost, urgency, mask, route, blk = _pad_queue(
+        wait, cost, urgency, mask, blk, route)
+    return _topb_kernel(wait, cost, urgency, mask, weights, route, b=b,
+                        blk=blk, interpret=interpret_mode())
 
 
 def sched_compact_topb(slot_req, alive, wait, cost, urgency, weights, b: int,
-                       *, blk: int = 128, interpret: bool | None = None):
+                       route=None, *, blk: int = 128,
+                       interpret: bool | None = None):
     """Fused tick megakernel: compaction scatter + score + partial top-B
     in one VMEM pass over a slot pool of any width w >= 1.
 
@@ -78,17 +86,19 @@ def sched_compact_topb(slot_req, alive, wait, cost, urgency, weights, b: int,
     region when b exceeds the live count.  Padding lanes are
     alive=False at the tail: they never shift compacted positions and
     rank with the other dead slots, which the exhausted-region rule
-    replaces with (rank, NEG) sentinels either way."""
+    replaces with (rank, NEG) sentinels either way.  `route` (w,) f32
+    enables the fleet route term with a (5,) weights vector
+    [..., w_route]."""
     w = slot_req.shape[0]
     b = min(int(b), w)
-    wait, cost, urgency, alive, blk = _pad_queue(wait, cost, urgency, alive,
-                                                 blk)
+    wait, cost, urgency, alive, route, blk = _pad_queue(
+        wait, cost, urgency, alive, blk, route)
     pad = wait.shape[0] - w
     if pad:
         slot_req = jnp.concatenate(
             [slot_req.astype(jnp.int32), jnp.full((pad,), -1, jnp.int32)])
     interp = interpret_mode() if interpret is None else interpret
     comp, n_live, idx, score = _compact_topb_kernel(
-        slot_req, alive, wait, cost, urgency, weights, b=b, blk=blk,
+        slot_req, alive, wait, cost, urgency, weights, route, b=b, blk=blk,
         interpret=interp)
     return comp[:w], n_live, idx, score

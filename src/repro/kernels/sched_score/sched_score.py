@@ -36,6 +36,14 @@ same arithmetic, and the stable order means slot-order ties are
 compacted-order ties.  Ranks at or beyond the live count are
 overwritten with (rank, NEG) sentinel rows, matching `lax.top_k` over
 the compacted sentinel tail bit for bit.
+
+Fleet route term (DESIGN.md §10): every kernel optionally takes a fifth
+feature row `route` (per-request predicted queue delay at its best
+endpoint, seconds) and a fifth weight `w_route`, subtracting
+`w_route * route` from the score.  Presence is static (`has_route`),
+so single-provider callers compile the exact four-row program; the
+feature axis is the sublane (second-to-last) dimension, so growing it
+4 -> 5 leaves the lane-aligned minor axis untouched.
 """
 from __future__ import annotations
 
@@ -49,8 +57,27 @@ from jax.experimental.pallas import tpu as pltpu
 NEG = -1e30
 
 
+def _score_rows(arr_ref, w_ref, has_route: bool):
+    """Shared score evaluation: feature rows [wait, cost, urg(, route),
+    mask] against weights [w1, w2, w3, ref_tok(, w_route)].  The route
+    term is subtracted — a congested best endpoint ranks the request
+    later.  `has_route` is trace-static, so the four-row program is
+    unchanged byte for byte when off."""
+    wait = arr_ref[0, :]
+    cost = arr_ref[1, :]
+    urg = arr_ref[2, :]
+    mask = arr_ref[4 if has_route else 3, :]
+    w1, w2, w3, ref_tok = w_ref[0, 0], w_ref[0, 1], w_ref[0, 2], w_ref[0, 3]
+
+    c = jnp.maximum(cost, 1.0)
+    score = w1 * (wait / c) - w2 * (c / ref_tok) + w3 * urg
+    if has_route:
+        score = score - w_ref[0, 4] * arr_ref[3, :]
+    return score, mask
+
+
 def _kernel(arr_ref, w_ref, out_idx_ref, out_score_ref, best_ref, *,
-            blk: int, nb: int):
+            blk: int, nb: int, has_route: bool):
     bi = pl.program_id(0)
 
     @pl.when(bi == 0)
@@ -58,14 +85,7 @@ def _kernel(arr_ref, w_ref, out_idx_ref, out_score_ref, best_ref, *,
         best_ref[0, 0] = NEG
         best_ref[0, 1] = -1.0
 
-    wait = arr_ref[0, :]
-    cost = arr_ref[1, :]
-    urg = arr_ref[2, :]
-    mask = arr_ref[3, :]
-    w1, w2, w3, ref_tok = w_ref[0, 0], w_ref[0, 1], w_ref[0, 2], w_ref[0, 3]
-
-    c = jnp.maximum(cost, 1.0)
-    score = w1 * (wait / c) - w2 * (c / ref_tok) + w3 * urg
+    score, mask = _score_rows(arr_ref, w_ref, has_route)
     score = jnp.where(mask > 0, score, NEG)
 
     j = jnp.argmax(score)
@@ -82,28 +102,43 @@ def _kernel(arr_ref, w_ref, out_idx_ref, out_score_ref, best_ref, *,
         out_score_ref[0] = best_ref[0, 0]
 
 
+def _stack_features(wait, cost, urgency, mask, route):
+    """(rows, n) feature stack: [wait, cost, urg(, route), mask].  The
+    mask row stays last so `has_route` only inserts, never reorders."""
+    rows = [wait, cost, urgency]
+    if route is not None:
+        rows.append(route)
+    rows.append(mask.astype(jnp.float32))
+    return jnp.stack(rows)
+
+
 @functools.partial(jax.jit, static_argnames=("blk", "interpret"))
-def sched_score_argmax(wait, cost, urgency, mask, weights, *,
+def sched_score_argmax(wait, cost, urgency, mask, weights, route=None, *,
                        blk: int = 2048, interpret: bool = False):
     """wait/cost/urgency: (n,) f32; mask: (n,) bool; weights: (4,)
     [w_wait, w_size, w_urg, ref_tokens]. Returns (best_idx i32, best_score).
-    n must be a multiple of blk (callers pad with mask=False)."""
+    n must be a multiple of blk (callers pad with mask=False).
+    `route` (n,) f32 enables the fleet route term with a (5,) weights
+    vector [..., w_route]."""
     n = wait.shape[0]
     blk = min(blk, n)
     assert n % blk == 0, "pad the queue to a block multiple"
     nb = n // blk
-    arr = jnp.stack([wait, cost, urgency, mask.astype(jnp.float32)])  # (4, n)
-    w = weights.astype(jnp.float32)[None, :]                          # (1, 4)
+    has_route = route is not None
+    nf = 5 if has_route else 4
+    arr = _stack_features(wait, cost, urgency, mask, route)  # (nf, n)
+    w = weights.astype(jnp.float32)[None, :]                 # (1, nf)
 
-    kernel = functools.partial(_kernel, blk=blk, nb=nb)
+    kernel = functools.partial(_kernel, blk=blk, nb=nb, has_route=has_route)
     idx, score = pl.pallas_call(
         kernel,
         grid=(nb,),
         in_specs=[
-            pl.BlockSpec((4, blk), lambda b: (0, b)),
-            # (1, 4) weight vector: parameter block, Mosaic pads the
-            # tail lanes; not an accumulator tile
-            pl.BlockSpec((1, 4), lambda b: (0, 0)),  # reprolint: disable=RPL005
+            pl.BlockSpec((nf, blk), lambda b: (0, b)),
+            # (1, nf) weight vector: parameter block, Mosaic pads the
+            # tail lanes; not an accumulator tile (nf is the sublane-
+            # padded feature count, never the lane axis)
+            pl.BlockSpec((1, nf), lambda b: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1,), lambda b: (0,)),
@@ -130,7 +165,8 @@ _BPAD = 128  # scratch lane width; entries >= b are inert (+inf/-inf guards)
 
 
 def _topb_kernel(arr_ref, w_ref, out_idx_ref, out_score_ref,
-                 best_s_ref, best_i_ref, *, blk: int, nb: int, b: int):
+                 best_s_ref, best_i_ref, *, blk: int, nb: int, b: int,
+                 has_route: bool):
     bi = pl.program_id(0)
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, _BPAD), 1)
     in_set = lane < b
@@ -142,14 +178,7 @@ def _topb_kernel(arr_ref, w_ref, out_idx_ref, out_score_ref,
         best_s_ref[...] = jnp.full((1, _BPAD), -jnp.inf, jnp.float32)
         best_i_ref[...] = jnp.full((1, _BPAD), -1, jnp.int32)
 
-    wait = arr_ref[0, :]
-    cost = arr_ref[1, :]
-    urg = arr_ref[2, :]
-    mask = arr_ref[3, :]
-    w1, w2, w3, ref_tok = w_ref[0, 0], w_ref[0, 1], w_ref[0, 2], w_ref[0, 3]
-
-    c = jnp.maximum(cost, 1.0)
-    score = w1 * (wait / c) - w2 * (c / ref_tok) + w3 * urg
+    score, mask = _score_rows(arr_ref, w_ref, has_route)
     score = jnp.where(mask > 0, score, NEG)
     iota = jax.lax.broadcasted_iota(jnp.int32, (1, blk), 1)[0]
 
@@ -202,7 +231,8 @@ def _topb_kernel(arr_ref, w_ref, out_idx_ref, out_score_ref,
 
 def _compact_topb_kernel(req_ref, arr_ref, w_ref, out_req_ref, out_n_ref,
                          out_idx_ref, out_score_ref, best_s_ref, best_i_ref,
-                         *, blk: int, nb: int, b: int, w_total: int):
+                         *, blk: int, nb: int, b: int, w_total: int,
+                         has_route: bool):
     """One grid step = one compacted output block.
 
     Every step sees the full (W,) pool in VMEM (the window is capped at
@@ -224,7 +254,7 @@ def _compact_topb_kernel(req_ref, arr_ref, w_ref, out_req_ref, out_n_ref,
         best_s_ref[...] = jnp.full((1, _BPAD), -jnp.inf, jnp.float32)
         best_i_ref[...] = jnp.full((1, _BPAD), -1, jnp.int32)
 
-    alive = arr_ref[3, :] > 0.0                       # (W,)
+    alive = arr_ref[4 if has_route else 3, :] > 0.0   # (W,)
     req = req_ref[0, :]                               # (W,) i32
     cum = jnp.cumsum(alive.astype(jnp.int32))         # (W,) inclusive
     pos = cum - 1                                     # compacted slot of i
@@ -241,12 +271,7 @@ def _compact_topb_kernel(req_ref, arr_ref, w_ref, out_req_ref, out_n_ref,
     # --- this block's slot scores (features are pre-compaction: the
     # scatter only permutes values, so scoring before or after compaction
     # is the same arithmetic on the same f32 values)
-    wait = arr_ref[0, :]
-    cost = arr_ref[1, :]
-    urg = arr_ref[2, :]
-    w1, w2, w3, ref_tok = w_ref[0, 0], w_ref[0, 1], w_ref[0, 2], w_ref[0, 3]
-    c = jnp.maximum(cost, 1.0)
-    score = w1 * (wait / c) - w2 * (c / ref_tok) + w3 * urg
+    score, _ = _score_rows(arr_ref, w_ref, has_route)
     in_blk = (lane_w >= bi * blk) & (lane_w < (bi + 1) * blk)
     # dead slots carry the finite NEG (they may fill the exhausted region,
     # overwritten below); out-of-block lanes are -inf: not candidates here
@@ -290,7 +315,8 @@ def _compact_topb_kernel(req_ref, arr_ref, w_ref, out_req_ref, out_n_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("b", "blk", "interpret"))
-def sched_compact_topb(slot_req, alive, wait, cost, urgency, weights, *,
+def sched_compact_topb(slot_req, alive, wait, cost, urgency, weights,
+                       route=None, *,
                        b: int, blk: int = 128, interpret: bool = False):
     """Fused compaction scatter + score + partial top-B over a slot pool.
 
@@ -305,26 +331,31 @@ def sched_compact_topb(slot_req, alive, wait, cost, urgency, weights, *,
     stable compaction preserves first-occurrence tie order, and the
     exhausted region (rank >= n_live) yields (rank, NEG) exactly like
     `lax.top_k` over the sentinel tail.  w must be a multiple of blk
-    (callers pad with alive=False); requires b <= min(w, _BPAD)."""
+    (callers pad with alive=False); requires b <= min(w, _BPAD).
+    `route` (w,) f32 enables the fleet route term with a (5,) weights
+    vector [..., w_route]."""
     w = slot_req.shape[0]
     blk = min(blk, w)
     assert w % blk == 0, "pad the pool to a block multiple"
     assert 0 < b <= min(w, _BPAD), (b, w)
     nb = w // blk
-    req = slot_req.astype(jnp.int32)[None, :]                         # (1, w)
-    arr = jnp.stack([wait, cost, urgency, alive.astype(jnp.float32)])  # (4, w)
-    wts = weights.astype(jnp.float32)[None, :]                         # (1, 4)
+    has_route = route is not None
+    nf = 5 if has_route else 4
+    req = slot_req.astype(jnp.int32)[None, :]                 # (1, w)
+    arr = _stack_features(wait, cost, urgency, alive, route)  # (nf, w)
+    wts = weights.astype(jnp.float32)[None, :]                # (1, nf)
 
     kernel = functools.partial(
-        _compact_topb_kernel, blk=blk, nb=nb, b=b, w_total=w)
+        _compact_topb_kernel, blk=blk, nb=nb, b=b, w_total=w,
+        has_route=has_route)
     comp, n_live, idx, score = pl.pallas_call(
         kernel,
         grid=(nb,),
         in_specs=[
             pl.BlockSpec((1, w), lambda g: (0, 0)),
-            pl.BlockSpec((4, w), lambda g: (0, 0)),
-            # (1, 4) weight vector: parameter block, padded by Mosaic
-            pl.BlockSpec((1, 4), lambda g: (0, 0)),  # reprolint: disable=RPL005
+            pl.BlockSpec((nf, w), lambda g: (0, 0)),
+            # (1, nf) weight vector: parameter block, padded by Mosaic
+            pl.BlockSpec((1, nf), lambda g: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((blk,), lambda g: (g,)),
@@ -348,7 +379,7 @@ def sched_compact_topb(slot_req, alive, wait, cost, urgency, weights, *,
 
 
 @functools.partial(jax.jit, static_argnames=("b", "blk", "interpret"))
-def sched_score_topb(wait, cost, urgency, mask, weights, *,
+def sched_score_topb(wait, cost, urgency, mask, weights, route=None, *,
                      b: int, blk: int = 2048, interpret: bool = False):
     """Fused score + partial top-B.  wait/cost/urgency: (n,) f32; mask:
     (n,) bool; weights: (4,) [w_wait, w_size, w_urg, ref_tokens].
@@ -356,23 +387,27 @@ def sched_score_topb(wait, cost, urgency, mask, weights, *,
     first), matching `lax.top_k` over the masked score vector including
     first-occurrence tie-breaking.  n must be a multiple of blk (callers
     pad with mask=False); requires b <= min(blk, _BPAD) and b <= n so
-    sentinels can never reach the output."""
+    sentinels can never reach the output.  `route` (n,) f32 enables the
+    fleet route term with a (5,) weights vector [..., w_route]."""
     n = wait.shape[0]
     blk = min(blk, n)
     assert n % blk == 0, "pad the queue to a block multiple"
     assert 0 < b <= min(blk, _BPAD) and b <= n, (b, blk, n)
     nb = n // blk
-    arr = jnp.stack([wait, cost, urgency, mask.astype(jnp.float32)])  # (4, n)
-    w = weights.astype(jnp.float32)[None, :]                          # (1, 4)
+    has_route = route is not None
+    nf = 5 if has_route else 4
+    arr = _stack_features(wait, cost, urgency, mask, route)  # (nf, n)
+    w = weights.astype(jnp.float32)[None, :]                 # (1, nf)
 
-    kernel = functools.partial(_topb_kernel, blk=blk, nb=nb, b=b)
+    kernel = functools.partial(_topb_kernel, blk=blk, nb=nb, b=b,
+                               has_route=has_route)
     idx, score = pl.pallas_call(
         kernel,
         grid=(nb,),
         in_specs=[
-            pl.BlockSpec((4, blk), lambda g: (0, g)),
-            # (1, 4) weight vector: parameter block, padded by Mosaic
-            pl.BlockSpec((1, 4), lambda g: (0, 0)),  # reprolint: disable=RPL005
+            pl.BlockSpec((nf, blk), lambda g: (0, g)),
+            # (1, nf) weight vector: parameter block, padded by Mosaic
+            pl.BlockSpec((1, nf), lambda g: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((b,), lambda g: (0,)),

@@ -7,9 +7,13 @@ from repro.sim.metrics import (  # noqa: F401
     compute_phase_metrics,
 )
 from repro.sim.provider import (  # noqa: F401
+    Fleet,
+    FleetDynamics,
+    FleetPhysics,
     ProviderDynamics,
     ProviderPhysics,
     default_physics,
+    uniform_fleet_physics,
 )
 from repro.sim.runner import (  # noqa: F401
     run_cell,
@@ -19,8 +23,10 @@ from repro.sim.runner import (  # noqa: F401
 )
 from repro.sim.scenarios import (  # noqa: F401
     SCENARIOS,
+    FleetSpec,
     Phase,
     Scenario,
+    build_fleet,
     get_scenario,
     list_scenarios,
 )

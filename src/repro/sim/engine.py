@@ -41,6 +41,18 @@ policy cost is O(W), independent of the horizon population N; with
 W >= the peak live queue the decision stream and final request arrays
 are bit-exact with the dense engine (the pinned contract —
 tests/test_window_engine.py).
+
+Fleet axis (DESIGN.md §10): `run_sim(..., fleet=Fleet(phys, dyn))`
+stacks provider physics along a `(P,)` axis and runs the layer-0
+routing pass (`core.routing`) before dispatch — every grant carries an
+endpoint, service is priced against that endpoint's own inflight load,
+the rate limiter becomes a `(P, K)` bucket grid, and a dead endpoint's
+in-flight work is requeued (PENDING + Retry-After defer + throttle
+bump) before completions are computed.  Like every other optional
+mechanism, `fleet=None` is pytree structure: the fleet-free program is
+byte-identical to the pre-fleet engine, and at static P=1 the fleet
+engine takes scalar-gather branches that reproduce the single-provider
+arithmetic bit-for-bit (tests/test_fleet.py pins both).
 """
 from __future__ import annotations
 
@@ -53,6 +65,7 @@ from repro.core import overload as olc
 from repro.core.numerics import pinned
 from repro.core.policy import ALLOC_ADRR, PolicyConfig, n_classes
 from repro.core.scheduler import BatchDecision, schedule_batch
+from repro.core.routing import route_requests
 from repro.core.types import (
     ABANDONED,
     COMPLETED,
@@ -63,10 +76,12 @@ from repro.core.types import (
     RequestState,
     SimState,
     WindowCarry,
+    init_fleet_state,
     init_sim_state,
     init_window_carry,
 )
 from repro.sim.provider import (
+    Fleet,
     ProviderDynamics,
     ProviderPhysics,
     service_time_ms,
@@ -138,24 +153,49 @@ def _complete_and_timeout(
     phys: ProviderPhysics,
     batch: RequestBatch,
     state: SimState,
+    avail_t=None,
+    retry_after_ms=None,
 ) -> SimState:
     req = state.req
     now = state.now_ms
 
-    landed = (req.status == INFLIGHT) & (req.finish_ms <= now)
+    finish_ms = req.finish_ms
+    defer_until = req.defer_until
+    n_throttles = req.n_throttles
+    status0 = req.status
+    n_requeue_ep = None
+    if avail_t is not None:
+        # fleet failover: a down endpoint kills its in-flight work before
+        # any of it can land this tick — the client observes the drop and
+        # requeues with the provider's Retry-After backoff.  (The live
+        # `FleetProvider` drains gracefully instead; the engine models
+        # the harsher abrupt-kill failure, see DESIGN.md §10.)
+        ep = req.endpoint
+        down = jnp.asarray(avail_t, jnp.float32)[ep] < 0.5
+        requeue = (status0 == INFLIGHT) & down
+        status0 = jnp.where(requeue, PENDING, status0)
+        finish_ms = jnp.where(requeue, jnp.inf, finish_ms)
+        defer_until = jnp.where(requeue, now + retry_after_ms, defer_until)
+        n_throttles = n_throttles + requeue.astype(jnp.int32)
+        p = state.fleet.inflight.shape[0]
+        ep_oh = ep[None, :] == jnp.arange(p, dtype=jnp.int32)[:, None]
+        n_requeue_ep = (ep_oh & requeue[None, :]).sum(axis=1).astype(
+            jnp.int32)
+
+    landed = (status0 == INFLIGHT) & (finish_ms <= now)
     # hard provider/application timeout: a request whose end-to-end latency
     # blew past timeout_mult x its deadline budget is a *failure*, not a
     # completion — this is the implicit failure mode (paper §2) that
     # explicit overload shedding exists to replace.
-    e2e = req.finish_ms - batch.arrival_ms
+    e2e = finish_ms - batch.arrival_ms
     timed_out = landed & (
         e2e > cfg.timeout_mult[batch.bucket] * batch.deadline_budget_ms)
     done_now = landed & ~timed_out
-    status = jnp.where(done_now, COMPLETED, jnp.where(timed_out, ABANDONED, req.status))
+    status = jnp.where(done_now, COMPLETED, jnp.where(timed_out, ABANDONED, status0))
 
     # tail signal: observed end-to-end latency vs unloaded expectation
     ratio_sum, k = _completed_ratio_sum(
-        phys, done_now, req.finish_ms, batch.arrival_ms, batch.true_tokens)
+        phys, done_now, finish_ms, batch.arrival_ms, batch.true_tokens)
     # divide by the SAMPLE size: past the cap ratio_sum covers only the
     # first EMA_SAMPLE_CAP completions, and dividing by the full k would
     # bias the tail signal toward 0 (the drain tick routinely lands
@@ -186,8 +226,32 @@ def _complete_and_timeout(
     inflight = (status == INFLIGHT).sum().astype(jnp.int32)
     inflight_tokens = jnp.where(status == INFLIGHT, batch.p50, 0.0).sum()
 
+    fleet = state.fleet
+    if fleet is not None:
+        # per-endpoint recount: every INFLIGHT request carries its
+        # endpoint, so the split is an exact one-hot masked sum — the
+        # same recount-over-status discipline as the global counters
+        # (and like them, exact in the windowed engine because every
+        # INFLIGHT request lives in the window)
+        p = fleet.inflight.shape[0]
+        ep_oh = req.endpoint[None, :] == jnp.arange(p, dtype=jnp.int32)[:, None]
+        live = ep_oh & (status == INFLIGHT)[None, :]
+        fleet = fleet._replace(
+            inflight=live.sum(axis=1).astype(jnp.int32),
+            inflight_tokens=jnp.where(live, batch.p50[None, :], 0.0).sum(
+                axis=1),
+        )
+        if n_requeue_ep is not None:
+            fleet = fleet._replace(
+                n_requeued=fleet.n_requeued + n_requeue_ep)
+
     return state._replace(
-        req=req._replace(status=status),
+        req=req._replace(
+            status=status,
+            finish_ms=finish_ms,
+            defer_until=defer_until,
+            n_throttles=n_throttles,
+        ),
         sched=state.sched._replace(
             ema_latency_ratio=ema,
             n_completed_obs=state.sched.n_completed_obs
@@ -196,6 +260,7 @@ def _complete_and_timeout(
         provider=state.provider._replace(
             inflight=inflight, inflight_tokens=inflight_tokens
         ),
+        fleet=fleet,
     )
 
 
@@ -208,6 +273,7 @@ def _apply_batch(
     d: BatchDecision,
     comfort_scale=None,
     limiter: ProviderDynamics | None = None,
+    fleet: Fleet | None = None,
 ) -> SimState:
     """State transition for up to B grants, as one set of scatters.
 
@@ -224,6 +290,15 @@ def _apply_batch(
     Grants later in the same batch were decided against the optimistic
     inflight count (the client only observes the bounce after the send),
     which matches a real async client racing its own rate limit.
+
+    `fleet` (mutually exclusive with `limiter`) switches to the (P,)
+    provider axis: each grant lands on its `d.provider_idx` endpoint —
+    service physics gather that endpoint's curve at *its* outstanding
+    count, the rate limiter becomes the (P, K) per-endpoint bucket grid
+    (rank arithmetic over the flattened P*K keys), and the request
+    records its endpoint for the failover requeue.  At P == 1 the
+    gathers collapse to endpoint 0 and the arithmetic is the exact
+    single-provider program (the fleet P=1 bit-exactness contract).
     """
     n = batch.n
     req = state.req
@@ -244,6 +319,29 @@ def _apply_batch(
         throttled = admit & ~allowed
         admit = admit & allowed
 
+    fl_limited = False
+    if fleet is not None:
+        p = fleet.phys.base_ms.shape[0]
+        ep = jnp.clip(d.provider_idx, 0, p - 1)
+        # optimistic admits (pre-bounce): the per-endpoint service load
+        # mirrors d.inflight_at's optimism — the client only observes a
+        # 429 after the send
+        admit0 = admit
+        if fleet.dyn is not None and fleet.dyn.tb_refill is not None:
+            fl_limited = True
+            k = state.fleet.tb_tokens.shape[1]
+            gcls = jnp.clip(batch.cls[idx], 0, k - 1)
+            # same rank-vs-bucket rule as the single-provider limiter,
+            # over the flattened (P*K,) bucket keys
+            key = ep * k + gcls
+            take = (key[:, None] == jnp.arange(p * k, dtype=jnp.int32)) \
+                & admit[:, None]
+            rank = (jnp.cumsum(take, axis=0) * take).sum(axis=-1)
+            allowed = rank.astype(jnp.float32) <= \
+                state.fleet.tb_tokens.reshape(p * k)[key] + 1e-6
+            throttled = admit & ~allowed
+            admit = admit & allowed
+
     # per-grant service physics at the inflight level the grant saw —
     # identical floats to the sequential one-admit-at-a-time path.
     # NOTE: XLA:CPU contracts the trailing `service * jitter + now` into
@@ -251,9 +349,35 @@ def _apply_batch(
     # one fusion); the live client's MockProvider reproduces that
     # rounding explicitly (repro.client.provider._fma32) to keep
     # session-vs-engine finish floats bit-identical.
-    service = service_time_ms(
-        phys, batch.true_tokens[idx], d.inflight_at, jitter[idx], comfort_scale
-    )
+    if fleet is None:
+        service = service_time_ms(
+            phys, batch.true_tokens[idx], d.inflight_at, jitter[idx],
+            comfort_scale
+        )
+    elif p == 1:
+        # endpoint 0 scalar gathers: () leaves and the global inflight,
+        # exactly the single-provider arithmetic
+        phys_g = ProviderPhysics(*(a[0] for a in fleet.phys))
+        comfort_g = None if comfort_scale is None else \
+            jnp.asarray(comfort_scale, jnp.float32)[0]
+        service = service_time_ms(
+            phys_g, batch.true_tokens[idx], d.inflight_at, jitter[idx],
+            comfort_g
+        )
+    else:
+        # (B,)-leaf physics gathered per grant; the load each grant sees
+        # is its endpoint's outstanding count plus the same-endpoint
+        # admits granted earlier in this batch (exclusive cumsum)
+        phys_g = ProviderPhysics(*(a[ep] for a in fleet.phys))
+        ep_oh = jax.nn.one_hot(ep, p, dtype=jnp.int32) * admit0[:, None]
+        prior = jnp.cumsum(ep_oh, axis=0) - ep_oh
+        infl_ep = state.fleet.inflight[ep] + (
+            prior * jax.nn.one_hot(ep, p, dtype=jnp.int32)).sum(axis=1)
+        comfort_g = None if comfort_scale is None else \
+            jnp.asarray(comfort_scale, jnp.float32)[ep]
+        service = service_time_ms(
+            phys_g, batch.true_tokens[idx], infl_ep, jitter[idx], comfort_g
+        )
     finish = state.now_ms + service
     backoff = olc.defer_backoff(cfg, d.severity, req.n_defers[idx])
 
@@ -294,6 +418,48 @@ def _apply_batch(
         deficit = jnp.where(jnp.isfinite(deficit + refund),
                             deficit + refund, deficit)
 
+    fstate = state.fleet
+    endpoint = req.endpoint
+    if fleet is not None:
+        # record where each admit went (the failover requeue and the
+        # per-endpoint recount both read this) and split the aggregate
+        # updates along the endpoint axis
+        endpoint = endpoint.at[adm_i].set(ep, mode="drop")
+        adm_oh = jax.nn.one_hot(ep, p, dtype=jnp.int32) * admit[:, None]
+        fstate = fstate._replace(
+            inflight=fstate.inflight + adm_oh.sum(axis=0).astype(jnp.int32),
+            inflight_tokens=fstate.inflight_tokens
+            + (adm_oh.astype(jnp.float32) * batch.p50[idx][:, None]).sum(
+                axis=0),
+        )
+        if fl_limited:
+            thr_i = jnp.where(throttled, idx, drop)
+            defer_until = defer_until.at[thr_i].set(
+                state.now_ms + fleet.dyn.retry_after_ms, mode="drop")
+            n_throttles = n_throttles.at[thr_i].add(1, mode="drop")
+            consumed = (take & admit[:, None]).sum(axis=0).astype(
+                jnp.float32).reshape(p, k)
+            thr_oh = jax.nn.one_hot(ep, p, dtype=jnp.int32) \
+                * throttled[:, None]
+            fstate = fstate._replace(
+                tb_tokens=fstate.tb_tokens - consumed,
+                n_throttled=fstate.n_throttled
+                + thr_oh.sum(axis=0).astype(jnp.int32),
+            )
+            # deficit conservation — same refund as the single-provider
+            # limiter: the 429 blocked a charged release (ADRR only)
+            refund = (
+                jax.nn.one_hot(gcls, k)
+                * batch.p50[idx][:, None]
+                * throttled[:, None]
+            ).sum(axis=0) * (cfg.alloc_mode == ALLOC_ADRR)
+            deficit = jnp.where(jnp.isfinite(deficit + refund),
+                                deficit + refund, deficit)
+            provider = provider._replace(
+                n_throttled=provider.n_throttled
+                + throttled.sum().astype(jnp.int32),
+            )
+
     inflight = provider.inflight + admit.sum().astype(jnp.int32)
     inflight_tokens = provider.inflight_tokens + jnp.where(
         admit, batch.p50[idx], 0.0
@@ -307,11 +473,13 @@ def _apply_batch(
             defer_until=defer_until,
             n_defers=n_defers,
             n_throttles=n_throttles,
+            endpoint=endpoint,
         ),
         sched=state.sched._replace(deficit=deficit, rr_turn=d.rr_turn),
         provider=provider._replace(
             inflight=inflight, inflight_tokens=inflight_tokens
         ),
+        fleet=fstate,
     )
 
 
@@ -343,6 +511,7 @@ def _window_view(
         defer_until=req.defer_until[safe],
         n_defers=req.n_defers[safe],
         n_throttles=req.n_throttles[safe],
+        endpoint=None if req.endpoint is None else req.endpoint[safe],
     )
     return win_batch, win_req, occ
 
@@ -353,6 +522,8 @@ def _retire_window(
     batch: RequestBatch,
     state: SimState,
     win: WindowCarry,
+    avail_t=None,
+    retry_after_ms=None,
 ) -> tuple[SimState, jnp.ndarray]:
     """Windowed completion/timeout/stale pass: run the *dense* transition
     on the (W,) window view — one code path, so the formulas cannot
@@ -365,17 +536,32 @@ def _retire_window(
     n = batch.n
     win_batch, win_req, occ = _window_view(batch, state.req, win.slot_req)
     win_state = state._replace(req=win_req)
-    win_state = _complete_and_timeout(cfg, phys, win_batch, win_state)
+    win_state = _complete_and_timeout(cfg, phys, win_batch, win_state,
+                                      avail_t=avail_t,
+                                      retry_after_ms=retry_after_ms)
     status_w = win_state.req.status
     sidx = jnp.where(occ, win.slot_req, n)
-    status = state.req.status.at[sidx].set(status_w, mode="drop")
+    req = state.req
+    if avail_t is not None:
+        # the failover requeue rewrote more than status: scatter the
+        # reset finish/backoff/throttle fields into the dense arrays too
+        req = req._replace(
+            finish_ms=req.finish_ms.at[sidx].set(
+                win_state.req.finish_ms, mode="drop"),
+            defer_until=req.defer_until.at[sidx].set(
+                win_state.req.defer_until, mode="drop"),
+            n_throttles=req.n_throttles.at[sidx].set(
+                win_state.req.n_throttles, mode="drop"),
+        )
+    status = req.status.at[sidx].set(status_w, mode="drop")
     state = state._replace(
-        req=state.req._replace(status=status),
+        req=req._replace(status=status),
         sched=win_state.sched,
         # inflight is an exact recount (every INFLIGHT request lives in
         # the window); inflight_tokens is a diagnostics-only float whose
         # reduction width differs from the dense engine's (not pinned)
         provider=win_state.provider,
+        fleet=win_state.fleet,
     )
     alive = occ & ((status_w == PENDING) | (status_w == INFLIGHT))
     return state, alive
@@ -430,11 +616,13 @@ def sim_tick(
     k_slots: int,
     backend: str,
     dynamics: ProviderDynamics | None = None,
+    fleet: Fleet | None = None,
     collect_decisions: bool = False,
 ):
     """One decision epoch of the engine as a single traceable body:
 
-      retire -> compact + admit -> limiter refill -> dispatch -> apply
+      retire -> compact + admit -> limiter refill -> route -> dispatch
+      -> apply
 
     This is THE per-tick program — `run_sim` scans it, and the live
     `ClientSession` fused tick is its transport-boundary sibling
@@ -442,19 +630,32 @@ def sim_tick(
     split across the provider round-trip).  Module-level and explicit
     so the two paths share one definition of the tick, not two copies
     that drift.  `win=None` runs the dense O(N) transition; a
-    `WindowCarry` runs the O(W) active-window path.  Returns
-    (state, win, ys) with ys the per-tick decision trace row (or None).
+    `WindowCarry` runs the O(W) active-window path.  `fleet` switches
+    every stage to the (P,) provider axis: the retire pass requeues
+    in-flight work on down endpoints, the refill feeds the (P, K)
+    bucket grid, and `routing.route_requests` fixes each request's
+    endpoint (and route score term) before dispatch.  At the static
+    P == 1 the route term is absent and the tick is the exact
+    single-provider program.  Returns (state, win, ys) with ys the
+    per-tick decision trace row (or None).
     """
     windowed = win is not None
     has_limiter = dynamics is not None and dynamics.tb_refill is not None
-    t_idx, comfort_t, refill_t = xs
+    fl_dyn = fleet.dyn if fleet is not None else None
+    has_fleet_limiter = fl_dyn is not None and fl_dyn.tb_refill is not None
+    t_idx, comfort_t, refill_t, avail_t = xs
+    retry_ms = fl_dyn.retry_after_ms if avail_t is not None else None
     now = (t_idx + 1).astype(jnp.float32) * dt_ms
     state = state._replace(now_ms=now)
     if windowed:
-        state, alive = _retire_window(policy, phys, batch, state, win)
+        state, alive = _retire_window(policy, phys, batch, state, win,
+                                      avail_t=avail_t,
+                                      retry_after_ms=retry_ms)
         win = _compact_and_admit(batch, win, alive, now)
     else:
-        state = _complete_and_timeout(policy, phys, batch, state)
+        state = _complete_and_timeout(policy, phys, batch, state,
+                                      avail_t=avail_t,
+                                      retry_after_ms=retry_ms)
     if has_limiter:
         state = state._replace(
             provider=state.provider._replace(
@@ -464,20 +665,47 @@ def sim_tick(
                 )
             )
         )
+    if has_fleet_limiter:
+        state = state._replace(
+            fleet=state.fleet._replace(
+                tb_tokens=jnp.minimum(
+                    state.fleet.tb_tokens + refill_t,
+                    fl_dyn.tb_capacity,
+                )
+            )
+        )
     if windowed:
         win_batch, win_req, _ = _window_view(batch, state.req, win.slot_req)
         d_batch, d_state = win_batch, state._replace(req=win_req)
     else:
         d_batch, d_state = batch, state
+    route = endpoint = None
+    if fleet is not None:
+        p = fleet.phys.base_ms.shape[0]
+        if p > 1:
+            endpoint, route = route_requests(
+                fleet.phys, state.fleet, d_batch.p50,
+                comfort_t=comfort_t, avail_t=avail_t,
+                retry_after_ms=fl_dyn.retry_after_ms
+                if has_fleet_limiter else None,
+            )
+        else:
+            # static P == 1: no routing choice exists — endpoint is an
+            # integer constant and route stays None, so the scored
+            # ordering program is exactly the single-provider one
+            endpoint = jnp.zeros((d_batch.p50.shape[0],), jnp.int32)
     d = schedule_batch(
         policy, d_batch, d_state,
         max_grants=k_slots,
         backend=backend,
+        route=route,
+        endpoint=endpoint,
     )
     if windowed:
         # slot-local decision -> global request ids; empty slots
         # translate to the out-of-range n and fall into the scatter
-        # drop path (IDLE rows never carry a release anyway)
+        # drop path (IDLE rows never carry a release anyway).
+        # d.provider_idx is already endpoint-valued — no translation.
         w = win.slot_req.shape[0]
         d = d._replace(
             req_idx=win.slot_req[jnp.clip(d.req_idx, 0, w - 1)])
@@ -485,6 +713,7 @@ def sim_tick(
         policy, phys, batch, jitter, state, d,
         comfort_scale=comfort_t,
         limiter=dynamics if has_limiter else None,
+        fleet=fleet,
     )
     ys = (d.actions, d.req_idx, d.severity) if collect_decisions else None
     return state, win, ys
@@ -498,6 +727,7 @@ def run_sim(
     sim_cfg: SimConfig = SimConfig(),
     dynamics: ProviderDynamics | None = None,
     collect_decisions: bool = False,
+    fleet: Fleet | None = None,
 ) -> SimState | tuple[SimState, tuple]:
     """Run the full horizon; returns the final SimState (jit-friendly).
 
@@ -517,8 +747,22 @@ def run_sim(
     decision trace `(actions (T,B), req_idx (T,B), severity (T,))` with
     req_idx in *global* request ids on both engines — the hook the
     per-decision bit-exactness pins compare.
+
+    `fleet` (mutually exclusive with `dynamics`) switches to the (P,)
+    provider axis (DESIGN.md §10): per-endpoint physics/schedules drive
+    service and failover, `routing.route_requests` fixes each request's
+    endpoint before dispatch, and `SimState.fleet` carries the
+    per-endpoint split.  `phys` remains the *reference* physics the
+    tail-EMA expectation is computed against (one canonical
+    expectation, independent of which endpoint served the request).
+    With P == 1 and no fleet dynamics the decision sequence is
+    bit-exact with the single-provider engine.
     """
     n = batch.n
+    if fleet is not None and dynamics is not None:
+        raise ValueError(
+            "fleet and dynamics are mutually exclusive: use "
+            "FleetDynamics for per-endpoint schedules")
     windowed = sim_cfg.window is not None
     state0 = init_sim_state(n, n_classes(policy))
     has_brownout = dynamics is not None and dynamics.comfort_scale is not None
@@ -527,6 +771,17 @@ def run_sim(
         # buckets start full: the burst capacity is available at t=0
         state0 = state0._replace(
             provider=state0.provider._replace(tb_tokens=dynamics.tb_capacity)
+        )
+    fl_dyn = fleet.dyn if fleet is not None else None
+    has_fleet_limiter = fl_dyn is not None and fl_dyn.tb_refill is not None
+    if fleet is not None:
+        p = fleet.phys.base_ms.shape[0]
+        fstate0 = init_fleet_state(p, n_classes(policy))
+        if has_fleet_limiter:
+            fstate0 = fstate0._replace(tb_tokens=fl_dyn.tb_capacity)
+        state0 = state0._replace(
+            req=state0.req._replace(endpoint=jnp.zeros((n,), jnp.int32)),
+            fleet=fstate0,
         )
 
     def tick(carry, xs):
@@ -537,6 +792,7 @@ def run_sim(
             k_slots=sim_cfg.k_slots,
             backend=sim_cfg.ordering_backend,
             dynamics=dynamics,
+            fleet=fleet,
             collect_decisions=collect_decisions,
         )
         return (state, win), ys
@@ -544,8 +800,11 @@ def run_sim(
     win0 = init_window_carry(sim_cfg.window, n) if windowed else None
     xs = (
         jnp.arange(sim_cfg.n_ticks),
-        dynamics.comfort_scale if has_brownout else None,
-        dynamics.tb_refill if has_limiter else None,
+        fl_dyn.comfort_scale if fl_dyn is not None
+        else (dynamics.comfort_scale if has_brownout else None),
+        fl_dyn.tb_refill if has_fleet_limiter
+        else (dynamics.tb_refill if has_limiter else None),
+        fl_dyn.avail if fl_dyn is not None else None,
     )
     (final, win), trace = jax.lax.scan(tick, (state0, win0), xs)
     # drain bookkeeping: completions that land exactly at/after the horizon

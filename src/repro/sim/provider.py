@@ -183,6 +183,118 @@ def token_bucket_schedule(
     return refill, capacity
 
 
+# ---------------------------------------------------------------------------
+# Fleet: a (P,) provider axis (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+class FleetPhysics(NamedTuple):
+    """`ProviderPhysics` stacked along a (P,) endpoint axis.
+
+    Every leaf is (P,)-shaped; `service_time_ms` works unchanged on a
+    per-grant gather of these leaves (a `ProviderPhysics` whose leaves
+    are (B,)-shaped), because the physics formulas are elementwise.
+    """
+
+    base_ms: jnp.ndarray              # (P,) f32
+    ms_per_token: jnp.ndarray         # (P,) f32
+    comfort_concurrency: jnp.ndarray  # (P,) f32
+    slowdown_slope: jnp.ndarray       # (P,) f32
+    slowdown_quad: jnp.ndarray        # (P,) f32
+
+
+class FleetDynamics(NamedTuple):
+    """Per-tick, per-endpoint schedules for the fleet engine scan.
+
+    The fleet generalization of `ProviderDynamics`: each schedule gains
+    a (P,) endpoint axis, plus `avail` — endpoint availability, the
+    failover mechanism.  An endpoint whose `avail[t, p] < 0.5` refuses
+    new work *and* kills its in-flight requests: the engine requeues
+    them (status back to PENDING, `defer_until = now + retry_after_ms`,
+    a throttle-count bump) and the client re-dispatches elsewhere.
+    None fields follow the single-provider convention (absence is pytree
+    structure); `retry_after_ms` is always present — both the limiter
+    bounce and the failover requeue use it.
+    """
+
+    avail: Optional[jnp.ndarray]          # (T, P) f32 0/1 endpoint up
+    comfort_scale: Optional[jnp.ndarray]  # (T, P) f32 brownout multiplier
+    tb_refill: Optional[jnp.ndarray]      # (T, P, K) f32 grants per tick
+    tb_capacity: Optional[jnp.ndarray]    # (P, K) f32 bucket burst size
+    retry_after_ms: jnp.ndarray           # () f32 client-visible Retry-After
+
+
+class Fleet(NamedTuple):
+    """Static-shape bundle `run_sim(..., fleet=...)` consumes."""
+
+    phys: FleetPhysics
+    dyn: FleetDynamics
+
+
+def uniform_fleet_physics(phys: ProviderPhysics, p: int,
+                          speed_mult=None,
+                          comfort_mult=None) -> FleetPhysics:
+    """Broadcast one endpoint's physics across a fleet of P.
+
+    `speed_mult[p]` scales the per-token cost (values < 1 are *faster*
+    endpoints); `comfort_mult[p]` scales the comfort knee — together
+    they express skewed fleets (regions, model tiers) without a second
+    physics model.
+    """
+    ones = jnp.ones((p,), jnp.float32)
+    speed = ones if speed_mult is None else jnp.asarray(speed_mult, jnp.float32)
+    comfort = ones if comfort_mult is None \
+        else jnp.asarray(comfort_mult, jnp.float32)
+    return FleetPhysics(
+        base_ms=jnp.broadcast_to(phys.base_ms, (p,)),
+        ms_per_token=phys.ms_per_token * speed,
+        comfort_concurrency=phys.comfort_concurrency * comfort,
+        slowdown_slope=jnp.broadcast_to(phys.slowdown_slope, (p,)),
+        slowdown_quad=jnp.broadcast_to(phys.slowdown_quad, (p,)),
+    )
+
+
+def availability_schedule(
+    n_ticks: int,
+    dt_ms: float,
+    fail_windows: tuple[tuple[int, float, float], ...],
+    span_ms: float,
+    p: int,
+) -> jnp.ndarray:
+    """(T, P) availability: 1 everywhere except inside each endpoint's
+    fail window.  Windows are `(endpoint, start_frac, end_frac)` over
+    the arrival span (like brownouts, so failures land on the traffic).
+    """
+    t_ms = (jnp.arange(n_ticks, dtype=jnp.float32) + 1.0) * dt_ms
+    avail = jnp.ones((n_ticks, p), jnp.float32)
+    for ep, start_frac, end_frac in fail_windows:
+        inside = (t_ms >= start_frac * span_ms) & (t_ms < end_frac * span_ms)
+        avail = avail.at[:, ep].set(
+            jnp.where(inside, 0.0, avail[:, ep]))
+    return avail
+
+
+def fleet_brownout_schedule(
+    n_ticks: int,
+    dt_ms: float,
+    windows: tuple[tuple[int, float, float, float], ...],
+    span_ms: float,
+    p: int,
+) -> jnp.ndarray:
+    """(T, P) comfort multiplier: the per-endpoint `brownout_schedule`.
+    Windows are `(endpoint, start_frac, end_frac, scale)`; overlapping
+    windows on one endpoint compound by minimum, other endpoints stay
+    at 1."""
+    t_ms = (jnp.arange(n_ticks, dtype=jnp.float32) + 1.0) * dt_ms
+    scale = jnp.ones((n_ticks, p), jnp.float32)
+    for ep, start_frac, end_frac, s in windows:
+        inside = (t_ms >= start_frac * span_ms) & (t_ms < end_frac * span_ms)
+        scale = scale.at[:, ep].set(
+            jnp.where(inside, jnp.minimum(scale[:, ep], jnp.float32(s)),
+                      scale[:, ep]))
+    return scale
+
+
 def token_bucket_windows(
     n_ticks: int,
     dt_ms: float,

@@ -115,10 +115,17 @@ def _run_scenario_seeds(
         class_map=class_map, information=information,
         limiter_classes=k, arrival_scale=arrival_scale,
     )
+    # fleet scenarios materialize (T, P) schedules instead of (T,) ones;
+    # build() guarantees dynamics is None for them (disjoint mechanisms)
+    fleet = scn.build_fleet(
+        scenario, phys, sim_cfg.n_ticks, sim_cfg.dt_ms, n_requests, k,
+        arrival_scale,
+    )
 
     def one(key):
         batch, jitter = generate(key, wl_cfg, sched)
-        final = run_sim(policy, batch, jitter, phys, sim_cfg, dynamics)
+        final = run_sim(policy, batch, jitter, phys, sim_cfg, dynamics,
+                        fleet=fleet)
         return (
             compute_metrics(batch, final, k),
             compute_phase_metrics(batch, final, edges, k),

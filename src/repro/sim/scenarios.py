@@ -41,10 +41,16 @@ from typing import NamedTuple, Optional
 import jax.numpy as jnp
 
 from repro.sim.provider import (
+    Fleet,
+    FleetDynamics,
     ProviderDynamics,
+    ProviderPhysics,
+    availability_schedule,
     brownout_schedule,
+    fleet_brownout_schedule,
     token_bucket_schedule,
     token_bucket_windows,
+    uniform_fleet_physics,
 )
 from repro.sim.workload import (
     MIXES,
@@ -62,6 +68,34 @@ class Phase(NamedTuple):
     frac: float
     rate_mult: float = 1.0
     mix: Optional[str] = None  # None = the scenario's base mix
+
+
+class FleetSpec(NamedTuple):
+    """Static (P,) fleet spec riding a `Scenario` (hashable, all tuples).
+
+    Describes the endpoint axis: how many endpoints, how their physics
+    skew, and the per-endpoint incidents — failure windows (the
+    failover mechanism), brownouts, and a per-endpoint rate limiter.
+    `build_fleet` materializes the `(T, P)` schedules inside the jit
+    boundary, mirroring `build_dynamics`.
+    """
+
+    p: int = 4
+    # per-endpoint ms/token multiplier (< 1 = faster) and comfort-knee
+    # multiplier; None = uniform fleet
+    speed_mult: Optional[tuple[float, ...]] = None
+    comfort_mult: Optional[tuple[float, ...]] = None
+    # (endpoint, start_frac, end_frac) hard-down windows over the
+    # arrival span: in-flight work is killed and requeued (failover)
+    fail_windows: tuple[tuple[int, float, float], ...] = ()
+    # (endpoint, start_frac, end_frac, comfort_scale) per-endpoint
+    # brownouts
+    brownouts: tuple[tuple[int, float, float, float], ...] = ()
+    # per-endpoint per-class sustained grant rate; None disables the
+    # (P, K) bucket grid
+    tb_rate_rps: Optional[float] = None
+    tb_burst: float = 6.0
+    retry_after_ms: float = 1500.0
 
 
 class Scenario(NamedTuple):
@@ -83,6 +117,10 @@ class Scenario(NamedTuple):
     # the arrival span scaling the sustained rate (0 = refill freeze);
     # overlaps compound by minimum — see provider.token_bucket_windows
     tb_windows: tuple[tuple[float, float, float], ...] = ()
+    # (P,) provider fleet (DESIGN.md §10); None = single provider.
+    # Fleet scenarios use FleetDynamics, not ProviderDynamics, so
+    # `has_dynamics` stays False and `fleet`/`dynamics` never coexist.
+    fleet: Optional[FleetSpec] = None
 
     @property
     def has_dynamics(self) -> bool:
@@ -176,6 +214,49 @@ def build_dynamics(
         tb_refill=refill,
         tb_capacity=capacity,
         retry_after_ms=retry,
+    )
+
+
+def build_fleet(
+    sc: Scenario, phys: ProviderPhysics, n_ticks: int, dt_ms: float,
+    n_requests: int, k: int, arrival_scale: float = 1.0,
+) -> Fleet | None:
+    """Materialize the (T, P)-shaped fleet schedules from the static
+    spec; None when the scenario carries no fleet (the engine then
+    compiles the exact single-provider program).  `phys` is the base
+    physics the fleet skews from — the same reference physics the
+    tail EMA is computed against."""
+    fs = sc.fleet
+    if fs is None:
+        return None
+    span = arrival_span_ms(sc, n_requests, arrival_scale)
+    fphys = uniform_fleet_physics(phys, fs.p, fs.speed_mult, fs.comfort_mult)
+    avail = (
+        availability_schedule(n_ticks, dt_ms, fs.fail_windows, span, fs.p)
+        if fs.fail_windows else None
+    )
+    comfort = (
+        fleet_brownout_schedule(n_ticks, dt_ms, fs.brownouts, span, fs.p)
+        if fs.brownouts else None
+    )
+    refill = capacity = None
+    if fs.tb_rate_rps is not None:
+        refill1, cap1 = token_bucket_schedule(
+            n_ticks, dt_ms, (float(fs.tb_rate_rps),) * k, fs.tb_burst)
+        # every endpoint gets its own copy of the per-class budget — the
+        # fleet-wide sustained rate is P times the single-provider one
+        refill = jnp.broadcast_to(
+            refill1[:, None, :], (n_ticks, fs.p, k))
+        capacity = jnp.broadcast_to(cap1[None, :], (fs.p, k))
+    return Fleet(
+        phys=fphys,
+        dyn=FleetDynamics(
+            avail=avail,
+            comfort_scale=comfort,
+            tb_refill=refill,
+            tb_capacity=capacity,
+            retry_after_ms=jnp.float32(fs.retry_after_ms),
+        ),
     )
 
 
@@ -304,6 +385,37 @@ SCENARIOS: dict[str, Scenario] = {
         brownouts=((0.3, 0.5, 0.5),),
         tb_rate_rps=0.8,
         tb_burst=8.0,
+    ),
+    # endpoint failure mid-run: a 4-endpoint fleet loses endpoint 0 for
+    # the middle third of the traffic — its in-flight work is killed and
+    # requeued, the router steers around the hole, and the fleet_sweep
+    # benchmark's recovery bar (post-failover completion >= 99% of
+    # pre-failover) rides this scenario
+    "fleet_failover": Scenario(
+        "fleet_failover",
+        congestion="high",
+        phases=(Phase(0.35), Phase(0.30), Phase(0.35)),
+        fleet=FleetSpec(p=4, fail_windows=((0, 0.35, 0.65),)),
+    ),
+    # skewed fleet: one fast endpoint, two nominal, one slow (2x
+    # ms/token) — the routing layer's cost model, not round-robin,
+    # decides how load splits
+    "fleet_skew": Scenario(
+        "fleet_skew",
+        congestion="high",
+        fleet=FleetSpec(p=4, speed_mult=(0.5, 1.0, 1.0, 2.0)),
+    ),
+    # per-endpoint brownout: two endpoints lose most of their comfort
+    # capacity in staggered windows while the others hold — latency
+    # pressure the router can only see through its own inflight counts
+    "fleet_brownout": Scenario(
+        "fleet_brownout",
+        congestion="high",
+        phases=(Phase(1 / 3), Phase(1 / 3), Phase(1 / 3)),
+        fleet=FleetSpec(
+            p=4,
+            brownouts=((0, 1 / 3, 2 / 3, 0.3), (1, 0.5, 0.85, 0.3)),
+        ),
     ),
 }
 

@@ -248,6 +248,90 @@ class TestSchedScoreTopB:
             np.asarray(ik)[:live], np.asarray(ir)[:live])
 
 
+class TestSchedScoreRoute:
+    """Route-term parity: every sched_score kernel with a (5,) weights
+    vector and a route feature row must match its oracle exactly — the
+    fleet scheduler's endpoint-aware score rides this fifth term."""
+
+    W5 = jnp.asarray([1.0, 0.8, 0.5, 650.0, 400.0], jnp.float32)
+
+    def _features(self, n, seed, density=0.7):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        wait = jax.random.uniform(ks[0], (n,)) * 5e3
+        cost = jax.random.uniform(ks[1], (n,)) * 3000 + 0.5
+        urg = jax.random.uniform(ks[2], (n,)) * 2
+        mask = jax.random.bernoulli(ks[3], density, (n,))
+        route = jax.random.uniform(ks[4], (n,)) * 3.0
+        return wait, cost, urg, mask, route
+
+    @given(seed=st.integers(0, 1000), density=st.floats(0.01, 1.0))
+    @settings(max_examples=15, deadline=None)
+    def test_argmax_matches_oracle(self, seed, density):
+        wait, cost, urg, mask, route = self._features(512, seed, density)
+        i1, s1 = sched_score_argmax(wait, cost, urg, mask, self.W5,
+                                    route, blk=512)
+        i2, s2 = sched_score_argmax_ref(wait, cost, urg, mask, self.W5,
+                                        route)
+        assert float(s1) == float(s2)
+        if bool(mask.any()):
+            assert int(i1) == int(i2)
+
+    @given(seed=st.integers(0, 1000), b=st.sampled_from([1, 8, 16]),
+           density=st.floats(0.0, 1.0))
+    @settings(max_examples=15, deadline=None)
+    def test_topb_matches_oracle(self, seed, b, density):
+        wait, cost, urg, mask, route = self._features(512, seed, density)
+        ik, sk = sched_score_topb(wait, cost, urg, mask, self.W5, b,
+                                  route, blk=512)
+        ir, sr = sched_score_topb_ref(wait, cost, urg, mask, self.W5, b,
+                                      route)
+        np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
+        np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+
+    @given(seed=st.integers(0, 1000), b=st.sampled_from([1, 8, 32]),
+           density=st.floats(0.0, 1.0))
+    @settings(max_examples=15, deadline=None)
+    def test_compact_topb_matches_oracle(self, seed, b, density):
+        w = 256
+        ks = jax.random.split(jax.random.PRNGKey(seed + 7), 2)
+        req = jax.random.permutation(
+            ks[0], jnp.arange(w * 3, dtype=jnp.int32))[:w]
+        alive = jax.random.bernoulli(ks[1], density, (w,))
+        wait, cost, urg, _, route = self._features(w, seed, density)
+        ck, nk, ik, sk = sched_compact_topb(
+            req, alive, wait, cost, urg, self.W5, b, route, blk=128)
+        cr, nr, ir, sr = sched_compact_topb_ref(
+            req, alive, wait, cost, urg, self.W5, min(b, w), route)
+        assert int(nk) == int(nr)
+        np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+        np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
+        np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+
+    def test_route_none_matches_four_weight(self):
+        """Omitting route with a (4,) weights vector is the pre-fleet
+        path — it must stay byte-identical to passing route=None."""
+        wait, cost, urg, mask, _ = self._features(512, seed=3)
+        w4 = self.W5[:4]
+        i1, s1 = sched_score_topb(wait, cost, urg, mask, w4, 8, blk=512)
+        i2, s2 = sched_score_topb(wait, cost, urg, mask, w4, 8, None,
+                                  blk=512)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+    def test_zero_route_weight_matches_no_route(self):
+        """w_route == 0 with an arbitrary route row ranks identically to
+        the route-free kernel (score algebra appends `- 0 * route`,
+        which is exact in float)."""
+        wait, cost, urg, mask, route = self._features(512, seed=5)
+        w5 = jnp.asarray([1.0, 0.8, 0.5, 650.0, 0.0], jnp.float32)
+        ik, sk = sched_score_topb(wait, cost, urg, mask, w5, 8, route,
+                                  blk=512)
+        ir, sr = sched_score_topb(wait, cost, urg, mask, w5[:4], 8,
+                                  blk=512)
+        np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
+        np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+
+
 class TestCompactTopB:
     """Fused compaction + score + top-B tick megakernel vs the two-pass
     oracle (XLA cumsum-scatter, then `sched_score_topb` over the
