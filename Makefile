@@ -6,8 +6,8 @@ export PYTHONPATH := src
 export PYTHONDONTWRITEBYTECODE := 1
 
 .PHONY: test test-fast bench bench-smoke bench-sched bench-scale \
-	bench-scenarios bench-client bench-fleet serve-smoke check-bench \
-	check-clean lint ci
+	bench-scenarios bench-client bench-fleet bench-faults serve-smoke \
+	check-bench check-clean lint ci
 
 # Tier-1: full test suite (ROADMAP.md)
 test:
@@ -32,6 +32,7 @@ bench-smoke:
 	$(PY) benchmarks/multi_class.py --smoke
 	$(PY) benchmarks/scenario_sweep.py --smoke
 	$(PY) benchmarks/fleet_sweep.py --smoke
+	$(PY) benchmarks/fault_sweep.py --smoke
 
 # scheduler-throughput microbenchmark -> BENCH_scheduler.json
 # (slots/sec at K=2 vs K=8, the batch-dispatch B x N sweep, and the
@@ -58,6 +59,13 @@ bench-scenarios:
 # brownout -> `fleet_sweep` rows in BENCH_scenarios.json
 bench-fleet:
 	$(PY) benchmarks/fleet_sweep.py
+
+# chaos recovery sweep: the fault scenarios (silent_drop, stuck_tail,
+# dup_storm) through the resilient client vs the trusting control ->
+# `fault_sweep` rows in BENCH_scenarios.json (resilience-on completion
+# >= 0.99, off demonstrably degraded, zero double-retires)
+bench-faults:
+	$(PY) benchmarks/fault_sweep.py
 
 # streaming client-session throughput (requests/s over MockProvider at
 # N in {1e3,1e5}) -> client_session rows in BENCH_scheduler.json; the

@@ -36,6 +36,14 @@ below the committed `BENCH_scheduler.json` baseline.  Checks:
     dispatch, per-poll-status-pull design) must hold the >=10x bar the
     fused device tick was accepted on.  The pr5 rows are a historical
     snapshot and are never regenerated.
+  * **fault recovery** (DESIGN.md §11): the committed
+    `BENCH_scenarios.json` fault_sweep rows must show resilience-on
+    completion >= the recovery bar on every chaos scenario, the
+    trusting control demonstrably degraded on the loss scenarios, and
+    zero double-retires everywhere.  This is an artifact-consistency
+    gate (the sweep itself is minutes of wall clock; `make
+    bench-faults` regenerates the rows and applies the same bars
+    live).
 
 Wired into `make ci` as `make check-bench`.  The baseline is read from
 git (`HEAD:BENCH_scheduler.json`) so a local `make bench-sched` that
@@ -61,6 +69,7 @@ from benchmarks.multi_class import (  # noqa: E402
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE = os.path.join(REPO, "BENCH_scheduler.json")
+SCENARIOS_JSON = os.path.join(REPO, "BENCH_scenarios.json")
 DEFAULT_TOLERANCE = 0.30  # fail on >30% regression at B=16
 MIN_B16_VS_B1 = 2.0       # the repo's batched-dispatch acceptance bar
 MIN_WIN_VS_DENSE = 4.0    # windowed-vs-dense dispatch bar at large N
@@ -85,6 +94,76 @@ def load_baseline() -> dict:
             json.JSONDecodeError):
         with open(BASELINE) as f:
             return json.load(f)
+
+
+def load_fault_rows() -> dict | None:
+    """The committed fault_sweep section of BENCH_scenarios.json; falls
+    back to the working-tree file when the committed copy predates the
+    fault sweep (first-commit bootstrap), None when neither has it."""
+    for loader in (
+        lambda: json.loads(subprocess.run(
+            ["git", "show", "HEAD:BENCH_scenarios.json"],
+            cwd=REPO, capture_output=True, text=True, check=True).stdout),
+        lambda: json.load(open(SCENARIOS_JSON)),
+    ):
+        try:
+            section = loader().get("fault_sweep")
+        except (subprocess.CalledProcessError, FileNotFoundError, OSError,
+                json.JSONDecodeError):
+            continue
+        if section:
+            return section
+    return None
+
+
+def check_fault_rows(failures: list[str]) -> None:
+    """Artifact-consistency gate over the fault_sweep rows (see module
+    docstring): the committed chaos numbers must still clear the bars
+    they were accepted on."""
+    from benchmarks.fault_sweep import (
+        FAULT_SCENARIOS,
+        LOSS_SCENARIOS,
+        RECOVERY_BAR,
+        SEPARATION_BAR,
+    )
+    section = load_fault_rows()
+    if section is None:
+        failures.append(
+            "BENCH_scenarios.json has no fault_sweep rows — run "
+            "`make bench-faults` to generate the recovery baseline")
+        return
+    bar = float(section.get("recovery_bar", RECOVERY_BAR))
+    sep_bar = float(section.get("separation_bar", SEPARATION_BAR))
+    comp: dict[tuple[str, str], float] = {}
+    for cell in section.get("cells", []):
+        name, mode = cell["scenario"], cell["resilience"]
+        comp[(name, mode)] = cell["completion"]
+        if cell.get("double_retires", 0) != 0:
+            failures.append(
+                f"fault_sweep {name}/{mode}: {cell['double_retires']} "
+                f"double-retire(s) recorded")
+    for name in FAULT_SCENARIOS:
+        on, off = comp.get((name, "on")), comp.get((name, "off"))
+        if on is None or off is None:
+            failures.append(
+                f"fault_sweep: missing on/off rows for {name!r}")
+            continue
+        ok_rec = np.isfinite(on) and on >= bar
+        sep = on - off
+        gated_sep = name in LOSS_SCENARIOS
+        ok_sep = (not gated_sep) or (np.isfinite(sep) and sep >= sep_bar)
+        print(f"  fault     {name:12s}: on={on:.4f} off={off:.4f} "
+              f"[{'ok' if ok_rec else 'FAIL'}]"
+              + (f"  separation {sep:+.4f} [{'ok' if ok_sep else 'FAIL'}]"
+                 if gated_sep else ""))
+        if not ok_rec:
+            failures.append(
+                f"fault_sweep {name}: resilience-on completion {on:.4f} "
+                f"< {bar}")
+        if not ok_sep:
+            failures.append(
+                f"fault_sweep {name}: on-off separation {sep:.4f} < "
+                f"{sep_bar} — the control is not degraded")
 
 
 def main(argv: list[str]) -> int:
@@ -217,6 +296,9 @@ def main(argv: list[str]) -> int:
                 f"client_session: N={ns[-1]} rate only {ratio:.2f}x the "
                 f"N={ns[0]} rate (bar: >={MIN_CLIENT_N_RATIO}x — per-poll "
                 f"cost must stay O(W), not O(N))")
+
+    # --- fault-recovery gate: committed chaos rows still clear the bars
+    check_fault_rows(failures)
 
     if failures:
         print("FAIL: scheduler throughput regression:")

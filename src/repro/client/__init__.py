@@ -14,8 +14,10 @@ from repro.client.provider import (  # noqa: F401
     Completion,
     MockProvider,
     SubmitResult,
+    sanitize_retry_after_ms,
 )
 from repro.client.request import Request, default_p90  # noqa: F401
+from repro.client.resilience import ResilienceConfig, Watchdog  # noqa: F401
 from repro.client.session import (  # noqa: F401
     ClientSession,
     PollResult,

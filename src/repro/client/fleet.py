@@ -35,7 +35,12 @@ from typing import TYPE_CHECKING, Optional, Sequence
 
 import numpy as np
 
-from repro.client.provider import AsyncProvider, Completion, SubmitResult
+from repro.client.provider import (
+    AsyncProvider,
+    Completion,
+    SubmitResult,
+    sanitize_retry_after_ms,
+)
 from repro.core.routing import UNAVAIL_MS
 from repro.sim.provider import FleetPhysics, ProviderPhysics
 
@@ -123,6 +128,10 @@ class FleetProvider:
                 tb_capacity=(None if dyn.tb_capacity is None
                              else np.asarray(dyn.tb_capacity)[ep]),
                 retry_after_ms=float(np.asarray(dyn.retry_after_ms)),
+                # each endpoint misbehaves independently: same schedule,
+                # decorrelated draw stream
+                faults=scenario.faults,
+                fault_salt=ep,
             ))
         return cls(
             children, fphys, dt_ms=dt_ms,
@@ -172,9 +181,15 @@ class FleetProvider:
         hint = inflight_hint if self.p == 1 else None
         res = self.providers[ep].submit(req, now_ms, inflight_hint=hint)
         if not res.accepted:
-            # observed 429: penalize this endpoint for its Retry-After
-            self._dry_until[ep] = now_ms + res.retry_after_ms
-            self._dry_penalty[ep] = np.float32(res.retry_after_ms)
+            # observed 429: penalize this endpoint for its Retry-After.
+            # Sanitized first — a hostile hint (negative/NaN, see
+            # FaultSchedule.retry_lie_mult) would otherwise poison the
+            # routing argmin (NaN cost) or *reward* the dry endpoint
+            # (negative penalty); the raw hint still propagates to the
+            # session, whose retry hook clamps at its own boundary
+            hint_ms = sanitize_retry_after_ms(res.retry_after_ms)
+            self._dry_until[ep] = now_ms + hint_ms
+            self._dry_penalty[ep] = np.float32(hint_ms)
             return res
         ticket = self._next_ticket
         self._next_ticket += 1

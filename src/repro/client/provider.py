@@ -41,6 +41,7 @@ from typing import (
 
 import numpy as np
 
+from repro.sim.faults import FaultSchedule, fault_draw
 from repro.sim.provider import ProviderPhysics, default_physics
 
 if TYPE_CHECKING:  # pragma: no cover
@@ -82,6 +83,25 @@ class AsyncProvider(Protocol):
 # --- Retry-After policies (the 429 backoff hook) ---------------------------
 
 RetryPolicy = Callable[[float, int], float]
+
+
+def sanitize_retry_after_ms(retry_after_ms: float) -> float:
+    """Clamp a hostile Retry-After hint before any retry policy sees it.
+
+    A real provider can return anything: negative, NaN, or infinite
+    hints all occur in the wild (clock skew, serialization bugs, plain
+    lies — `FaultSchedule.retry_lie_mult` models them).  Unclamped, a
+    negative hint produces a defer expiry in the past (the request
+    thrashes every epoch) and a NaN poisons every downstream comparison
+    — the fleet router's argmin, the session's idle-sleep hint.  Policy:
+    non-finite or negative collapses to 0.0 ("retry whenever you like"),
+    which the session's own backoff then shapes; honest hints pass
+    through unchanged.
+    """
+    r = float(retry_after_ms)
+    if not np.isfinite(r) or r < 0.0:
+        return 0.0
+    return r
 
 
 def honor_retry_after(retry_after_ms: float, n_throttles: int) -> float:
@@ -151,6 +171,16 @@ class MockProvider:
     decision epoch (one distinct `now_ms`) are ranked per class against
     the bucket level at epoch start, accepted grants consume one token,
     bounces consume nothing and carry `retry_after_ms`.
+
+    `faults` breaks the contract on purpose (sim/faults.py): per-ticket
+    deterministic draws decide which accepted submits get stuck
+    (service x stuck_mult), which landed completions are silently
+    dropped or redelivered `dup_extra` extra times with divergent
+    payload stamps, and 429 hints are scaled by `retry_lie_mult`.
+    `faults=None` (the default) executes the exact honest path —
+    byte-identical to the pre-fault provider, which is what keeps the
+    sim<->live parity pins valid.  `fault_salt` decorrelates fault
+    streams across a fleet's child endpoints.
     """
 
     def __init__(
@@ -162,6 +192,8 @@ class MockProvider:
         tb_refill: Optional[np.ndarray] = None,       # (T, K) grants/tick
         tb_capacity: Optional[np.ndarray] = None,     # (K,) burst size
         retry_after_ms: float = 1500.0,
+        faults: FaultSchedule | None = None,
+        fault_salt: int = 0,
     ):
         phys = phys if phys is not None else default_physics()
         self.phys = phys
@@ -196,6 +228,14 @@ class MockProvider:
         self._next_ticket = 0
         self.n_throttled = 0
         self.n_accepted = 0
+        self._faults = (faults if faults is not None and faults.injects
+                        else None)
+        self._fault_salt = int(fault_salt)
+        # dup redeliveries waiting their delay: (deliver_at_ms, Completion)
+        self._pending_dups: list[tuple[float, Completion]] = []
+        self.n_dropped = 0     # completions computed but never delivered
+        self.n_stuck = 0       # submits whose service time was inflated
+        self.n_duped = 0       # completions scheduled for redelivery
         # loaded-latency memo: the slowdown chain is pure in
         # (tokens, inflight, brownout row), and real pools cycle through
         # a handful of such triples per epoch — caching the f32 result
@@ -213,8 +253,9 @@ class MockProvider:
         regimes (brownouts, rate_crunch) replay against the live path."""
         from repro.sim.scenarios import build_dynamics
         dyn = build_dynamics(scenario, n_ticks, dt_ms, n_requests, k)
+        faults = scenario.faults
         if dyn is None:
-            return cls(phys, dt_ms=dt_ms)
+            return cls(phys, dt_ms=dt_ms, faults=faults)
         retry = (float(np.asarray(dyn.retry_after_ms))
                  if dyn.retry_after_ms is not None else 1500.0)
         return cls(
@@ -227,6 +268,7 @@ class MockProvider:
             tb_capacity=(None if dyn.tb_capacity is None
                          else np.asarray(dyn.tb_capacity)),
             retry_after_ms=retry,
+            faults=faults,
         )
 
     # --- time ---------------------------------------------------------
@@ -296,7 +338,14 @@ class MockProvider:
                        <= self._epoch_tokens0[c] + np.float32(1e-6))
             if not allowed:
                 self.n_throttled += 1
-                return SubmitResult(False, self.retry_after_ms)
+                retry = self.retry_after_ms
+                if self._faults is not None \
+                        and self._faults.retry_lie_mult != 1.0:
+                    # lying Retry-After: the hint no longer reflects the
+                    # real refill (may go negative/non-finite — the
+                    # client must sanitize, not trust)
+                    retry = retry * float(self._faults.retry_lie_mult)
+                return SubmitResult(False, retry)
             self._tb[c] = self._tb[c] - np.float32(1.0)
         # service physics at the client's optimistic concurrency view
         # when provided: the engine prices grant g at the inflight count
@@ -309,19 +358,60 @@ class MockProvider:
         finish = self._finish_ms(req.max_new, inflight, req.jitter, now_ms)
         ticket = self._next_ticket
         self._next_ticket += 1
+        if self._faults is not None \
+                and fault_draw(self._faults, self._fault_salt, ticket).stuck:
+            # stuck request: the realized service time (finish - now)
+            # inflates by stuck_mult, pushing the completion past any
+            # sane timeout horizon; a resubmit draws a fresh ticket and
+            # therefore a fresh (independent) verdict
+            now32 = float(np.float32(now_ms))
+            finish = np.float32(
+                now32 + (float(finish) - now32) * self._faults.stuck_mult)
+            self.n_stuck += 1
         self._outstanding[ticket] = (finish, req)
         self.n_accepted += 1
         return SubmitResult(True, 0.0, ticket=ticket)
 
     def poll(self, now_ms: float) -> list[Completion]:
         self._advance(now_ms)
-        # tickets are monotone and inserted once, so dict order IS
-        # ascending ticket order — no sort needed
-        done = [t for t, (f, _) in self._outstanding.items() if f <= now_ms]
+        # deliver in (finish_ms, ticket) order.  Dict insertion order is
+        # ascending *ticket* order, which coincides with finish order
+        # only while service times are monotone along the submit stream
+        # — stuck/dup faults and heterogeneous service break that, so
+        # delivery order is pinned explicitly (the decision-parity tests
+        # hold either way: the session ingests by sorted rid)
+        done = sorted(
+            (float(f), t) for t, (f, _) in self._outstanding.items()
+            if f <= now_ms)
         out = []
-        for t in done:
-            finish, _req = self._outstanding.pop(t)
+        for finish, t in done:
+            self._outstanding.pop(t)
+            if self._faults is not None:
+                d = fault_draw(self._faults, self._fault_salt, t)
+                if d.drop:
+                    # silent drop: computed, never delivered — the
+                    # client-visible symptom is an RPC that never
+                    # resolves
+                    self.n_dropped += 1
+                    continue
+                if d.dup:
+                    fs = self._faults
+                    for i in range(1, fs.dup_extra + 1):
+                        self._pending_dups.append((
+                            finish + i * fs.dup_delay_ms,
+                            # divergent payload: redelivered copies
+                            # disagree about when the work finished
+                            Completion(t, finish + i * fs.dup_jitter_ms,
+                                       None)))
+                    self.n_duped += 1
             out.append(Completion(t, float(finish), None))
+        if self._pending_dups:
+            due = [(at, c) for at, c in self._pending_dups if at <= now_ms]
+            if due:
+                self._pending_dups = [
+                    x for x in self._pending_dups if x[0] > now_ms]
+                due.sort(key=lambda x: (x[0], x[1].ticket))
+                out.extend(c for _, c in due)
         return out
 
     def inflight(self) -> int:
@@ -329,6 +419,7 @@ class MockProvider:
 
     def next_event_ms(self, now_ms: float) -> Optional[float]:
         cands = [float(f) for f, _ in self._outstanding.values()]
+        cands.extend(at for at, _ in self._pending_dups)
         if self._refill_rows is not None \
                 and self._rows_applied < self._refill_rows.shape[0]:
             # next refill row lands at (rows_applied + 1) * dt

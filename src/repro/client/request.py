@@ -64,6 +64,7 @@ class Request:
     status: str = "pending"     # pending|inflight|completed|rejected|abandoned
     n_defers: int = 0
     n_throttles: int = 0        # 429-style bounces this request saw
+    n_resubmits: int = 0        # watchdog resubmissions (resilience layer)
     output: Optional[np.ndarray] = None
 
     def resolved_p90(self) -> float:

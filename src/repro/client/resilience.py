@@ -1,0 +1,152 @@
+"""Client-side resilience: the watchdog that survives a lying provider.
+
+`ClientSession` trusts the transport by default: an accepted submit is
+assumed to eventually produce exactly one completion.  Against a
+provider that breaks that contract (sim/faults.py — silent drops, stuck
+requests, duplicate deliveries, lying Retry-After), trust means a hung
+session: an INFLIGHT slot only retires when its completion lands, so
+one dropped completion pins its window slot and hangs `drain` forever.
+
+The recovery design (wired into `ClientSession.poll` when the session
+is built with a `ResilienceConfig`):
+
+  * **Client-side deadline.**  Every accepted attempt gets a watchdog
+    deadline derived from client-observable priors only: the unloaded
+    latency expectation at the p90 token prior
+    (`base_ms + ms_per_token * p90`) times `timeout_mult`, floored at
+    `min_deadline_ms`.  No server cooperation is assumed — the deadline
+    is the client's own bet on "this should have landed by now".
+  * **Bounded-budget resubmission.**  An attempt past its deadline with
+    no completion in sight is resubmitted — same request, same session
+    rid (the idempotency key), a fresh provider ticket — at most
+    `max_resubmits` times.  The old ticket stays mapped: attempts RACE,
+    first completion wins, the loser is discarded by the session's
+    dup-safe ingestion.  Each accepted resubmit charges the request's
+    p50 against its class's ADRR deficit
+    (`core.scheduler.charge_resubmit`) so recovery traffic cannot
+    starve another class.  A 429 on the resubmit consumes no budget —
+    the watchdog backs off by the (sanitized) hint and retries the
+    check later.
+  * **Give-up.**  With the budget exhausted, the watchdog waits for the
+    slot's own timeout threshold to pass and then injects a *synthetic*
+    completion stamped `finish = now`: the ordinary retirement chain —
+    device and host mirror alike — classifies it `timed_out` and
+    retires the slot ABANDONED.  No special retirement path exists;
+    give-up is just a completion the classifier is guaranteed to reject
+    on the e2e bound, which is what keeps the donated-buffer tick free
+    of a second retire mechanism (and `drain` guaranteed to terminate).
+
+The watchdog never touches device state directly: it edits the
+host-side completion dict before the scatter, submits through the same
+provider boundary as the grant loop, and reports its deficit charge as
+one (K,) array folded into the fused tick.  Sessions built without a
+`ResilienceConfig` trace and execute the exact pre-resilience program.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, NamedTuple
+
+import numpy as np
+
+from repro.sim.provider import ProviderPhysics
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.client.request import Request
+
+
+class ResilienceConfig(NamedTuple):
+    """Static watchdog knobs (hashable; `None` on the session = off)."""
+
+    # client-side deadline = unloaded p90 latency x timeout_mult,
+    # floored at min_deadline_ms.  The mult must absorb honest queueing
+    # + load slowdown; too tight wastes resubmit budget on false
+    # positives (harmless — first completion wins — but it is provider
+    # load and deficit charge), too loose stretches recovery latency.
+    timeout_mult: float = 6.0
+    min_deadline_ms: float = 1_000.0
+    # resubmission budget per request (attempts beyond the first)
+    max_resubmits: int = 2
+
+
+class _Tracked:
+    """Watchdog entry for one in-flight session rid."""
+
+    __slots__ = ("tickets", "deadline_ms", "n_resubmits", "gave_up")
+
+    def __init__(self, ticket: int, deadline_ms: float):
+        self.tickets = [ticket]      # every live provider ticket (racing)
+        self.deadline_ms = deadline_ms
+        self.n_resubmits = 0
+        self.gave_up = False
+
+
+class Watchdog:
+    """Per-request deadline tracking + resubmission budget accounting.
+
+    Owns no clock and no provider: `ClientSession.poll` drives it once
+    per epoch and performs the actual submits, so the watchdog stays a
+    pure bookkeeping structure (deterministic, trivially testable).
+    """
+
+    def __init__(self, cfg: ResilienceConfig, phys: ProviderPhysics):
+        self.cfg = cfg
+        self._base = float(np.asarray(phys.base_ms))
+        self._ms_per_token = float(np.asarray(phys.ms_per_token))
+        self._by_rid: dict[int, _Tracked] = {}
+        self.n_resubmits = 0
+        self.n_gave_up = 0
+
+    def deadline_ms(self, req: "Request") -> float:
+        """Relative client-side deadline for one attempt of `req`."""
+        unloaded = self._base + self._ms_per_token * float(req.resolved_p90())
+        return max(unloaded * self.cfg.timeout_mult, self.cfg.min_deadline_ms)
+
+    # --- lifecycle driven by the session ------------------------------
+    def note_admit(self, rid: int, req: "Request", ticket: int,
+                   now_ms: float) -> None:
+        """An initial submit was accepted: start the deadline clock."""
+        self._by_rid[rid] = _Tracked(ticket, now_ms + self.deadline_ms(req))
+
+    def note_resubmit(self, rid: int, req: "Request", ticket: int,
+                      now_ms: float) -> None:
+        """A resubmit was accepted: consume budget, reset the deadline."""
+        e = self._by_rid[rid]
+        e.tickets.append(ticket)
+        e.n_resubmits += 1
+        e.deadline_ms = now_ms + self.deadline_ms(req)
+        self.n_resubmits += 1
+
+    def note_bounced(self, rid: int, delay_ms: float, now_ms: float) -> None:
+        """A resubmit was 429'd: no budget consumed, re-check after the
+        (already sanitized) backoff."""
+        self._by_rid[rid].deadline_ms = now_ms + max(delay_ms, 1.0)
+
+    def note_terminal(self, rid: int) -> list[int]:
+        """The rid retired (completed/abandoned/rejected): stop tracking
+        and return every ticket the session must unmap — late arrivals
+        on those tickets are discarded at ingestion."""
+        e = self._by_rid.pop(rid, None)
+        return e.tickets if e is not None else []
+
+    # --- the per-epoch scan -------------------------------------------
+    def overdue(self, now_ms: float) -> list[int]:
+        """Tracked rids past their deadline, in rid order (deterministic
+        resubmission order regardless of dict history)."""
+        return sorted(
+            rid for rid, e in self._by_rid.items()
+            if not e.gave_up and now_ms >= e.deadline_ms)
+
+    def budget_left(self, rid: int) -> bool:
+        return self._by_rid[rid].n_resubmits < self.cfg.max_resubmits
+
+    def give_up(self, rid: int) -> None:
+        e = self._by_rid[rid]
+        if not e.gave_up:
+            e.gave_up = True
+            self.n_gave_up += 1
+
+    def next_deadline_ms(self) -> float:
+        """Earliest pending watchdog deadline (idle-sleep hint)."""
+        return min(
+            (e.deadline_ms for e in self._by_rid.values() if not e.gave_up),
+            default=float("inf"))

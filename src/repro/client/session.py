@@ -73,13 +73,16 @@ import numpy as np
 
 from repro.client.provider import (
     AsyncProvider,
+    Completion,
     expo_retry,  # noqa: F401  (re-exported; historic home of the hook)
     honor_retry_after,
+    sanitize_retry_after_ms,
 )
 from repro.client.request import Request
+from repro.client.resilience import ResilienceConfig, Watchdog
 from repro.core import overload as olc
 from repro.core.policy import ALLOC_ADRR, PolicyConfig, n_classes
-from repro.core.scheduler import IDLE, schedule_batch
+from repro.core.scheduler import IDLE, charge_resubmit, schedule_batch
 from repro.core.types import (
     INFLIGHT,
     PENDING,
@@ -141,6 +144,11 @@ class SessionStats:
     n_throttled: int = 0
     n_idle_sleeps: int = 0
     peak_inflight: int = 0
+    # resilience / dup-safety accounting (zero on honest transports)
+    n_resubmitted: int = 0      # watchdog resubmissions accepted
+    n_gave_up: int = 0          # budget exhausted -> synthetic abandon
+    n_dup_discarded: int = 0    # dead-ticket / same-epoch dup arrivals
+    n_late_discarded: int = 0   # completions for already-retired rids
 
 
 RetryPolicy = Callable[[float, int], float]
@@ -288,12 +296,12 @@ _apply_decisions = jax.jit(_apply_body, donate_argnums=(2,))
 
 def _fused_tick(policy: PolicyConfig, phys: ProviderPhysics,
                 batch: RequestBatch, state: SimState, prev,
-                comp, staged, n_stage, now,
+                comp, staged, n_stage, now, resub=None,
                 *, max_grants: int, backend: str):
     """One decision epoch as a single donated-buffer device step:
 
-      apply(prev) -> ingest completions -> retire -> compact + admit
-                  -> dispatch -> packed summary
+      apply(prev) -> charge resubmits -> ingest completions -> retire
+                  -> compact + admit -> dispatch -> packed summary
 
     `prev` is the previous epoch's `(BatchDecision, accept_delay)` —
     or None on the first epoch / after an explicit `_state` flush, a
@@ -306,12 +314,21 @@ def _fused_tick(policy: PolicyConfig, phys: ProviderPhysics,
     verdicts — and pulls one summary vector
     `[actions, req_idx, inflight_at, backoff, severity, next_defer]`
     (int fields ride exactly in f32 throughout).
+
+    `resub` is the (K,) per-class deficit charge for this epoch's
+    watchdog resubmissions — or None on sessions without a resilience
+    layer, where its absence is pytree structure: the None trace is the
+    byte-identical pre-resilience program.  Charged before dispatch so
+    recovery traffic depresses its class's share this very epoch.
     """
     if prev is not None:
         d0, ad0 = prev
         b0 = d0.actions.shape[0]
         state = _apply_body(policy, batch, state, d0,
                             ad0[:b0] != 0.0, ad0[b0:])
+    if resub is not None:
+        state = state._replace(sched=state.sched._replace(
+            deficit=charge_resubmit(policy, state.sched.deficit, resub)))
     comp_slot = comp[0].astype(jnp.int32)
     finish = state.req.finish_ms.at[comp_slot].set(comp[1], mode="drop")
     state = state._replace(
@@ -400,6 +417,14 @@ class ClientSession:
     expectation the tail EMA normalizes observed completions against
     (client-observable signals only, per the paper; the benchmarks
     calibrate it against the real engine).
+
+    `resilience` arms the watchdog (repro.client.resilience): per-
+    request client-side deadlines, bounded-budget resubmission of stuck
+    requests, and synthetic-abandon give-up — the machinery that keeps
+    the session live against a provider that drops or wedges work.
+    None (the default) is the trusting session: byte-identical device
+    program, zero extra host work.  Duplicate-safe ingestion is NOT
+    gated on this — at-least-once delivery is survived unconditionally.
     """
 
     def __init__(
@@ -411,6 +436,7 @@ class ClientSession:
         clock: str = "wall",
         phys: ProviderPhysics | None = None,
         retry_policy: RetryPolicy | None = None,
+        resilience: ResilienceConfig | None = None,
     ):
         if clock not in ("wall", "virtual"):
             raise ValueError(f"clock must be 'wall' or 'virtual', got {clock!r}")
@@ -459,6 +485,11 @@ class ClientSession:
         self._staged_px = np.zeros((7, w), np.float32)
         self._staged_px[_ST_TOKENS:_ST_P90 + 1] = 1.0
         self._staged_px[_ST_DEADLINE] = 1e9
+        self._watchdog = (Watchdog(resilience, self.phys)
+                          if resilience is not None else None)
+        # (K,) per-class deficit charge for this epoch's resubmissions;
+        # reused transfer buffer like _comp (jit copies at call time)
+        self._resub_charge = np.zeros(self._k, np.float32)
         self._tick = _tick_for(policy, self.phys, cfg.max_grants,
                                cfg.backend)
         self._warmup()
@@ -489,16 +520,21 @@ class ClientSession:
         w, k = self.cfg.window, self._k
         zero = np.int32(0)
         t0 = np.float32(0.0)
+        # resilient sessions always pass the (K,) resubmit charge, so
+        # those are the variants to warm; trusting sessions omit the
+        # argument entirely (distinct trace, byte-identical to the
+        # pre-resilience program)
+        extra = (self._resub_charge,) if self._watchdog is not None else ()
         batch1, state1, d1, _ = self._tick(
             self._win_batch, self._dev_state, None,
-            self._comp, self._staged_px, zero, t0)
+            self._comp, self._staged_px, zero, t0, *extra)
         bm = int(d1.actions.shape[0])
         self._bm = bm
         self._accdelay = np.zeros(2 * bm, np.float32)
         self._accdelay[:bm] = 1.0
         batch2, state2, d2, _ = self._tick(
             batch1, state1, (d1, self._accdelay),
-            self._comp, self._staged_px, zero, t0)
+            self._comp, self._staged_px, zero, t0, *extra)
         out = _apply_decisions(self.policy, batch2, state2, d2,
                                self._accdelay[:bm] != 0.0,
                                self._accdelay[bm:].copy())
@@ -585,6 +621,61 @@ class ClientSession:
             px[row, :n] = col[r0:r0 + n]
         return rids
 
+    def _run_watchdog(self, now_ms: float, now32: np.float32, nl: int,
+                      comp_by_rid: dict) -> None:
+        """The resilience pass (repro.client.resilience): resubmit
+        overdue in-flight requests within budget, give up — via a
+        synthetic completion the retirement chain classifies
+        timed_out -> ABANDONED — once the budget is gone and the slot's
+        own timeout threshold has passed.  Mutates `comp_by_rid` (the
+        pre-scatter completion view) and the ticket map only; device
+        state is touched exclusively through the ordinary ingest path."""
+        wd = self._watchdog
+        for rid in wd.overdue(now_ms):
+            if rid in comp_by_rid:
+                continue  # landed this very epoch; retirement untracks it
+            slot = int(np.searchsorted(self._slot_rid[:nl], rid))
+            if slot >= nl or self._slot_rid[slot] != rid \
+                    or self._slot_status[slot] != INFLIGHT:
+                # defensive: no longer an in-flight slot (retirement
+                # should have untracked it already)
+                for t in wd.note_terminal(rid):
+                    self._tickets.pop(t, None)
+                continue
+            r = self._reqs[rid]
+            if wd.budget_left(rid):
+                res = self.provider.submit(r, now_ms)
+                if res.accepted:
+                    # the attempts race: the old ticket stays mapped,
+                    # first completion wins, the loser is discarded by
+                    # dup-safe ingestion
+                    self._tickets[res.ticket] = rid
+                    wd.note_resubmit(rid, r, res.ticket, now_ms)
+                    r.n_resubmits += 1
+                    cls = min(max(r.resolved_cls(), 0), self._k - 1)
+                    self._resub_charge[cls] += np.float32(r.p50)
+                    self.stats.n_resubmitted += 1
+                else:
+                    # 429 on the recovery path: no budget consumed,
+                    # re-check after the (sanitized) backoff
+                    r.n_throttles += 1
+                    delay = self.retry_policy(
+                        sanitize_retry_after_ms(res.retry_after_ms),
+                        r.n_throttles)
+                    wd.note_bounced(rid, float(delay), now_ms)
+                    self.stats.n_throttled += 1
+                continue
+            # budget exhausted: once the slot's e2e threshold has
+            # passed (the same f32 comparison the classifier runs), a
+            # synthetic completion stamped `now` is guaranteed to
+            # classify timed_out -> ABANDONED on device and mirror
+            # alike — give-up needs no second retirement mechanism
+            if np.float32(now32 - self._slot_arrival[slot]) \
+                    > self._slot_thresh[slot]:
+                wd.give_up(rid)
+                self.stats.n_gave_up += 1
+                comp_by_rid[rid] = Completion(-1, float(now32), None)
+
     def poll(self, now_ms: Optional[float] = None) -> PollResult:
         """One decision epoch: one fused device step (apply previous
         verdicts, ingest completions, retire, compact + admit, dispatch)
@@ -611,24 +702,51 @@ class ClientSession:
         now32 = np.float32(now_ms)
         nl = self._n_live
 
-        # 1. provider completions -> comp scatter prefix + finish mirror
+        # 1. provider completions -> comp scatter prefix + finish mirror.
+        # Ingestion is duplicate-safe: the FIRST arrival for a rid wins,
+        # and everything else — a redelivered ticket, a raced attempt
+        # whose sibling already landed, a completion for a rid the
+        # session already retired — is discarded HERE, before the
+        # scatter, so the donated-buffer tick never sees a double-retire
         comps = self.provider.poll(now_ms)
-        comp_by_rid: dict[int, object] = {}
+        comp_by_rid: dict[int, Completion] = {}
         ncomp = 0
-        if comps:
-            for c in comps:
-                comp_by_rid[self._tickets.pop(c.ticket)] = c
+        for c in comps:
+            rid = self._tickets.pop(c.ticket, None)
+            if rid is None or rid in comp_by_rid:
+                # dead ticket (dup redelivery / resolved race) or a
+                # second arrival for the same rid within this epoch
+                self.stats.n_dup_discarded += 1
+                continue
+            comp_by_rid[rid] = c
+        if self._watchdog is not None:
+            self._run_watchdog(now_ms, now32, nl, comp_by_rid)
+        if comp_by_rid:
             rid_list = sorted(comp_by_rid)
             rids = np.asarray(rid_list, np.int64)
             slots = np.searchsorted(self._slot_rid[:nl], rids)
+            if nl:
+                live = ((slots < nl)
+                        & (self._slot_rid[np.minimum(slots, nl - 1)] == rids))
+            else:
+                live = np.zeros(len(rids), bool)
+            if not live.all():
+                # late arrival: the rid no longer holds a window slot
+                # (retired in an earlier epoch, e.g. after give-up)
+                for i in np.nonzero(~live)[0]:
+                    del comp_by_rid[rid_list[i]]
+                    self.stats.n_late_discarded += 1
+                rids, slots = rids[live], slots[live]
+                rid_list = [r for r in rid_list if r in comp_by_rid]
             # asarray(..., f32) rounds each f64 element exactly like a
             # per-element np.float32() cast
-            fins = np.asarray(
-                [comp_by_rid[r].finish_ms for r in rid_list], np.float32)
             ncomp = len(rids)
-            self._comp[0, :ncomp] = slots
-            self._comp[1, :ncomp] = fins
-            self._slot_finish[slots] = fins
+            if ncomp:
+                fins = np.asarray(
+                    [comp_by_rid[r].finish_ms for r in rid_list], np.float32)
+                self._comp[0, :ncomp] = slots
+                self._comp[1, :ncomp] = fins
+                self._slot_finish[slots] = fins
 
         # 2. retirement classification on the f32 mirrors — the same
         # comparison chains `_complete_and_timeout` runs on the device
@@ -662,6 +780,11 @@ class ClientSession:
                 abandoned.append(rid)
                 self.stats.n_abandoned += 1
             self._unfinished -= 1
+            if self._watchdog is not None:
+                # unmap every racing ticket this rid still holds: their
+                # late completions are discarded at ingestion
+                for t in self._watchdog.note_terminal(rid):
+                    self._tickets.pop(t, None)
         alive = ((st == PENDING) | (st == INFLIGHT)) & ~dead
         n_alive = int(alive.sum())
 
@@ -670,9 +793,10 @@ class ClientSession:
         n_stage = len(staged_rids)
         if prof is not None:
             _tp1 = time.perf_counter()
+        extra = (self._resub_charge,) if self._watchdog is not None else ()
         self._win_batch, self._dev_state, d, summary = self._tick(
             self._win_batch, self._dev_state, self._pending,
-            self._comp, self._staged_px, np.int32(n_stage), now32)
+            self._comp, self._staged_px, np.int32(n_stage), now32, *extra)
         if prof is not None:
             _tp2 = time.perf_counter()
         # the dispatch is async: the mirror bookkeeping below depends
@@ -681,6 +805,8 @@ class ClientSession:
         if ncomp:
             self._comp[0, :ncomp] = w
             self._comp[1, :ncomp] = np.inf
+        if extra and self._resub_charge.any():
+            self._resub_charge[:] = 0.0
 
         # 5. mirror compaction (lockstep with the device scatter)
         nt = n_alive + n_stage
@@ -740,13 +866,19 @@ class ClientSession:
                     self._slot_status[slot] = INFLIGHT
                     admitted.append(rid)
                     self.stats.n_admitted += 1
+                    if self._watchdog is not None:
+                        self._watchdog.note_admit(rid, r, res.ticket, now_ms)
                 else:
                     ad[g] = 0.0
                     r.n_throttles += 1
                     # f32-array store rounds the f64 delay identically
-                    # to an explicit np.float32 cast
+                    # to an explicit np.float32 cast.  The hint is
+                    # sanitized first: a hostile (negative/NaN)
+                    # Retry-After must not mint a defer expiry in the
+                    # past or poison the idle-sleep hint
                     ad[b + g] = self.retry_policy(
-                        res.retry_after_ms, r.n_throttles)
+                        sanitize_retry_after_ms(res.retry_after_ms),
+                        r.n_throttles)
                     throttled.append(rid)
                     self.stats.n_throttled += 1
             elif a == olc.DEFER:
@@ -804,6 +936,10 @@ class ClientSession:
             cands.append(self._arrival_ms[self._queue[0]])
         if np.isfinite(self._defer_hint):
             cands.append(self._defer_hint)
+        if self._watchdog is not None:
+            nd = self._watchdog.next_deadline_ms()
+            if np.isfinite(nd):
+                cands.append(nd)
         pe = self.provider.next_event_ms(now_ms)
         if pe is not None:
             cands.append(pe)
@@ -818,21 +954,60 @@ class ClientSession:
             self.stats.n_idle_sleeps += 1
             time.sleep(sleep_s)
 
-    def drain(self, max_polls: Optional[int] = None) -> list[Request]:
+    def _live_slot_report(self, limit: int = 16) -> str:
+        """Human-readable snapshot of the occupied window slots for
+        liveness diagnostics: (rid, status, age_ms) triples."""
+        names = {PENDING: "pending", INFLIGHT: "inflight"}
+        nl = self._n_live
+        now = np.float32(self.now_ms())
+        rows = []
+        for slot in range(nl):
+            st = int(self._slot_status[slot])
+            if st not in names:
+                continue
+            rows.append(
+                f"(rid={int(self._slot_rid[slot])} {names[st]} "
+                f"age={float(now - self._slot_arrival[slot]):.0f}ms)")
+        extra = f" ... +{len(rows) - limit} more" if len(rows) > limit else ""
+        return " ".join(rows[:limit]) + extra
+
+    def drain(self, max_polls: Optional[int] = None,
+              max_idle_ms: Optional[float] = None) -> list[Request]:
         """Poll until every submitted request is terminal.  Wall-clock
         sessions sleep through idle epochs; virtual sessions advance one
         tick per poll.  Ends with one settling epoch that compacts the
         last retirements out of the pool and primes the idle fast path
         (subsequent polls on the drained session are host-only no-ops).
-        Returns the session's requests."""
+        Returns the session's requests.
+
+        `max_idle_ms` is the liveness guard: if no poll makes progress
+        for that much session time — the signature of a completion that
+        will never arrive (e.g. silently dropped by the provider) — the
+        drain raises a diagnostic RuntimeError naming the live slots,
+        the provider's inflight count, and the last-progress timestamp,
+        instead of sleeping forever.  None (the default) preserves the
+        wait-forever contract for trusted transports."""
         n = 0
+        last_progress: Optional[float] = None
         while self._unfinished:
             r = self.poll()
             n += 1
+            if last_progress is None or r.progressed:
+                last_progress = r.now_ms
             if self._unfinished and max_polls is not None and n >= max_polls:
                 raise RuntimeError(
                     f"drain: {self._unfinished} request(s) still live "
                     f"after {n} polls")
+            if (max_idle_ms is not None and self._unfinished
+                    and r.now_ms - last_progress > max_idle_ms):
+                raise RuntimeError(
+                    f"drain: no progress for "
+                    f"{r.now_ms - last_progress:.0f} ms (cap "
+                    f"{max_idle_ms:.0f} ms): {self._unfinished} "
+                    f"unfinished, {self.provider.inflight()} "
+                    f"provider-inflight, last progress at "
+                    f"t={last_progress:.0f} ms (now t={r.now_ms:.0f} ms); "
+                    f"live slots: {self._live_slot_report()}")
             if self.clock == "wall" and not r.progressed:
                 self._idle_sleep(r.now_ms)
         if not self._queue and not self._tickets \

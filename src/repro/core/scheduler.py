@@ -108,6 +108,27 @@ def _refund(cfg, k, cls_id, head_cost, action, ignore_class):
     )
 
 
+def charge_resubmit(cfg: PolicyConfig, deficit: jnp.ndarray,
+                    charge: jnp.ndarray) -> jnp.ndarray:
+    """Debit resubmission traffic against the class deficits.
+
+    The client's resilience layer re-sends stuck requests through the
+    same provider boundary the scheduler meters — if that recovery
+    traffic rode for free, a class with a high fault rate could starve
+    the others through its retries.  `charge` is the (K,) per-class sum
+    of p50 costs resubmitted this epoch; like `_refund`, the debit is
+    gated on ADRR (the only mode that charges deficits at all) and on
+    an actual charge being present, so the zero-charge epoch returns
+    `deficit` bit-unchanged (x - 0.0 is not an f32 identity at -0.0)
+    and the no-resilience trace never contains this op at all.
+    """
+    debited = deficit - charge
+    return jnp.where(
+        (charge > 0.0).any() & jnp.isfinite(debited).all()
+        & (cfg.alloc_mode == ALLOC_ADRR),
+        debited, deficit)
+
+
 def schedule_slot(
     cfg: PolicyConfig, batch: RequestBatch, state: SimState
 ) -> SlotDecision:

@@ -1,5 +1,6 @@
 """JAX discrete-event simulation of the black-box provider boundary."""
 from repro.sim.engine import SimConfig, run_sim  # noqa: F401
+from repro.sim.faults import FaultSchedule, fault_draw  # noqa: F401
 from repro.sim.metrics import (  # noqa: F401
     PhaseMetrics,
     SimMetrics,

@@ -1,0 +1,100 @@
+"""FaultSchedule: the contract-breaking provider, as a static spec.
+
+Every provider in the repo is perfectly honest by default: completions
+arrive exactly once, Retry-After hints are truthful, nothing ever gets
+stuck.  The paper's client sits at a *black-box* boundary, though, so
+the stack's headline claims have to survive a provider that lies.  A
+`FaultSchedule` is a static, hashable pytree of scalar knobs — the same
+`None`-means-off pattern as `ProviderDynamics` — that `MockProvider`
+and `FleetProvider` thread through their submit/poll paths to inject
+four fault families:
+
+  * **silent drops** — the completion is computed server-side but never
+    delivered to the client (`drop_frac` of landed completions vanish);
+  * **stuck requests** — service time inflated by `stuck_mult` (default
+    40x), pushing the completion past any sane timeout horizon until
+    the client resubmits;
+  * **duplicate completions** — the same ticket delivered `1 +
+    dup_extra` times, redeliveries lagging by `dup_delay_ms` each and
+    carrying payloads whose finish stamp diverges by `dup_jitter_ms`
+    per copy (at-least-once delivery with disagreeing copies);
+  * **lying Retry-After** — 429 hints scaled by `retry_lie_mult`
+    (under- or overstating the real token-bucket refill; negative or
+    non-finite values model outright hostile hints — see
+    `client.provider.sanitize_retry_after_ms`).
+
+Fault draws are keyed deterministically per **ticket** (per RPC
+attempt), not per request: a resubmitted request gets fresh draws, so
+bounded-budget resubmission drives the per-request failure probability
+to `frac^(1 + max_resubmits)`.  `fault_salt` decorrelates the streams
+of a fleet's child endpoints.  `FaultSchedule() == no faults`;
+providers built with `faults=None` trace/execute the exact pre-fault
+code path (the byte-identity criterion the parity tests pin).
+
+The recovery machinery lives in `repro.client.resilience`; the
+registry scenarios riding these knobs (`silent_drop`, `stuck_tail`,
+`dup_storm`) are in `sim/scenarios.py`, measured by
+`benchmarks/fault_sweep.py`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+
+class FaultSchedule(NamedTuple):
+    """Static fault spec (all scalars — hashable, usable inside a
+    `Scenario`).  The default instance injects nothing."""
+
+    seed: int = 0
+    # silent drops: fraction of landed completions never delivered
+    drop_frac: float = 0.0
+    # stuck requests: fraction of accepted submits whose service time is
+    # inflated by `stuck_mult`
+    stuck_frac: float = 0.0
+    stuck_mult: float = 40.0
+    # duplicate completions: fraction of delivered completions redelivered
+    # `dup_extra` more times, each copy `dup_delay_ms` later than the
+    # last with a payload finish stamp skewed by `dup_jitter_ms` per copy
+    dup_frac: float = 0.0
+    dup_extra: int = 1
+    dup_delay_ms: float = 100.0
+    dup_jitter_ms: float = 0.0
+    # lying Retry-After: multiplier on the hint a 429 bounce carries;
+    # 1.0 is honest, < 1 understates the refill (clients retry too early
+    # and re-bounce), > 1 overstates it (clients idle past recovery)
+    retry_lie_mult: float = 1.0
+
+    @property
+    def injects(self) -> bool:
+        """Whether any fault family is active (an all-default schedule
+        is equivalent to `faults=None` up to dead draws)."""
+        return (self.drop_frac > 0.0 or self.stuck_frac > 0.0
+                or self.dup_frac > 0.0 or self.retry_lie_mult != 1.0)
+
+
+class FaultDraw(NamedTuple):
+    """Per-ticket fault verdicts, deterministic in
+    (schedule.seed, salt, ticket)."""
+
+    drop: bool
+    stuck: bool
+    dup: bool
+
+
+def fault_draw(fs: FaultSchedule, salt: int, ticket: int) -> FaultDraw:
+    """Draw the per-attempt fault verdicts for one ticket.
+
+    Keyed by (seed, salt, ticket) through a `SeedSequence`, so replays
+    are deterministic across platforms and independent of draw order —
+    the provider may evaluate tickets in any sequence and a resubmitted
+    request (fresh ticket) gets independent draws.
+    """
+    u = np.random.default_rng(
+        np.random.SeedSequence((fs.seed, salt, ticket))).random(3)
+    return FaultDraw(
+        drop=bool(u[0] < fs.drop_frac),
+        stuck=bool(u[1] < fs.stuck_frac),
+        dup=bool(u[2] < fs.dup_frac),
+    )

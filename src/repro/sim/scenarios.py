@@ -40,6 +40,7 @@ from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 
+from repro.sim.faults import FaultSchedule
 from repro.sim.provider import (
     Fleet,
     FleetDynamics,
@@ -121,6 +122,19 @@ class Scenario(NamedTuple):
     # Fleet scenarios use FleetDynamics, not ProviderDynamics, so
     # `has_dynamics` stays False and `fleet`/`dynamics` never coexist.
     fleet: Optional[FleetSpec] = None
+    # contract-breaking transport faults (sim/faults.py): silent drops,
+    # stuck requests, duplicate deliveries, lying Retry-After.  Live-path
+    # only — MockProvider/FleetProvider inject them; the engine's closed
+    # simulator keeps the honest transport.  None = honest provider.
+    fault_schedule: Optional[FaultSchedule] = None
+
+    @property
+    def faults(self) -> Optional[FaultSchedule]:
+        """Injecting fault schedule, or None (a schedule whose knobs are
+        all neutral is treated as absent — the provider then builds the
+        exact pre-fault program)."""
+        fs = self.fault_schedule
+        return fs if fs is not None and fs.injects else None
 
     @property
     def has_dynamics(self) -> bool:
@@ -416,6 +430,38 @@ SCENARIOS: dict[str, Scenario] = {
             p=4,
             brownouts=((0, 1 / 3, 2 / 3, 0.3), (1, 0.5, 0.85, 0.3)),
         ),
+    ),
+    # ---- chaos scenarios (live-path only; benchmarks/fault_sweep.py).
+    # The provider breaks the transport contract and the fault_sweep
+    # recovery bar (resilience-on completion >= 0.99, resilience-off
+    # demonstrably degraded) rides these.  scenario_sweep skips them:
+    # the engine's closed simulator models an honest transport.
+    #
+    # silent drop: 15% of accepted requests never produce a completion —
+    # without the watchdog each drop pins an INFLIGHT window slot forever
+    "silent_drop": Scenario(
+        "silent_drop",
+        fault_schedule=FaultSchedule(seed=11, drop_frac=0.15),
+    ),
+    # stuck tail: 12% of accepted requests take 400x their honest
+    # service time — far past any timeout horizon, so an un-watched
+    # session just waits; a resubmitted attempt races the stuck one
+    # and wins
+    "stuck_tail": Scenario(
+        "stuck_tail",
+        fault_schedule=FaultSchedule(seed=15, stuck_frac=0.12,
+                                     stuck_mult=400.0),
+    ),
+    # dup storm: 30% of completions delivered 2 extra times with skewed
+    # finish stamps, on top of a rate limiter whose Retry-After hints lie
+    # low (0.25x) — exercises dup-safe ingestion and hint sanitization
+    "dup_storm": Scenario(
+        "dup_storm",
+        tb_rate_rps=1.5,
+        tb_burst=6.0,
+        fault_schedule=FaultSchedule(seed=13, dup_frac=0.3, dup_extra=2,
+                                     dup_delay_ms=120.0, dup_jitter_ms=7.0,
+                                     retry_lie_mult=0.25),
     ),
 }
 

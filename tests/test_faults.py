@@ -1,0 +1,529 @@
+"""Chaos coverage: fault injection (sim/faults.py), the resilience
+watchdog (client/resilience.py), and duplicate-safe ingestion.
+
+The contract under test, per layer:
+
+  * `fault_draw` is deterministic in (seed, salt, ticket) and a neutral
+    `FaultSchedule` collapses to the honest provider (`faults=None`
+    builds the exact pre-fault path — the decision-parity pins in
+    tests/test_serving_client.py keep holding because of this);
+  * `MockProvider.poll` delivers in (finish_ms, ticket) order even when
+    service times invert along the submit stream (the dict-insertion-
+    order bug this PR fixes);
+  * hostile Retry-After hints (negative/NaN/inf) are clamped to 0 at
+    every consumer boundary — the session's retry hook and the fleet
+    router's dry-penalty — instead of minting past-dated defers or NaN
+    routing costs;
+  * ingestion is idempotent: duplicate, reordered, and late-arriving
+    completion deliveries leave the session's device state, host
+    mirrors, and metrics bit-exactly what a clean delivery produces
+    (the hypothesis property test);
+  * the watchdog recovers silent drops and stuck requests to full
+    completion while the trusting control demonstrably loses work, and
+    nothing ever retires twice;
+  * `drain(max_idle_ms=...)` turns "a completion that will never
+    arrive" into a diagnostic error instead of an infinite wait.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.client import (
+    ClientSession,
+    Completion,
+    MockProvider,
+    Request,
+    ResilienceConfig,
+    SessionConfig,
+    SubmitResult,
+    Watchdog,
+    expo_retry,
+    sanitize_retry_after_ms,
+)
+from repro.client.fleet import FleetProvider
+from repro.core.policy import fair_queuing, final_adrr_olc
+from repro.core.scheduler import charge_resubmit
+from repro.sim import get_scenario
+from repro.sim.faults import FaultSchedule, fault_draw
+from repro.sim.provider import (
+    FleetPhysics,
+    default_physics,
+    token_bucket_schedule,
+)
+from repro.sim.scenarios import build
+from repro.sim.workload import generate
+
+from tests.test_serving_client import batch_to_requests
+
+
+def _scenario_requests(name: str, n: int, n_ticks: int, seed: int,
+                       dt_ms: float = 25.0):
+    sc = get_scenario(name)
+    wl_cfg, sched, _, _ = build(sc, n, n_ticks, dt_ms)
+    batch, jitter = generate(jax.random.PRNGKey(seed), wl_cfg, sched)
+    return batch_to_requests(batch, jitter)
+
+
+# ---------------------------------------------------------------------------
+# fault draws + the neutral-schedule collapse
+# ---------------------------------------------------------------------------
+
+class TestFaultDraw:
+    def test_deterministic_and_key_sensitive(self):
+        fs = FaultSchedule(seed=7, drop_frac=0.3, stuck_frac=0.3,
+                           dup_frac=0.3)
+        a = [fault_draw(fs, 0, t) for t in range(64)]
+        b = [fault_draw(fs, 0, t) for t in range(64)]
+        assert a == b  # replayable
+        # ticket and salt both move the stream
+        assert a != [fault_draw(fs, 1, t) for t in range(64)]
+        assert any(fault_draw(fs, 0, t) != fault_draw(fs, 0, t + 64)
+                   for t in range(64))
+
+    def test_frequencies_roughly_match(self):
+        fs = FaultSchedule(seed=3, drop_frac=0.2, stuck_frac=0.5,
+                           dup_frac=0.8)
+        n = 2000
+        draws = [fault_draw(fs, 0, t) for t in range(n)]
+        assert abs(sum(d.drop for d in draws) / n - 0.2) < 0.05
+        assert abs(sum(d.stuck for d in draws) / n - 0.5) < 0.05
+        assert abs(sum(d.dup for d in draws) / n - 0.8) < 0.05
+
+    def test_neutral_schedule_collapses_to_none(self):
+        assert not FaultSchedule().injects
+        assert FaultSchedule(drop_frac=0.1).injects
+        assert FaultSchedule(retry_lie_mult=0.5).injects
+        # a provider built with a neutral schedule takes the honest path
+        assert MockProvider(faults=FaultSchedule())._faults is None
+        assert MockProvider(faults=None)._faults is None
+        # the Scenario property applies the same collapse
+        sc = get_scenario("balanced")._replace(
+            fault_schedule=FaultSchedule())
+        assert sc.faults is None
+        assert get_scenario("silent_drop").faults is not None
+
+    def test_fault_scenarios_are_registered(self):
+        for name in ("silent_drop", "stuck_tail", "dup_storm"):
+            assert get_scenario(name).faults is not None
+
+
+# ---------------------------------------------------------------------------
+# Retry-After sanitization (session hook + fleet dry-penalty)
+# ---------------------------------------------------------------------------
+
+class TestSanitizeRetryAfter:
+    def test_clamp(self):
+        assert sanitize_retry_after_ms(float("nan")) == 0.0
+        assert sanitize_retry_after_ms(float("inf")) == 0.0
+        assert sanitize_retry_after_ms(float("-inf")) == 0.0
+        assert sanitize_retry_after_ms(-1500.0) == 0.0
+        assert sanitize_retry_after_ms(0.0) == 0.0
+        assert sanitize_retry_after_ms(1500.0) == 1500.0
+
+    def test_retry_policies_survive_hostile_hints(self):
+        pol = expo_retry(jitter=0.0)
+        for hostile in (float("nan"), float("-inf"), -42.0):
+            d = pol(sanitize_retry_after_ms(hostile), 1)
+            assert np.isfinite(d) and d >= 0.0
+
+    def test_fleet_dry_penalty_stays_finite(self):
+        class NaNBouncer:
+            def submit(self, req, now_ms, inflight_hint=None):
+                return SubmitResult(False, float("nan"))
+
+            def poll(self, now_ms):
+                return []
+
+            def inflight(self):
+                return 0
+
+            def next_event_ms(self, now_ms):
+                return None
+
+        phys = default_physics()
+        fphys = FleetPhysics(*(jnp.asarray(a)[None] for a in phys))
+        fleet = FleetProvider([NaNBouncer()], fphys)
+        req = Request(rid=0, prompt=None, max_new=100.0, p50=100.0, bucket=0)
+        res = fleet.submit(req, 100.0)
+        assert not res.accepted
+        # an unsanitized NaN penalty would poison every later argmin
+        assert np.isfinite(fleet._dry_penalty).all()
+        assert np.isfinite(fleet._dry_until).all()
+        ep, cost = fleet.route(100.0, 200.0)
+        assert np.isfinite(cost)
+
+    def test_session_survives_lying_retry_after(self):
+        """A rate-limited provider whose Retry-After hints are negative:
+        the session must neither crash nor thrash, and the workload
+        still drains to completion after the bucket refills."""
+        n_ticks = 4000
+        refill, cap = token_bucket_schedule(n_ticks, 25.0, (0.5, 0.5), 1.5)
+        prov = MockProvider(
+            dt_ms=25.0, tb_refill=np.asarray(refill),
+            tb_capacity=np.asarray(cap),
+            faults=FaultSchedule(retry_lie_mult=-1.0))
+        sess = ClientSession(prov, final_adrr_olc(), SessionConfig(),
+                             clock="virtual")
+        for r in _scenario_requests("balanced", 24, n_ticks, seed=0):
+            sess.submit(r)
+        out = sess.drain(max_polls=n_ticks)
+        # every request reaches a terminal state (the backlog the tight
+        # limiter builds may push a straggler into a policy reject —
+        # that is the overload ladder working, not a hang)
+        assert sess.unfinished == 0
+        assert all(r.status in ("completed", "rejected", "abandoned")
+                   for r in out)
+        assert sum(r.status == "completed" for r in out) >= 0.9 * len(out)
+        assert sess.stats.n_throttled > 0  # the limiter actually bit
+
+
+# ---------------------------------------------------------------------------
+# MockProvider delivery order + fault mechanics
+# ---------------------------------------------------------------------------
+
+class TestMockProviderFaults:
+    def test_poll_orders_by_finish_not_insertion(self):
+        """Ticket 0 is submitted first but finishes last (jitter-
+        inverted service): delivery must be (finish, ticket)-sorted,
+        not dict-insertion-ordered."""
+        prov = MockProvider(dt_ms=25.0)
+        slow = Request(rid=0, prompt=None, max_new=400.0, p50=400.0,
+                       bucket=2, jitter=10.0)
+        fast = Request(rid=1, prompt=None, max_new=400.0, p50=400.0,
+                       bucket=2, jitter=0.1)
+        t0 = prov.submit(slow, 25.0).ticket
+        t1 = prov.submit(fast, 25.0).ticket
+        comps = prov.poll(1e9)
+        assert [c.ticket for c in comps] == [t1, t0]
+        assert comps[0].finish_ms < comps[1].finish_ms
+
+    def test_drop_stuck_dup_mechanics(self):
+        fs = FaultSchedule(seed=5, drop_frac=0.25, dup_frac=0.25,
+                           dup_extra=2, dup_delay_ms=50.0,
+                           dup_jitter_ms=3.0)
+        prov = MockProvider(dt_ms=25.0, faults=fs)
+        n = 64
+        for i in range(n):
+            r = Request(rid=i, prompt=None, max_new=50.0, p50=50.0,
+                        bucket=0, jitter=1.0)
+            assert prov.submit(r, 25.0).accepted
+        first = prov.poll(5e4)
+        late = prov.poll(1e9)   # drains the delayed dup redeliveries
+        assert prov.n_dropped > 0 and prov.n_duped > 0
+        # dropped tickets appear nowhere; duped tickets appear 1+extra
+        # times in total with diverging finish stamps
+        seen: dict[int, list[float]] = {}
+        for c in first + late:
+            seen.setdefault(c.ticket, []).append(c.finish_ms)
+        for t in range(n):
+            d = fault_draw(fs, 0, t)
+            if d.drop:
+                assert t not in seen
+            elif d.dup:
+                assert len(seen[t]) == 1 + fs.dup_extra
+                assert len(set(seen[t])) == 1 + fs.dup_extra
+            else:
+                assert len(seen[t]) == 1
+        assert prov.inflight() == 0
+
+    def test_stuck_inflates_service(self):
+        fs = FaultSchedule(seed=0, stuck_frac=1.0, stuck_mult=400.0)
+        honest, faulty = MockProvider(dt_ms=25.0), MockProvider(
+            dt_ms=25.0, faults=fs)
+        r = Request(rid=0, prompt=None, max_new=100.0, p50=100.0,
+                    bucket=1, jitter=1.0)
+        honest.submit(r, 25.0)
+        faulty.submit(r, 25.0)
+        (f_honest,), = ({f for f, _ in honest._outstanding.values()},)
+        (f_stuck,), = ({f for f, _ in faulty._outstanding.values()},)
+        assert f_stuck - 25.0 == pytest.approx(
+            400.0 * (f_honest - 25.0), rel=1e-5)
+        assert faulty.n_stuck == 1
+
+
+# ---------------------------------------------------------------------------
+# charge_resubmit + Watchdog bookkeeping
+# ---------------------------------------------------------------------------
+
+class TestChargeResubmit:
+    def test_debits_adrr_only(self):
+        adrr, fq = final_adrr_olc(), fair_queuing()
+        deficit = jnp.asarray([4.0, 8.0], jnp.float32)
+        charge = jnp.asarray([1.5, 0.0], jnp.float32)
+        out = charge_resubmit(adrr, deficit, charge)
+        np.testing.assert_array_equal(np.asarray(out), [2.5, 8.0])
+        # non-ADRR allocators ignore the charge entirely
+        np.testing.assert_array_equal(
+            np.asarray(charge_resubmit(fq, deficit, charge)),
+            np.asarray(deficit))
+
+    def test_zero_and_hostile_charges_are_noops(self):
+        adrr = final_adrr_olc()
+        deficit = jnp.asarray([4.0, 8.0], jnp.float32)
+        for charge in ([0.0, 0.0], [np.nan, 1.0], [np.inf, 0.0]):
+            out = charge_resubmit(
+                adrr, deficit, jnp.asarray(charge, jnp.float32))
+            np.testing.assert_array_equal(
+                np.asarray(out), np.asarray(deficit))
+
+
+class TestWatchdog:
+    def _req(self, p90=100.0):
+        return Request(rid=0, prompt=None, max_new=100.0, p50=100.0,
+                       bucket=0, p90=p90)
+
+    def test_deadline_and_budget_lifecycle(self):
+        wd = Watchdog(ResilienceConfig(timeout_mult=2.0,
+                                       min_deadline_ms=1.0,
+                                       max_resubmits=1),
+                      default_physics())
+        req = self._req()
+        d = wd.deadline_ms(req)
+        assert d > 0 and np.isfinite(d)
+        wd.note_admit(7, req, ticket=11, now_ms=100.0)
+        assert wd.overdue(100.0 + d - 1.0) == []
+        assert wd.overdue(100.0 + d) == [7]
+        assert wd.budget_left(7)
+        wd.note_resubmit(7, req, ticket=12, now_ms=100.0 + d)
+        assert not wd.budget_left(7)
+        # bounce pushes the next check out without consuming budget
+        wd.note_bounced(7, 500.0, 200.0 + d)
+        assert wd.overdue(200.0 + d + 499.0) == []
+        assert wd.overdue(200.0 + d + 500.0) == [7]
+        wd.give_up(7)
+        assert wd.overdue(1e12) == []          # gave up: no more scans
+        assert wd.next_deadline_ms() == float("inf")
+        assert sorted(wd.note_terminal(7)) == [11, 12]  # both racing tickets
+        assert wd.note_terminal(7) == []       # idempotent
+
+    def test_next_deadline_is_min_pending(self):
+        wd = Watchdog(ResilienceConfig(), default_physics())
+        wd.note_admit(1, self._req(p90=50.0), ticket=1, now_ms=0.0)
+        wd.note_admit(2, self._req(p90=5000.0), ticket=2, now_ms=0.0)
+        assert wd.next_deadline_ms() == pytest.approx(
+            wd.deadline_ms(self._req(p90=50.0)))
+
+
+# ---------------------------------------------------------------------------
+# duplicate-safe ingestion: the idempotence property
+# ---------------------------------------------------------------------------
+
+class _PerturbingProvider:
+    """Wraps an honest provider and breaks DELIVERY only: completions
+    may be duplicated in the same poll (identical payload), redelivered
+    in later polls with a diverging finish stamp (the dead-ticket path,
+    including arbitrarily late — after retirement), and every poll's
+    batch is shuffled.  First delivery of each ticket is never delayed,
+    so the information content of the stream is unchanged — which is
+    exactly why the session's state must be unchanged too."""
+
+    def __init__(self, inner, rng, dup_p: float, late_p: float):
+        self.inner = inner
+        self._rng = rng
+        self._dup_p = dup_p
+        self._late_p = late_p
+        self._poll_no = 0
+        self._late: list[tuple[int, Completion]] = []
+
+    def submit(self, req, now_ms, inflight_hint=None):
+        return self.inner.submit(req, now_ms, inflight_hint=inflight_hint)
+
+    def poll(self, now_ms):
+        self._poll_no += 1
+        fresh = list(self.inner.poll(now_ms))
+        out = list(fresh)
+        for c in fresh:
+            if self._rng.random() < self._dup_p:
+                out.append(c)  # same-poll dup: identical payload copy
+            if self._rng.random() < self._late_p:
+                at = self._poll_no + self._rng.randint(1, 400)
+                self._late.append((at, Completion(
+                    c.ticket,
+                    c.finish_ms + self._rng.uniform(1.0, 1e4), None)))
+        due = [c for at, c in self._late if at <= self._poll_no]
+        if due:
+            self._late = [(at, c) for at, c in self._late
+                          if at > self._poll_no]
+            out.extend(due)
+        self._rng.shuffle(out)
+        return out
+
+    def inflight(self):
+        return self.inner.inflight()
+
+    def next_event_ms(self, now_ms):
+        return self.inner.next_event_ms(now_ms)
+
+
+def _run_fixed(provider, reqs, n_ticks: int) -> ClientSession:
+    sess = ClientSession(provider, final_adrr_olc(), SessionConfig(),
+                         clock="virtual")
+    for r in reqs:
+        sess.submit(r)
+    for _ in range(n_ticks):
+        sess.poll()
+    return sess
+
+
+class TestIngestionIdempotence:
+    N, TICKS = 24, 700
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=3),
+           perturb_seed=st.integers(min_value=0, max_value=10_000),
+           dup_p=st.floats(min_value=0.0, max_value=1.0),
+           late_p=st.floats(min_value=0.0, max_value=1.0))
+    def test_duplicate_reorder_late_deliveries_are_invisible(
+            self, seed, perturb_seed, dup_p, late_p):
+        """Bit-exact idempotence: a delivery layer that duplicates,
+        reorders, and re-sends retired tickets produces the same device
+        state, host mirrors, per-request outcomes, and metrics as clean
+        exactly-once delivery."""
+        import random
+        reqs = _scenario_requests("balanced", self.N, self.TICKS, seed)
+        clean = _run_fixed(MockProvider(dt_ms=25.0), reqs, self.TICKS)
+        perturbed = _run_fixed(
+            _PerturbingProvider(MockProvider(dt_ms=25.0),
+                                random.Random(perturb_seed), dup_p, late_p),
+            [r.__class__(**{f.name: getattr(r, f.name)
+                            for f in r.__dataclass_fields__.values()})
+             for r in reqs],
+            self.TICKS)
+        assert clean.stats.n_dup_discarded == 0
+        assert clean.stats.n_late_discarded == 0
+        # device state + window batch, leaf for leaf, bit for bit
+        for a, b in zip(jax.tree_util.tree_leaves(clean._state),
+                        jax.tree_util.tree_leaves(perturbed._state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(clean._win_batch),
+                        jax.tree_util.tree_leaves(perturbed._win_batch)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # host mirrors
+        for name in ("_slot_rid", "_slot_status", "_slot_arrival",
+                     "_slot_thresh", "_slot_finish"):
+            np.testing.assert_array_equal(getattr(clean, name),
+                                          getattr(perturbed, name))
+        assert clean._n_live == perturbed._n_live
+        # metrics + per-request outcomes
+        for f in ("n_polls", "n_admitted", "n_completed", "n_abandoned",
+                  "n_rejected", "n_deferred", "n_throttled"):
+            assert getattr(clean.stats, f) == getattr(perturbed.stats, f)
+        for rc, rp in zip(clean.requests(), perturbed.requests()):
+            assert (rc.status, rc.finish_s) == (rp.status, rp.finish_s)
+
+
+# ---------------------------------------------------------------------------
+# recovery: watchdog on vs trusting control, zero double-retires
+# ---------------------------------------------------------------------------
+
+def _terminal_consistency(sess: ClientSession) -> int:
+    """Terminal-counter excess over per-request terminal statuses — a
+    double-retired slot shows up as a positive excess."""
+    n_status = sum(1 for r in sess.requests()
+                   if r.status in ("completed", "abandoned", "rejected"))
+    return (sess.stats.n_completed + sess.stats.n_abandoned
+            + sess.stats.n_rejected) - n_status
+
+
+class TestRecovery:
+    RES = ResilienceConfig(timeout_mult=3.0, max_resubmits=3)
+
+    def _run(self, name, resilience, n=32, n_ticks=9000, seed=0):
+        sc = get_scenario(name)
+        prov = MockProvider.from_scenario(sc, n, n_ticks, 25.0, 2)
+        sess = ClientSession(prov, final_adrr_olc(), SessionConfig(),
+                             clock="virtual", resilience=resilience)
+        for r in _scenario_requests(name, n, n_ticks, seed):
+            sess.submit(r)
+        polls = 0
+        while sess.unfinished and polls < n_ticks:
+            sess.poll()
+            polls += 1
+        return sess, prov
+
+    @pytest.mark.parametrize("name", ["silent_drop", "stuck_tail"])
+    def test_watchdog_recovers_what_the_control_loses(self, name):
+        on, prov_on = self._run(name, self.RES)
+        off, prov_off = self._run(name, None)
+        n = len(on.requests())
+        comp_on = sum(r.status == "completed" for r in on.requests()) / n
+        comp_off = sum(r.status == "completed" for r in off.requests()) / n
+        # the fault actually fired, the watchdog actually worked
+        assert prov_on.n_dropped + prov_on.n_stuck > 0
+        assert on.stats.n_resubmitted > 0
+        assert comp_on >= 0.99
+        assert on.unfinished == 0
+        # the trusting control visibly loses the faulted work
+        assert comp_off <= comp_on - 0.05
+        assert off.unfinished > 0  # wedged INFLIGHT slots, forever
+        # nothing retired twice, with or without the watchdog
+        assert _terminal_consistency(on) == 0
+        assert _terminal_consistency(off) == 0
+
+    def test_dup_storm_completes_without_double_retire(self):
+        on, _ = self._run("dup_storm", self.RES, n_ticks=6000)
+        off, _ = self._run("dup_storm", None, n_ticks=6000)
+        for sess in (on, off):
+            assert all(r.status == "completed" for r in sess.requests())
+            assert sess.stats.n_dup_discarded > 0
+            assert _terminal_consistency(sess) == 0
+
+    def test_clean_workload_resilience_is_invisible(self):
+        """On an honest provider the armed watchdog is a no-op: same
+        decisions, same outcomes, same completion stream as the
+        trusting session (the resilient trace is a distinct compiled
+        program — this pins its value-equivalence)."""
+        n, ticks = 24, 1500
+        out = []
+        for res in (None, ResilienceConfig()):
+            sess = ClientSession(MockProvider(dt_ms=25.0), final_adrr_olc(),
+                                 SessionConfig(), clock="virtual",
+                                 resilience=res)
+            for r in _scenario_requests("balanced", n, ticks, seed=1):
+                sess.submit(r)
+            acts = []
+            for _ in range(ticks):
+                acts.append(sess.poll().actions)
+            out.append((sess, np.stack(acts)))
+        (off, a_off), (on, a_on) = out
+        assert on.stats.n_resubmitted == 0 and on.stats.n_gave_up == 0
+        np.testing.assert_array_equal(a_off, a_on)
+        for ro, rn in zip(off.requests(), on.requests()):
+            assert (ro.status, ro.finish_s) == (rn.status, rn.finish_s)
+
+
+# ---------------------------------------------------------------------------
+# drain liveness guard
+# ---------------------------------------------------------------------------
+
+class TestDrainLiveness:
+    def test_max_idle_raises_diagnostic(self):
+        """Every completion silently dropped + no watchdog: drain must
+        fail fast with a diagnostic naming the wedged state, not wait
+        forever."""
+        prov = MockProvider(dt_ms=25.0,
+                            faults=FaultSchedule(seed=1, drop_frac=1.0))
+        sess = ClientSession(prov, final_adrr_olc(), SessionConfig(),
+                             clock="virtual")
+        for r in _scenario_requests("balanced", 4, 2000, seed=0):
+            sess.submit(r)
+        with pytest.raises(RuntimeError) as ei:
+            sess.drain(max_idle_ms=2_000.0)
+        msg = str(ei.value)
+        assert "no progress" in msg
+        assert "live slots" in msg
+        assert "inflight" in msg
+        assert "rid=" in msg
+
+    def test_max_idle_not_triggered_on_healthy_drain(self):
+        sess = ClientSession(MockProvider(dt_ms=25.0), final_adrr_olc(),
+                             SessionConfig(), clock="virtual")
+        for r in _scenario_requests("balanced", 8, 2000, seed=0):
+            sess.submit(r)
+        out = sess.drain(max_polls=4000, max_idle_ms=60_000.0)
+        assert all(r.status == "completed" for r in out)
